@@ -1,0 +1,83 @@
+"""Shared benchmark scaffolding.
+
+Every benchmark module exposes ``run(fast=True) -> list[dict]`` with keys
+``name`` (slash-separated id), ``us_per_call`` (wall-clock microseconds
+per measured unit on THIS host) and ``derived`` (the figure/table value:
+recall, tokens/s, bytes, ...).  ``run.py`` prints the combined CSV.
+
+Engine benchmarks measure REAL routing/prediction on a small Mixtral-
+family model (the container cannot hold 8x7B); timing-model benchmarks
+replay those traces on the full-size config with the calibrated edge
+profile.  This mirrors DESIGN.md §9's honesty notes.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Callable, Dict, List
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.models import init_params
+
+ARTIFACTS = os.path.join(os.path.dirname(__file__), "artifacts")
+
+# The small but real Mixtral-family model every engine benchmark shares.
+BENCH_MODEL = dict(num_layers=6, d_model=128, num_experts=8,
+                   d_expert=256, vocab_size=512)
+
+
+def bench_cfg(**overrides):
+    kw = dict(BENCH_MODEL)
+    kw.update(overrides)
+    return get_config("mixtral-8x7b").reduced(**kw)
+
+
+_param_cache: Dict = {}
+
+
+def bench_model(**overrides):
+    key = tuple(sorted(overrides.items()))
+    if key not in _param_cache:
+        cfg = bench_cfg(**overrides)
+        _param_cache[key] = (cfg, init_params(cfg, jax.random.PRNGKey(0)))
+    return _param_cache[key]
+
+
+def bench_prompts(cfg, q: int = 2, length: int = 16):
+    k = jax.random.PRNGKey(123)
+    return [{"tokens": jax.random.randint(jax.random.fold_in(k, i),
+                                          (1, length), 0, cfg.vocab_size)}
+            for i in range(q)]
+
+
+def timed(fn: Callable, *args, **kw):
+    t0 = time.time()
+    out = fn(*args, **kw)
+    return out, (time.time() - t0) * 1e6
+
+
+def save_artifact(name: str, obj) -> str:
+    os.makedirs(ARTIFACTS, exist_ok=True)
+    path = os.path.join(ARTIFACTS, name)
+    with open(path, "w") as f:
+        json.dump(obj, f, indent=1, default=float)
+    return path
+
+
+def load_artifact(name: str):
+    """Previously-measured artifact, or None.  Engine measurements are
+    expensive on this 1-core container, so benchmark modules reuse their
+    artifacts when present (delete benchmarks/artifacts/ to re-measure)."""
+    path = os.path.join(ARTIFACTS, name)
+    if os.path.exists(path):
+        with open(path) as f:
+            return json.load(f)
+    return None
+
+
+def row(name: str, us: float, derived) -> dict:
+    return {"name": name, "us_per_call": round(us, 1), "derived": derived}

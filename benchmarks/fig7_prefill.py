@@ -1,0 +1,21 @@
+"""Fig. 7 — prefill mini-batch pipelining: TTFT vs number of mini-batches
+(LAN transfer overlaps batched expert GEMMs)."""
+from __future__ import annotations
+
+from repro.configs import get_config
+from repro.core import RTX3090_EDGE, simulate_prefill_odmoe
+from .common import row, save_artifact
+
+
+def run(fast: bool = True):
+    full = get_config("mixtral-8x7b")
+    rows, out = [], {}
+    for prompt_len in (128, 512):
+        for mb in (1, 2, 4, 8):
+            t = simulate_prefill_odmoe(full, RTX3090_EDGE, prompt_len,
+                                       n_minibatches=mb)
+            out[f"len{prompt_len}/mb{mb}"] = t * 1e3
+            rows.append(row(f"fig7/len{prompt_len}/mb{mb}", 0.0,
+                            round(t * 1e3, 1)))
+    save_artifact("fig7_prefill.json", out)
+    return rows

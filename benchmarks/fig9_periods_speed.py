@@ -1,0 +1,47 @@
+"""Fig. 9/10 — decoding speed vs alignment periods (late-departure
+trade-off), on RTX3090 workers and the weaker RTX3080 variant.
+
+Recall per period comes from the fig6 measurements; the timing model
+charges the alignment payload to the shadow's departure each aligned
+iteration.  Paper finding: on the 3090 testbed T1_KV1 wins (accuracy
+dominates); weaker workers shift the optimum toward rarer KV alignment.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.configs import get_config
+from repro.core import (AlignmentPolicy, GroupSchedule, RTX3090_EDGE,
+                        simulate_odmoe, synthetic_trace)
+from . import fig6_periods_recall
+from .common import row, save_artifact
+
+RTX3080_EDGE = dataclasses.replace(RTX3090_EDGE, name="rtx3080-edge",
+                                   eff_hbm_gbps=190.0, pcie_gbps=24.0)
+
+
+def run(fast: bool = True):
+    grid_rows = fig6_periods_recall.run(fast)
+    recall_by_label = {r["name"].split("/")[-1]: r["derived"]
+                       for r in grid_rows}
+    full = get_config("mixtral-8x7b")
+    sched = GroupSchedule(8, 2)
+    rows, out = [], {}
+    for profile in (RTX3090_EDGE, RTX3080_EDGE):
+        for label, recall in recall_by_label.items():
+            tp = int(label.split("_")[0][1:].replace("off", "0") or 0)
+            kp = int(label.split("KV")[1].replace("off", "0") or 0)
+            policy = AlignmentPolicy(tp, kp)
+            tr = synthetic_trace(full, 96, recall=recall)
+            for rec in tr.records:
+                rec.aligned_token = policy.align_token_at(rec.index)
+                rec.aligned_kv = policy.align_kv_at(rec.index)
+            t = simulate_odmoe(full, tr, sched, profile,
+                               shadow_scheme="int8")
+            out[f"{profile.name}/{label}"] = t.tokens_per_s
+            rows.append(row(f"fig9/{profile.name}/{label}", 0.0,
+                            round(t.tokens_per_s, 3)))
+    save_artifact("fig9_period_speed.json", out)
+    return rows

@@ -1,0 +1,79 @@
+"""Generate the data-driven sections of EXPERIMENTS.md from artifacts.
+
+    PYTHONPATH=src python -m benchmarks.report > /tmp/report_sections.md
+
+Reads benchmarks/artifacts/*.json + dryrun JSONLs and prints:
+  §Dry-run      table (per arch x shape x mesh: ok, flops, colls, memory)
+  §Roofline     table (three terms, dominant, useful ratio)
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+from .common import ARTIFACTS
+from .roofline import roofline_row, markdown_table, _fmt
+
+
+def _load_jsonl(path):
+    if not os.path.exists(path):
+        return []
+    return [json.loads(l) for l in open(path)]
+
+
+def gb(x):
+    return "-" if x is None else f"{x/2**30:.2f}"
+
+
+def dryrun_section(paths):
+    rows = []
+    for p in paths:
+        rows += _load_jsonl(p)
+    out = ["### §Dry-run", "",
+           "| arch | shape | mesh | kind | lower+compile s | flops/dev "
+           "(raw HLO*) | collective GB/dev | args GB/dev | temp GB/dev |",
+           "|---|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        if not r.get("ok"):
+            out.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                       f"FAILED | - | - | - | - | - |")
+            continue
+        mem = r.get("memory_analysis", {})
+        coll = r["collective_bytes_per_device"]["total"]
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | {r['kind']} "
+            f"| {r['lower_s']}+{r['compile_s']} "
+            f"| {r['flops_per_device']:.2e} "
+            f"| {coll/2**30:.3f} "
+            f"| {gb(mem.get('argument_bytes'))} "
+            f"| {gb(mem.get('temp_bytes'))} |")
+    out.append("")
+    out.append("*raw HLO flops count every `while` body once "
+               "(tests/test_hlo_analysis.py); the roofline uses analytic "
+               "terms + trip-count-corrected collectives.")
+    return "\n".join(out)
+
+
+def roofline_section(path):
+    rows = []
+    for dry in _load_jsonl(path):
+        if dry.get("ok") and dry["mesh"] == "16x16":
+            rows.append(roofline_row(dry))
+    return "### §Roofline (single pod, 256 chips, v5e constants)\n\n" \
+        + markdown_table(rows)
+
+
+def main():
+    single = os.path.join(ARTIFACTS, "dryrun_single.jsonl")
+    candidates = [single] + [
+        os.path.join(ARTIFACTS, n)
+        for n in ("dryrun_multi.jsonl", "dryrun_multi_baseline.jsonl",
+                  "dryrun_multi_optimized_spot.jsonl")]
+    print(dryrun_section([p for p in candidates if os.path.exists(p)]))
+    print()
+    print(roofline_section(single))
+
+
+if __name__ == "__main__":
+    main()

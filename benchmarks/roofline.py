@@ -1,0 +1,205 @@
+"""Roofline analysis (deliverable g): three terms per (arch x shape).
+
+    compute   = FLOPs / (chips * 197 TFLOP/s bf16)
+    memory    = HBM bytes / (chips * 819 GB/s)
+    collective= wire bytes / (chips * 50 GB/s ICI)
+
+Sources:
+  * collective bytes — dry-run HLO, trip-count corrected
+    (launch/hlo_analysis.py); per-device, so divide by link bw only.
+  * FLOPs / HBM bytes — ANALYTIC per-op accounting below.  XLA's
+    ``cost_analysis()`` counts every ``while`` body once (measured; see
+    tests/test_hlo_analysis.py), which undercounts our scanned layers by
+    the repeat factor, so the raw numbers are reported alongside but the
+    roofline uses the analytic terms.
+  * MODEL_FLOPS = 6·N_active·D (train) / 2·N_active (per decode token);
+    ratio MODEL/compiled-estimate exposes remat + dispatch + full-
+    rectangle-attention waste.
+
+Usage: python -m benchmarks.roofline --dryrun artifacts/dryrun.jsonl
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import os
+from typing import Dict, Optional
+
+from repro.configs import get_config
+from repro.models.config import ATTN, DENSE_FF, MOE_FF, INPUT_SHAPES
+from repro.launch.specs import shape_config
+
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # B/s / chip
+LINK_BW = 50e9               # B/s / link
+CHIPS = 256                  # single-pod roofline (per spec)
+
+
+# ------------------------------------------------------------- analytics
+def fwd_flops_per_token(cfg, ctx: int, causal_factor: float = 1.0) -> Dict[str, float]:
+    """Forward matmul FLOPs per token by component, context length ctx.
+
+    causal_factor=1.0 reflects our blockwise attention computing the full
+    rectangle (masked blocks are not skipped — a recorded §Perf item).
+    """
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    h, kv = cfg.num_heads, cfg.num_kv_heads
+    comp = {"attn_proj": 0.0, "attn_score": 0.0, "ff": 0.0, "moe": 0.0,
+            "mamba": 0.0, "head": 2 * d * cfg.vocab_size}
+    for mixer, ff in cfg.layer_kinds():
+        if mixer == ATTN:
+            comp["attn_proj"] += 2 * d * (2 * h * hd + 2 * kv * hd)
+            comp["attn_score"] += 4 * h * hd * ctx * causal_factor
+        else:
+            di, ns, nh = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+            q = cfg.ssm_chunk
+            comp["mamba"] += 2 * d * (2 * di + 2 * ns + nh)   # projections
+            comp["mamba"] += 2 * q * (ns + di)                 # intra-chunk
+            comp["mamba"] += 4 * di * ns                       # states+inter
+            comp["mamba"] += 2 * di * d                        # out_proj
+        if ff == DENSE_FF:
+            comp["ff"] += 2 * 3 * d * cfg.d_ff
+        elif ff == MOE_FF:
+            comp["moe"] += (2 * 3 * d * cfg.d_expert_resolved
+                            * cfg.top_k * cfg.capacity_factor)
+    if cfg.is_encoder_decoder:
+        # encoder layers (bidirectional attention + dense FF)
+        comp["attn_proj"] += cfg.num_encoder_layers * 2 * d * (
+            2 * h * hd + 2 * kv * hd)
+        comp["attn_score"] += cfg.num_encoder_layers * 4 * h * hd * ctx
+        comp["ff"] += cfg.num_encoder_layers * 2 * 3 * d * cfg.d_ff
+        # decoder cross-attention reads the encoder memory
+        comp["attn_score"] += cfg.num_layers * 4 * h * hd * ctx
+    return comp
+
+
+def analytic_terms(arch: str, shape_name: str) -> Dict[str, float]:
+    shape = INPUT_SHAPES[shape_name]
+    cfg = shape_config(get_config(arch), shape)
+    b, t = shape.global_batch, shape.seq_len
+    wb = 2                                     # bf16 weights
+    n_active = cfg.active_param_count()
+    if shape.kind == "train":
+        comp = fwd_flops_per_token(cfg, t)
+        fwd = sum(comp.values())
+        tokens = b * t
+        flops = fwd * tokens * 4.0             # fwd + bwd(2x) + remat(1x)
+        model_flops = 6.0 * n_active * tokens
+        # HBM: weights fwd+bwd+remat reads + grad w + adam (fp32 m,v rw + p rw)
+        param_traffic = cfg.param_count() * (wb * 4 + 4 * 6)
+        act_traffic = tokens * cfg.d_model * cfg.num_layers * wb * 4
+        hbm = param_traffic + act_traffic
+    elif shape.kind == "prefill":
+        comp = fwd_flops_per_token(cfg, t)
+        fwd = sum(comp.values())
+        tokens = b * t
+        flops = fwd * tokens
+        model_flops = 2.0 * n_active * tokens
+        cache_w = (2 * cfg.num_kv_heads * cfg.resolved_head_dim * wb
+                   * sum(1 for m, _ in cfg.layer_kinds() if m == ATTN))
+        hbm = cfg.param_count() * wb + tokens * (
+            cache_w + cfg.d_model * cfg.num_layers * wb * 2)
+    else:  # decode: ONE token against ctx-length cache
+        ctx = min(t, cfg.sliding_window) if cfg.sliding_window else t
+        comp = fwd_flops_per_token(cfg, ctx)
+        fwd = sum(comp.values())
+        tokens = b                              # one step, b sequences
+        flops = fwd * tokens
+        model_flops = 2.0 * n_active * tokens
+        n_attn = sum(1 for m, _ in cfg.layer_kinds() if m == ATTN)
+        cache_traffic = (b * ctx * 2 * cfg.num_kv_heads
+                         * cfg.resolved_head_dim * wb * n_attn)
+        if cfg.is_encoder_decoder:
+            cache_traffic *= 2                  # + cross memory reads
+        hbm = n_active * wb + cache_traffic
+    return {"flops_global": flops, "model_flops": model_flops,
+            "hbm_bytes_global": hbm, "components": comp,
+            "tokens": tokens}
+
+
+# ------------------------------------------------------------- reporting
+def roofline_row(dry: dict) -> Dict:
+    arch, shape = dry["arch"], dry["shape"]
+    a = analytic_terms(arch, shape)
+    flops_dev = a["flops_global"] / CHIPS
+    hbm_dev = a["hbm_bytes_global"] / CHIPS
+    coll_dev = dry["collective_bytes_per_device"]["total"]
+    t_compute = flops_dev / PEAK_FLOPS
+    t_memory = hbm_dev / HBM_BW
+    t_coll = coll_dev / LINK_BW
+    terms = {"compute": t_compute, "memory": t_memory,
+             "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+    return {
+        "arch": arch, "shape": shape, "mesh": dry["mesh"],
+        "t_compute_s": t_compute, "t_memory_s": t_memory,
+        "t_collective_s": t_coll, "dominant": dominant,
+        "model_flops": a["model_flops"],
+        "flops_estimate": a["flops_global"],
+        "useful_ratio": a["model_flops"] / a["flops_global"],
+        "hlo_flops_per_device_raw": dry.get("flops_per_device"),
+        "collective_bytes_per_device": coll_dev,
+        "collective_counts": dry["collective_bytes_per_device"].get(
+            "counts"),
+    }
+
+
+def _fmt(x: float) -> str:
+    if x == 0:
+        return "0"
+    exp = int(math.floor(math.log10(abs(x))))
+    if -3 <= exp <= 2:
+        return f"{x:.4f}"
+    return f"{x:.2e}"
+
+
+def markdown_table(rows) -> str:
+    hdr = ("| arch | shape | mesh | compute s | memory s | collective s "
+           "| dominant | useful ratio |\n|---|---|---|---|---|---|---|---|")
+    lines = [hdr]
+    for r in rows:
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {_fmt(r['t_compute_s'])} | {_fmt(r['t_memory_s'])} "
+            f"| {_fmt(r['t_collective_s'])} | **{r['dominant']}** "
+            f"| {r['useful_ratio']:.2f} |")
+    return "\n".join(lines)
+
+
+def run(fast: bool = True, dryrun_path: Optional[str] = None):
+    """Benchmark-harness entry: report rooflines for available dry-runs."""
+    from .common import ARTIFACTS, row, save_artifact
+    path = dryrun_path or os.path.join(ARTIFACTS, "dryrun_single.jsonl")
+    rows = []
+    if not os.path.exists(path):
+        return [row("roofline/missing-dryrun", 0.0, path)]
+    out = []
+    with open(path) as f:
+        for line in f:
+            dry = json.loads(line)
+            if not dry.get("ok"):
+                continue
+            if dry["mesh"] != "16x16":
+                continue
+            r = roofline_row(dry)
+            out.append(r)
+            rows.append(row(
+                f"roofline/{r['arch']}/{r['shape']}", 0.0,
+                f"{r['dominant']}:{_fmt(max(r['t_compute_s'], r['t_memory_s'], r['t_collective_s']))}"))
+    save_artifact("roofline.json", out)
+    with open(os.path.join(ARTIFACTS, "roofline.md"), "w") as f:
+        f.write(markdown_table(out))
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dryrun", default=None)
+    args = ap.parse_args()
+    for r in run(fast=False, dryrun_path=args.dryrun):
+        print(f"{r['name']},{r['us_per_call']},{r['derived']}")
+
+
+if __name__ == "__main__":
+    main()

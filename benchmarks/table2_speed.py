@@ -1,0 +1,94 @@
+"""Table 2 — end-to-end comparison: TTFT, decoding/output throughput and
+GPU memory, OD-MoE vs baselines, on the calibrated edge profile.
+
+All systems replay the SAME routing trace (Mixtral-8x7B structure).
+Baseline modeling knobs (cache policy/size, quantization factor) follow
+each system's published configuration:
+  * Transformers    — fully cached, full precision (8-GPU reference)
+  * llama.cpp       — CPU DRAM streaming
+  * MixtralOffload  — LRU cache, fp16-quantized experts (HQQ-ish 0.5x)
+  * MoE-Infinity    — LFU cache, full precision
+  * HOBBIT          — LRU, mixed precision (0.5x avg), bigger cache
+  * AdapMoE         — LRU + quantization 0.25x (their NF4-ish path)
+  * OD-MoE          — cacheless, measured int8-SEP recall, T1_KV1
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.configs import get_config
+from repro.core import (AlignmentPolicy, GroupSchedule, RTX3090_EDGE,
+                        simulate_cached, simulate_cpu, simulate_odmoe,
+                        simulate_offload_cache, simulate_prefill_cached,
+                        simulate_prefill_odmoe, synthetic_trace)
+from .common import bench_model, bench_prompts, row, save_artifact, timed
+from .fig8_ablation import measure_recalls
+
+CONFIGS = [(16, 64), (16, 256), (128, 64), (128, 256)]
+
+BASELINES = {
+    "mixtral_offloading": dict(policy="lru", cache_experts=100,
+                               quant_factor=0.5),
+    "moe_infinity": dict(policy="lfu", cache_experts=64, quant_factor=1.0),
+    "hobbit": dict(policy="lru", cache_experts=128, quant_factor=0.5),
+    "adapmoe": dict(policy="lru", cache_experts=100, quant_factor=0.25),
+}
+
+# paper Table 2 part (ii), GB
+PAPER_MEMORY_GB = {"mixtral_offloading": 11, "moe_infinity": 21.5,
+                   "hobbit": 22, "adapmoe": 8, "transformers": 180,
+                   "llama_cpp": 0, "odmoe": 60}
+
+
+def run(fast: bool = True):
+    full = get_config("mixtral-8x7b")
+    prof = RTX3090_EDGE
+    sched = GroupSchedule(8, 2)
+    recalls, _ = measure_recalls(fast)
+    sep_recall = recalls["case1_token+kv"]
+    rows, table = [], {}
+    for in_len, out_len in (CONFIGS if not fast else CONFIGS[:2]):
+        n = min(out_len, 128) if fast else out_len
+        tr = synthetic_trace(full, n, recall=sep_recall, seed=in_len)
+        odmoe = simulate_odmoe(full, tr, sched, prof, shadow_scheme="int8")
+        ttft_od = simulate_prefill_odmoe(full, prof, in_len)
+        cached = simulate_cached(full, prof)
+        ttft_cached = simulate_prefill_cached(full, prof, in_len)
+        cpu = simulate_cpu(full, prof)
+        cfg_rows = {
+            "transformers": (ttft_cached, cached),
+            "llama_cpp": (ttft_cached * 6, cpu),
+            "odmoe": (ttft_od, odmoe.tokens_per_s),
+        }
+        for name, kw in BASELINES.items():
+            r = simulate_offload_cache(full, tr, prof, **kw)
+            # offloaders prefill by streaming all (quantized) experts once
+            ttft = simulate_prefill_cached(full, prof, in_len) \
+                / kw["quant_factor"] * 2
+            cfg_rows[name] = (ttft, r["tokens_per_s"])
+        for name, (ttft, dec) in cfg_rows.items():
+            out_tps = out_len / (ttft + out_len / dec)
+            key = f"({in_len},{out_len})/{name}"
+            table[key] = {"ttft_ms": ttft * 1e3, "decode_tps": dec,
+                          "output_tps": out_tps}
+            rows.append(row(f"table2/{key}", 0.0, round(dec, 3)))
+    # memory part (ii): OD-MoE analytic, full precision.  The edge
+    # deployment ships REAL experts only (padded rows are a TPU-sharding
+    # artifact), so subtract the padded-expert block entirely.
+    wb = 4
+    expert_bytes = 3 * full.d_model * full.d_expert_resolved * wb
+    n_moe = full.num_layers
+    total = (full.param_count()
+             - n_moe * (full.num_experts_padded - full.num_experts)
+             * 3 * full.d_model * full.d_expert_resolved) * wb
+    main = total - n_moe * full.num_experts * expert_bytes
+    shadow = total * 0.25             # int8 shadow
+    odmoe_mem = main + shadow + 8 * expert_bytes
+    table["memory_gb"] = {"odmoe_modeled": odmoe_mem / 1e9,
+                          "fully_cached_modeled": total / 1e9,
+                          "ratio": odmoe_mem / total,
+                          "paper_reported": PAPER_MEMORY_GB}
+    rows.append(row("table2/memory_ratio", 0.0,
+                    round(odmoe_mem / total, 3)))
+    save_artifact("table2_speed.json", table)
+    return rows

@@ -1,0 +1,24 @@
+"""Multi-pod dry-run example: lower + compile two (arch x shape) combos
+on the production meshes and print their roofline raw terms.
+
+    PYTHONPATH=src python examples/distributed_dryrun.py
+
+NOTE: must run as its own process — dryrun sets
+XLA_FLAGS=--xla_force_host_platform_device_count=512 before importing jax.
+"""
+from repro.launch.dryrun import dryrun_one  # sets XLA_FLAGS first
+
+
+def main():
+    for arch, shape, multi in [("mixtral-8x7b", "decode_32k", False),
+                               ("qwen3-moe-30b-a3b", "decode_32k", True)]:
+        r = dryrun_one(arch, shape, multi_pod=multi)
+        coll = r["collective_bytes_per_device"]
+        print(f"\n{arch} x {shape} on {r['mesh']}:")
+        print(f"  flops/device          {r['flops_per_device']:.3e}")
+        print(f"  collective B/device   {coll['total']:.3e}")
+        print(f"  memory_analysis       {r['memory_analysis']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,57 @@
+"""Quickstart: the public API in ~60 lines.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+1. build a reduced Mixtral-style MoE config
+2. one training step (loss + AdamW)
+3. greedy generation (prefill + decode)
+4. OD-MoE cacheless serving with the SEP shadow predictor
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.core import AlignmentPolicy, ODMoEEngine
+from repro.data import SyntheticConfig, batch_iterator
+from repro.models import greedy_generate, init_params
+from repro.optim import AdamWConfig, init_opt_state
+from repro.launch.steps import make_train_step
+
+
+def main():
+    cfg = get_config("mixtral-8x7b").reduced()
+    print(f"model: {cfg.name} — {cfg.param_count()/1e6:.1f}M params, "
+          f"{cfg.num_experts} experts top-{cfg.top_k}")
+    key = jax.random.PRNGKey(0)
+    params = init_params(cfg, key)
+
+    # ---- 1 training step
+    data = SyntheticConfig(vocab_size=cfg.vocab_size, seq_len=64,
+                           batch_size=2)
+    batch = {k: jnp.asarray(v) for k, v in next(batch_iterator(data)).items()}
+    step_fn = jax.jit(make_train_step(cfg, AdamWConfig(lr=1e-3),
+                                      moe_method="dense", remat=False))
+    opt_state = init_opt_state(params)
+    params2, opt_state, metrics = step_fn(params, opt_state, batch)
+    print(f"train step: loss={float(metrics['loss']):.4f}")
+
+    # ---- greedy generation
+    prompt = {"tokens": batch["tokens"][:1, :16]}
+    out = greedy_generate(cfg, params, prompt, 8)
+    print(f"generated tokens: {np.asarray(out)[0]}")
+
+    # ---- OD-MoE cacheless serving
+    eng = ODMoEEngine(cfg, params, n_workers=8, predictor="sep",
+                      shadow_scheme="int8")
+    toks, trace = eng.generate(prompt, 8, AlignmentPolicy(1, 1))
+    assert np.array_equal(np.asarray(toks), np.asarray(out)), \
+        "OD-MoE must match the dense reference exactly"
+    print(f"OD-MoE serving: matches reference; "
+          f"SEP recall={trace.recall():.3f}, "
+          f"loads={eng.slots.stats['loads']} "
+          f"(reloads={eng.slots.stats['reloads']})")
+
+
+if __name__ == "__main__":
+    main()

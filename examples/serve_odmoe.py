@@ -1,0 +1,63 @@
+"""OD-MoE serving showcase: cacheless decode with every predictor, the
+alignment ablation, and the modeled edge-testbed throughput.
+
+    PYTHONPATH=src python examples/serve_odmoe.py [--tokens 24]
+"""
+import argparse
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.core import (AlignmentPolicy, ODMoEEngine, RTX3090_EDGE,
+                        simulate_cached, simulate_odmoe)
+from repro.models import greedy_generate, init_params
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tokens", type=int, default=24)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_config("mixtral-8x7b").reduced(num_layers=8, d_model=128,
+                                             num_experts=8, d_expert=256)
+    key = jax.random.PRNGKey(args.seed)
+    params = init_params(cfg, key)
+    prompt = {"tokens": jax.random.randint(key, (1, 16), 0, cfg.vocab_size)}
+    ref = np.asarray(greedy_generate(cfg, params, prompt, args.tokens))
+    cached = simulate_cached(cfg, RTX3090_EDGE)
+    print(f"{cfg.name}: E={cfg.num_experts} top-{cfg.top_k}; "
+          f"fully-cached reference {cached:.2f} tok/s (modeled)\n")
+    print(f"{'predictor':<16}{'recall':>8}{'reloads':>9}{'tok/s':>8}"
+          f"{'exact':>7}")
+    for pred, scheme in [("sep", "fp16"), ("sep", "int8"), ("sep", "nf4"),
+                         ("nextgate", None), ("multigate", None),
+                         ("freq", None), ("random", None), ("none", None)]:
+        eng = ODMoEEngine(cfg, params, n_workers=8, predictor=pred,
+                          shadow_scheme=scheme or "int8")
+        toks, trace = eng.generate(prompt, args.tokens,
+                                   AlignmentPolicy(1, 1))
+        exact = bool(np.array_equal(np.asarray(toks), ref))
+        t = simulate_odmoe(cfg, trace, eng.sched, RTX3090_EDGE,
+                           shadow_scheme=scheme or "int8", predictor=pred)
+        name = pred + (f"-{scheme}" if scheme else "")
+        print(f"{name:<16}{trace.recall():>8.3f}"
+              f"{trace.reload_fraction():>9.3f}{t.tokens_per_s:>8.2f}"
+              f"{str(exact):>7}")
+        assert exact
+
+    print("\nalignment ablation (sep-int8, 24 tokens):")
+    for tp, kp, label in [(1, 1, "token+KV every iter"),
+                          (1, 0, "token only"),
+                          (0, 1, "KV only"),
+                          (0, 0, "no alignment")]:
+        eng = ODMoEEngine(cfg, params, n_workers=8, predictor="sep",
+                          shadow_scheme="int8")
+        _, trace = eng.generate(prompt, args.tokens,
+                                AlignmentPolicy(tp, kp))
+        print(f"  {label:<22} recall={trace.recall():.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,70 @@
+"""Flat-pytree .npz checkpoints (no orbax offline).
+
+Leaves are addressed by their tree path string ("layers/0/mixer/wq"),
+so checkpoints survive refactors that preserve structure and fail loudly
+on mismatch.  Step/optimizer state ride along in the same archive.
+"""
+from __future__ import annotations
+
+import os
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def tree_to_flat_dict(tree) -> Dict[str, np.ndarray]:
+    out = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        out[_path_str(path)] = np.asarray(leaf)
+    return out
+
+
+def save_checkpoint(path: str, params, opt_state: Optional[dict] = None,
+                    step: int = 0, extra: Optional[dict] = None) -> None:
+    flat = {f"params/{k}": v for k, v in tree_to_flat_dict(params).items()}
+    if opt_state is not None:
+        flat.update({f"opt/{k}": v
+                     for k, v in tree_to_flat_dict(opt_state).items()})
+    flat["meta/step"] = np.asarray(step)
+    for k, v in (extra or {}).items():
+        flat[f"extra/{k}"] = np.asarray(v)
+    tmp = path + ".tmp"
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    np.savez(tmp, **flat)
+    os.replace(tmp + ".npz" if not tmp.endswith(".npz") else tmp, path)
+
+
+def load_checkpoint(path: str, params_template,
+                    opt_template: Optional[dict] = None
+                    ) -> Tuple[Any, Optional[dict], int]:
+    """Restore into the SAME structure as the given templates."""
+    with np.load(path) as z:
+        def restore(template, prefix):
+            flat = tree_to_flat_dict(template)
+            leaves = {}
+            for k in flat:
+                key = f"{prefix}/{k}"
+                if key not in z:
+                    raise KeyError(f"checkpoint missing {key}")
+                leaves[k] = z[key]
+            paths, treedef = jax.tree_util.tree_flatten_with_path(template)
+            vals = [leaves[_path_str(p)] for p, _ in paths]
+            return jax.tree_util.tree_unflatten(treedef, vals)
+
+        params = restore(params_template, "params")
+        opt = restore(opt_template, "opt") if opt_template is not None else None
+        step = int(z["meta/step"])
+    return params, opt, step

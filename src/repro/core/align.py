@@ -1,0 +1,46 @@
+"""Token / KV-cache alignment policy for the SEP shadow model (§3.2).
+
+Quantization error accumulates autoregressively through two channels —
+divergent generated tokens and drifting KV state — so the shadow model is
+periodically overwritten with the main model's token and/or KV cache.
+Periods are independent (the paper's ``T_i_KV_j`` grid, Fig. 6/9/10).
+Alignment costs a "late departure": the shadow cannot start iteration n
+until the alignment data lands, which the timing model charges as a delay
+before the first shadow layer.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+from repro.models.config import ModelConfig
+
+
+@dataclass(frozen=True)
+class AlignmentPolicy:
+    token_period: int = 1      # 0 = never align tokens
+    kv_period: int = 1         # 0 = never align KV
+    def align_token_at(self, iteration: int) -> bool:
+        return self.token_period > 0 and iteration % self.token_period == 0
+
+    def align_kv_at(self, iteration: int) -> bool:
+        return self.kv_period > 0 and iteration % self.kv_period == 0
+
+    def label(self) -> str:
+        t = self.token_period if self.token_period else "off"
+        k = self.kv_period if self.kv_period else "off"
+        return f"T{t}_KV{k}"
+
+
+def kv_bytes_per_token(cfg: ModelConfig, dtype_bytes: int = 4) -> int:
+    """Alignment payload: one token's K+V across all layers/heads.
+
+    For Mixtral-8x7B at fp32 this is the paper's ~8 KB/token/layer
+    (2 · kv_heads · head_dim · 4 B = 8 KB) → 256 KB per alignment run.
+    """
+    per_layer = 2 * cfg.num_kv_heads * cfg.resolved_head_dim * dtype_bytes
+    n_attn = sum(1 for (mixer, _) in cfg.layer_kinds() if mixer == "attn")
+    return per_layer * n_attn
+
+
+def token_bytes() -> int:
+    return 4  # a single token id — "negligible" per the paper

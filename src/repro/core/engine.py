@@ -1,0 +1,294 @@
+"""ODMoEEngine — cacheless on-demand MoE decoding (the paper's system).
+
+The engine runs the *full-precision* model layer-by-layer exactly as the
+main node does, while a quantized SEP shadow model decodes in lockstep
+and supplies multi-layer-lookahead expert predictions.  Expert weights
+live in the host ``ExpertStore``; each worker owns one device slot into
+which predicted experts are loaded just-in-time and from which they are
+promptly evicted after their layer computes (no cache).  Mispredictions
+trigger reload events, exactly like the paper's fallback path.
+
+Everything the timing model needs — who loaded what and when, which
+predictions missed, when alignment delayed the shadow — is captured in
+the returned ``Trace``.
+
+Correctness invariant (tested): greedy tokens produced by the engine are
+bit-identical to the reference ``greedy_generate`` on the same weights,
+because expert compute consumes the physically-loaded slot contents and
+mispredicted experts are always reloaded before use.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from functools import partial
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import prefill
+from repro.models.blocks import block_decode
+from repro.models.config import MOE_FF, NO_FF, ModelConfig
+from repro.models.layers import apply_norm, embed
+from repro.models.moe import route
+from repro.models.transformer import layer_params, logits_from_hidden
+from .align import AlignmentPolicy
+from .predictor import (FrequencyPredictor, GateExtrapolator, RandomPredictor,
+                        SEPShadow, moe_layer_indices, recall_counts)
+from .schedule import GroupSchedule
+from .store import ExpertStore, WorkerSlots
+
+
+@dataclass
+class LayerRecord:
+    layer: int
+    moe_index: int
+    group: int
+    predicted: Optional[np.ndarray]      # (B,k) or None
+    true: np.ndarray                     # (B,k)
+    correct: int                         # sum_b |pred_b ∩ true_b|
+    reloads: int
+    assignments: List[Tuple[int, int]]   # (expert, worker)
+
+
+@dataclass
+class TokenRecord:
+    index: int
+    aligned_token: bool
+    aligned_kv: bool
+    layers: List[LayerRecord] = field(default_factory=list)
+
+
+@dataclass
+class Trace:
+    records: List[TokenRecord] = field(default_factory=list)
+
+    def recall(self) -> float:
+        """Overall recall, Eq. (3)."""
+        num = den = 0
+        for tr in self.records:
+            for lr in tr.layers:
+                num += lr.correct
+                den += lr.true.size
+        return num / den if den else float("nan")
+
+    def recall_per_token(self) -> List[float]:
+        """recall(n), Eq. (2)."""
+        out = []
+        for tr in self.records:
+            num = sum(lr.correct for lr in tr.layers)
+            den = sum(lr.true.size for lr in tr.layers)
+            out.append(num / den if den else float("nan"))
+        return out
+
+    def reload_fraction(self) -> float:
+        loads = reloads = 0
+        for tr in self.records:
+            for lr in tr.layers:
+                reloads += lr.reloads
+                loads += len(lr.assignments)
+        return reloads / loads if loads else 0.0
+
+
+class ODMoEEngine:
+    def __init__(self, cfg: ModelConfig, params, *, n_workers: int = 8,
+                 group_size: int = 0, predictor: str = "sep",
+                 shadow_scheme: str = "int8", lookahead: int = 4,
+                 physical_loading: bool = True, seed: int = 0):
+        if cfg.is_encoder_decoder:
+            raise ValueError("engine drives decoder-only models")
+        self.cfg = cfg
+        self.params = params
+        self.moe_layers = moe_layer_indices(cfg)
+        g = group_size or max(cfg.top_k, 1)
+        if n_workers % g:
+            n_workers = g * max(1, n_workers // g)
+        self.sched = GroupSchedule(n_workers, g)
+        self.store = ExpertStore(cfg, params)
+        self.slots = WorkerSlots(self.store, n_workers,
+                                 physical=physical_loading)
+        self.predictor_kind = predictor
+        self.shadow: Optional[SEPShadow] = None
+        self.fly: Optional[GateExtrapolator] = None
+        self.freq: Optional[FrequencyPredictor] = None
+        self.rand: Optional[RandomPredictor] = None
+        if predictor == "sep":
+            self.shadow = SEPShadow(cfg, params, shadow_scheme)
+        elif predictor in ("nextgate", "multigate"):
+            routers = self.store.router_weights(params)
+            la = 1 if predictor == "nextgate" else lookahead
+            self.fly = GateExtrapolator(cfg, routers, la)
+        elif predictor == "freq":
+            self.freq = FrequencyPredictor(cfg)
+        elif predictor == "random":
+            self.rand = RandomPredictor(cfg, seed)
+        elif predictor != "none":
+            raise ValueError(f"unknown predictor {predictor!r}")
+
+    # -------------------------------------------------------------- caches
+    def _unstack(self, caches):
+        pattern, reps = self.cfg.pattern()
+        out = []
+        for li in range(self.cfg.num_layers):
+            pos, r = li % len(pattern), li // len(pattern)
+            out.append(jax.tree.map(lambda a: a[r], caches[pos]))
+        return out
+
+    def _stack(self, cache_list):
+        pattern, reps = self.cfg.pattern()
+        out = []
+        for pos in range(len(pattern)):
+            per_rep = [cache_list[r * len(pattern) + pos] for r in range(reps)]
+            out.append(jax.tree.map(lambda *xs: jnp.stack(xs), *per_rep))
+        return tuple(out)
+
+    # ------------------------------------------------------------ generate
+    def generate(self, batch, num_tokens: int,
+                 policy: AlignmentPolicy = AlignmentPolicy(1, 1)):
+        cfg = self.cfg
+        prompt_len = batch["tokens"].shape[1]
+        max_cache_len = prompt_len + num_tokens + 2
+        logits, state = prefill(cfg, self.params, batch, max_cache_len,
+                                moe_method="dense")
+        main_token = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        cache_list = self._unstack(state["caches"])
+        pos = state["pos"]
+        if self.shadow is not None:
+            self.shadow.reset(batch, max_cache_len)
+        tokens_out = [main_token]
+        trace = Trace()
+        for n in range(1, num_tokens):
+            preds: Dict[int, np.ndarray] = {}
+            at = ak = False
+            if self.shadow is not None:
+                at = policy.align_token_at(n)
+                ak = policy.align_kv_at(n)
+                if ak:
+                    self.shadow.align_kv(
+                        {"caches": self._stack(cache_list), "pos": pos})
+                shadow_in = main_token if at else self.shadow.token
+                preds = self.shadow.step(shadow_in)
+            rec = TokenRecord(index=n, aligned_token=at, aligned_kv=ak)
+            main_token, cache_list, pos = self._decode_token(
+                main_token, cache_list, pos, preds, n, rec)
+            tokens_out.append(main_token)
+            trace.records.append(rec)
+        return jnp.stack(tokens_out, axis=1), trace
+
+    # ---------------------------------------------------------- one token
+    def _decode_token(self, token, cache_list, pos, preds, token_idx,
+                      rec: TokenRecord):
+        cfg = self.cfg
+        x = embed(token[:, None], self.params["embed"])
+        pending: Dict[int, np.ndarray] = dict(preds)
+        moe_i = -1
+        for li, kinds in enumerate(cfg.layer_kinds()):
+            lp = layer_params(cfg, self.params, li)
+            if kinds[1] != MOE_FF:
+                x, cache_list[li], _ = block_decode(
+                    cfg, lp, kinds, x, cache_list[li], pos)
+                continue
+            moe_i += 1
+            # mixer + residual (no FFN yet)
+            x, cache_list[li], _ = block_decode(
+                cfg, lp, (kinds[0], NO_FF), x, cache_list[li], pos)
+            h = apply_norm(cfg, x, lp["norm2"])[:, 0]          # router input
+            topk_idx, topk_gate, _ = route(cfg, lp["ff"], h)
+            true = np.asarray(topk_idx)
+            b = true.shape[0]
+            # on-the-fly predictors key off the router input
+            if self.fly is not None:
+                for tgt, p in self.fly.predict_from(li, h).items():
+                    pending[tgt] = p
+            if self.freq is not None:
+                pending[li] = self.freq.predict(li, b)
+            if self.rand is not None:
+                pending[li] = self.rand.predict(li, b)
+            pred = pending.get(li)
+            rec.layers.append(self._serve_layer(
+                token_idx, li, moe_i, pred, true))
+            if self.freq is not None:
+                self.freq.observe(li, true)
+            # expert computation from physically-loaded slots
+            y = self._expert_compute(li, h, true, np.asarray(topk_gate))
+            x = x + y[:, None].astype(x.dtype)
+            # prompt eviction — cacheless rule
+            for w in self.sched.workers_of_group(self.sched.group_of(moe_i)):
+                self.slots.evict(w)
+        logits = logits_from_hidden(cfg, self.params, x)[:, 0]
+        return (jnp.argmax(logits, axis=-1).astype(jnp.int32), cache_list,
+                pos + 1)
+
+    def _serve_layer(self, token_idx, layer, moe_i, pred, true) -> LayerRecord:
+        group = self.sched.group_of(moe_i)
+        # 1) predicted experts were loaded ahead of time
+        if pred is not None:
+            pred_experts = list(dict.fromkeys(int(e) for e in pred.reshape(-1)))
+            for e, w in self.sched.assign(moe_i, pred_experts):
+                self.slots.load(token_idx, layer, e, w, predicted=True)
+        # 2) gate result is ground truth: reload anything missing
+        needed = list(dict.fromkeys(int(e) for e in true.reshape(-1)))
+        reloads = 0
+        assignments = []
+        workers = self.sched.workers_of_group(group)
+        # workers already serving a *correct* prediction must not be evicted
+        claimed = {self.slots.worker_with(layer, e) for e in needed}
+        claimed.discard(None)
+        free = [w for w in workers if w not in claimed]
+        # batch>1 can need more experts than the group holds: spill onto
+        # idle workers of other groups (they are between loads anyway)
+        free += [w for w in range(self.sched.n_workers)
+                 if w not in claimed and w not in workers]
+        for e in needed:
+            w = self.slots.worker_with(layer, e)
+            if w is None:
+                w = free.pop(0) if free else workers[0]
+                self.slots.load(token_idx, layer, e, w, predicted=False)
+                reloads += 1
+            assignments.append((e, w))
+        correct = recall_counts(pred, true) if pred is not None else 0
+        return LayerRecord(layer=layer, moe_index=moe_i, group=group,
+                           predicted=pred, true=true, correct=correct,
+                           reloads=reloads, assignments=assignments)
+
+    def _expert_compute(self, layer, h, true, gates):
+        """Compute the routed expert FFNs from worker-slot weights."""
+        b, d = h.shape
+        y = jnp.zeros((b, d), jnp.float32)
+        for bi in range(b):
+            hb = h[bi].astype(jnp.float32)
+            for j in range(true.shape[1]):
+                e = int(true[bi, j])
+                w = self.slots.worker_with(layer, e)
+                assert w is not None, "expert must be resident"
+                wd = self.slots.slot(w)
+                out = (jax.nn.silu(hb @ wd["w_gate"]) * (hb @ wd["w_up"])
+                       ) @ wd["w_down"]
+                y = y.at[bi].add(float(gates[bi, j]) * out)
+        return y
+
+    # ------------------------------------------------------------- memory
+    def memory_report(self) -> dict:
+        """Bytes by node type — the paper's Table 2 part (ii) quantities."""
+        def nbytes(tree):
+            return sum(x.size * x.dtype.itemsize
+                       for x in jax.tree.leaves(tree))
+        total = nbytes(self.params)
+        n_moe = len(self.moe_layers)
+        expert_total = n_moe * self.cfg.num_experts * self.store.expert_bytes
+        main = total - expert_total
+        shadow = 0
+        if self.shadow is not None:
+            factor = {"fp16": 0.5, "int8": 0.25, "nf4": 0.125}.get(
+                self.shadow.scheme, 1.0)
+            shadow = int(total * factor)
+        return {
+            "main_node_bytes": main,
+            "per_worker_bytes": self.store.expert_bytes,
+            "n_workers": self.sched.n_workers,
+            "shadow_node_bytes": shadow,
+            "total_bytes": main + shadow +
+            self.sched.n_workers * self.store.expert_bytes,
+            "fully_cached_bytes": total,
+        }

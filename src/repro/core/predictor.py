@@ -1,0 +1,157 @@
+"""Expert-activation predictors: SEP (the paper's) + reproduced baselines.
+
+SEP (Scaled Emulative Prediction): a quantized *shadow* copy of the model
+decodes in parallel and its own observed routing decisions — unfolded
+several layers ahead of the full model — are the predictions.  Baselines
+follow §2.3 / Table 1:
+
+  * ``nextgate``  — feed layer l's router input to layer l+1's gate
+                    (Mixtral-Offloading / AdapMoE / DAOP heuristic).
+  * ``multigate`` — same but extrapolating up to 4 layers ahead (HOBBIT).
+  * ``freq``      — historical per-layer expert popularity (EdgeMoE/fMoE).
+  * ``random``    — ablation Case 5 (random prefetch).
+  * ``none``      — ablation Case 6 (no prefetch; load after gating).
+
+Recall is Eq. (2)/(3): correctly predicted experts / (k · L · tokens).
+"""
+from __future__ import annotations
+
+from collections import defaultdict
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import decode_step, prefill
+from repro.models.config import MOE_FF, ModelConfig
+from repro.quant import shadow_params
+
+
+def moe_layer_indices(cfg: ModelConfig) -> List[int]:
+    return [i for i, (_, ff) in enumerate(cfg.layer_kinds()) if ff == MOE_FF]
+
+
+def topk_to_layer_dict(cfg: ModelConfig, topk_tuple) -> Dict[int, np.ndarray]:
+    """Map ``lm_decode`` aux["topk"] (per-pattern-pos, (R,B,k)) to
+    {absolute_layer: (B,k)}."""
+    pattern, reps = cfg.pattern()
+    moe_positions = [i for i, kinds in enumerate(pattern) if kinds[1] == MOE_FF]
+    out = {}
+    for j, pos in enumerate(moe_positions):
+        arr = np.asarray(topk_tuple[j])           # (R, B, [T=1,] k)
+        for r in range(arr.shape[0]):
+            out[r * len(pattern) + pos] = arr[r].reshape(arr.shape[1], -1)
+    return out
+
+
+def recall_counts(pred: np.ndarray, true: np.ndarray) -> int:
+    """c(q,n,l): correctly predicted experts.  pred/true: (B,k)."""
+    total = 0
+    for b in range(true.shape[0]):
+        total += len(set(map(int, pred[b])) & set(map(int, true[b])))
+    return total
+
+
+# ------------------------------------------------------------------ SEP
+class SEPShadow:
+    """The quantized shadow model: an emulator that decodes in lockstep.
+
+    ``step(token)`` runs one shadow decode step and returns the routing
+    decisions it *observed* — the multi-layer-lookahead prediction for
+    the full model — plus the shadow's own next greedy token.
+    """
+
+    def __init__(self, cfg: ModelConfig, params, scheme: str = "int8"):
+        self.cfg = cfg
+        self.scheme = scheme
+        self.params = shadow_params(params, scheme)
+        self.state = None
+        self.token = None
+        self._decode = jax.jit(
+            lambda p, t, s: decode_step(cfg, p, t, s, moe_method="dense"))
+
+    def reset(self, batch, max_cache_len: int):
+        logits, self.state = prefill(self.cfg, self.params, batch,
+                                     max_cache_len, moe_method="dense")
+        self.token = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return self.token
+
+    def step(self, token) -> Dict[int, np.ndarray]:
+        """Consume ``token``; return {layer: predicted (B,k)} and update
+        the shadow's own next token."""
+        from repro.models.transformer import lm_decode
+        logits, caches, aux = lm_decode(
+            self.cfg, self.params, token, self.state["caches"],
+            self.state["pos"], moe_method="dense")
+        self.state = dict(self.state, caches=caches,
+                          pos=self.state["pos"] + 1)
+        self.token = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return topk_to_layer_dict(self.cfg, aux["topk"])
+
+    # ------------------------------------------------------------ align
+    def align_tokens(self, main_token):
+        self.token = main_token
+
+    def align_kv(self, main_state):
+        """Overwrite the shadow KV/SSM caches with the main model's."""
+        self.state = dict(self.state,
+                          caches=jax.tree.map(lambda a: a, main_state["caches"]),
+                          pos=main_state["pos"])
+
+
+# ------------------------------------------------------- on-the-fly
+class GateExtrapolator:
+    """nextgate / multigate: apply future layers' routers to the current
+    router input.  Called by the engine *during* the main decode."""
+
+    def __init__(self, cfg: ModelConfig, routers: Dict[int, jax.Array],
+                 lookahead: int = 1):
+        self.cfg = cfg
+        self.routers = routers          # {layer: (d, E)}
+        self.lookahead = lookahead
+        self.layers = sorted(routers)
+
+    def predict_from(self, layer: int, router_input: jax.Array
+                     ) -> Dict[int, np.ndarray]:
+        """Predict the next ``lookahead`` MoE layers after ``layer``."""
+        idx = self.layers.index(layer)
+        preds = {}
+        x = router_input.astype(jnp.float32)
+        for nxt in self.layers[idx + 1: idx + 1 + self.lookahead]:
+            logits = x @ self.routers[nxt].astype(jnp.float32)
+            _, topk = jax.lax.top_k(logits, self.cfg.top_k)
+            preds[nxt] = np.asarray(topk)
+        return preds
+
+
+class FrequencyPredictor:
+    """EdgeMoE/fMoE-style statistics: per-layer expert popularity."""
+
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        self.counts: Dict[int, np.ndarray] = defaultdict(
+            lambda: np.zeros(cfg.num_experts, np.int64))
+
+    def observe(self, layer: int, true_topk: np.ndarray):
+        for e in true_topk.reshape(-1):
+            self.counts[layer][int(e)] += 1
+
+    def predict(self, layer: int, batch: int) -> np.ndarray:
+        top = np.argsort(-self.counts[layer])[: self.cfg.top_k]
+        return np.tile(top, (batch, 1))
+
+
+class RandomPredictor:
+    """Ablation Case 5: prefetch uniformly random experts."""
+
+    def __init__(self, cfg: ModelConfig, seed: int = 0):
+        self.cfg = cfg
+        self.rng = np.random.default_rng(seed)
+
+    def predict(self, layer: int, batch: int) -> np.ndarray:
+        return np.stack([
+            self.rng.choice(self.cfg.num_experts, self.cfg.top_k,
+                            replace=False)
+            for _ in range(batch)])

@@ -1,0 +1,43 @@
+"""Prefilling-stage batched processing (§3.3, Fig. 7).
+
+During prefill nearly all experts activate (the paper measures 7.6/8 for
+16-token prompts), so prediction is pointless; instead each worker hosts
+one expert per layer and batched embeddings are shipped in mini-batches
+so LAN transfer pipelines with expert GEMMs.  The compute here is exact
+(grouped per-expert GEMM); the latency consequences are modeled in
+``timing.simulate_prefill_odmoe``.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Sequence, Tuple
+
+import numpy as np
+
+from repro.models.config import ModelConfig
+
+
+def prefill_expert_assignment(cfg: ModelConfig, n_workers: int
+                              ) -> Dict[int, List[int]]:
+    """worker -> experts it hosts for EVERY layer during prefill."""
+    out: Dict[int, List[int]] = {w: [] for w in range(n_workers)}
+    for e in range(cfg.num_experts):
+        out[e % n_workers].append(e)
+    return out
+
+
+def split_minibatches(n_tokens: int, n_minibatches: int) -> List[slice]:
+    """Contiguous mini-batch slices (Fig. 7b pipelining units)."""
+    sizes = [n_tokens // n_minibatches] * n_minibatches
+    for i in range(n_tokens % n_minibatches):
+        sizes[i] += 1
+    out, start = [], 0
+    for s in sizes:
+        out.append(slice(start, start + s))
+        start += s
+    return [s for s in out if s.stop > s.start]
+
+
+def experts_activated(topk_idx: np.ndarray, num_experts: int) -> float:
+    """Fraction of experts activated by a batched prefill (§3.3 claim:
+    ~all experts fire for long prompts)."""
+    return len(np.unique(topk_idx)) / num_experts

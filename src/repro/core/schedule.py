@@ -1,0 +1,59 @@
+"""Worker grouping + round-robin scheduling (paper §3.1, Fig. 2, Eq. 1).
+
+Workers are split into ``n_workers / group_size`` groups.  MoE layer
+``l`` (the i-th MoE layer in execution order) is served by group
+``i mod n_groups``; inside a group, the top-k routed experts map
+one-to-one onto the ``group_size`` workers (round-robin when k exceeds
+the group size).  ``t_maxload`` implements Eq. (1): the longest an expert
+load may take without stalling compute, assuming correct prediction.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import List, Sequence, Tuple
+
+
+@dataclass(frozen=True)
+class GroupSchedule:
+    n_workers: int
+    group_size: int
+
+    def __post_init__(self):
+        if self.n_workers % self.group_size:
+            raise ValueError("n_workers must be divisible by group_size")
+
+    @property
+    def n_groups(self) -> int:
+        return self.n_workers // self.group_size
+
+    def group_of(self, moe_index: int) -> int:
+        """Group serving the ``moe_index``-th MoE layer (round-robin)."""
+        return moe_index % self.n_groups
+
+    def workers_of_group(self, group: int) -> List[int]:
+        base = group * self.group_size
+        return list(range(base, base + self.group_size))
+
+    def assign(self, moe_index: int, experts: Sequence[int]
+               ) -> List[Tuple[int, int]]:
+        """One-to-one (expert -> worker) mapping for this layer's group."""
+        workers = self.workers_of_group(self.group_of(moe_index))
+        return [(e, workers[j % len(workers)])
+                for j, e in enumerate(experts)]
+
+    # --------------------------------------------------------------- Eq. 1
+    def t_maxload(self, t_main: float, t_worker: float) -> float:
+        """Maximum expert-load duration with no compute stall (Eq. 1).
+
+        While a group computes layer l, the other ``n_groups - 1`` groups
+        load; a group that finishes computing immediately starts loading
+        for its next assignment ``n_groups`` layers later, giving it
+        ``G·t^M + (G−1)·t^W`` with G = n_groups.
+        """
+        g = self.n_groups
+        return g * t_main + (g - 1) * t_worker
+
+    def io_bottlenecked(self, t_load: float, t_main: float,
+                        t_worker: float) -> bool:
+        """Paper §3.1 closing check: is the system I/O-bound?"""
+        return t_load > self.t_maxload(t_main, t_worker)

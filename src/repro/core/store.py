@@ -1,0 +1,118 @@
+"""Host expert store + device expert slots (the "cacheless" memory model).
+
+``ExpertStore`` holds every expert's FFN weights in host (numpy) memory —
+the paper's CPU-DRAM tier.  ``WorkerSlots`` models the distributed worker
+fleet: each worker owns exactly ONE device-resident expert slot (the
+paper's <1 GB GPU footprint) plus bookkeeping of what is resident and
+what is in flight.  ``load`` physically copies host weights into the slot
+(``jax.device_put``), so engine compute genuinely consumes slot contents;
+eviction is an overwrite — there is no cache.
+
+All loads/evictions/hits/reloads are appended to an event log that the
+discrete-event timing model replays with real hardware constants.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+from repro.models.config import MOE_FF, ModelConfig
+from repro.models.transformer import layer_params
+
+EXPERT_WEIGHT_NAMES = ("w_gate", "w_up", "w_down")
+
+
+@dataclass
+class LoadEvent:
+    token: int              # decoding iteration
+    layer: int              # absolute layer index
+    expert: int
+    worker: int
+    predicted: bool         # True: issued from SEP prediction; False: reload
+    bytes: int
+
+
+class ExpertStore:
+    """Per-(layer, expert) host copies of the expert FFN weights."""
+
+    def __init__(self, cfg: ModelConfig, params):
+        self.cfg = cfg
+        self.moe_layers: List[int] = [
+            i for i, (_, ff) in enumerate(cfg.layer_kinds()) if ff == MOE_FF]
+        self._host: Dict[Tuple[int, int], Dict[str, np.ndarray]] = {}
+        for li in self.moe_layers:
+            lp = layer_params(cfg, params, li)["ff"]
+            for e in range(cfg.num_experts):
+                self._host[(li, e)] = {
+                    n: np.asarray(lp[n][e]) for n in EXPERT_WEIGHT_NAMES}
+        sample = next(iter(self._host.values())) if self._host else {}
+        self.expert_bytes = int(sum(a.nbytes for a in sample.values()))
+
+    def get_host(self, layer: int, expert: int) -> Dict[str, np.ndarray]:
+        return self._host[(layer, expert)]
+
+    def router_weights(self, params):
+        """Routers live on the main node (non-expert parameters)."""
+        return {li: layer_params(self.cfg, params, li)["ff"]["router"]
+                for li in self.moe_layers}
+
+
+class WorkerSlots:
+    """``n_workers`` single-expert device slots with load/evict accounting."""
+
+    def __init__(self, store: ExpertStore, n_workers: int,
+                 physical: bool = True):
+        self.store = store
+        self.n_workers = n_workers
+        self.physical = physical  # False: bookkeep only (no device copies)
+        self.resident: List[Optional[Tuple[int, int]]] = [None] * n_workers
+        self.events: List[LoadEvent] = []
+        self.stats = {"loads": 0, "predicted_loads": 0, "reloads": 0,
+                      "hits": 0, "evictions": 0}
+        self._slot_data: List[Optional[dict]] = [None] * n_workers
+
+    # ------------------------------------------------------------- actions
+    def load(self, token: int, layer: int, expert: int, worker: int,
+             predicted: bool) -> None:
+        """Copy (layer, expert) host weights into ``worker``'s slot."""
+        if self.resident[worker] == (layer, expert):
+            self.stats["hits"] += 1
+            return
+        if self.resident[worker] is not None:
+            self.stats["evictions"] += 1
+        host = self.store.get_host(layer, expert)
+        if self.physical:
+            self._slot_data[worker] = {k: jax.device_put(v)
+                                       for k, v in host.items()}
+        else:
+            self._slot_data[worker] = host
+        self.resident[worker] = (layer, expert)
+        self.stats["loads"] += 1
+        self.stats["predicted_loads" if predicted else "reloads"] += 1
+        self.events.append(LoadEvent(token, layer, expert, worker, predicted,
+                                     self.store.expert_bytes))
+
+    def slot(self, worker: int) -> dict:
+        assert self._slot_data[worker] is not None, "empty slot used"
+        return self._slot_data[worker]
+
+    def worker_with(self, layer: int, expert: int) -> Optional[int]:
+        for w, r in enumerate(self.resident):
+            if r == (layer, expert):
+                return w
+        return None
+
+    def evict(self, worker: int) -> None:
+        """Prompt eviction after the expert computation (cacheless rule)."""
+        if self.resident[worker] is not None:
+            self.stats["evictions"] += 1
+        self.resident[worker] = None
+        self._slot_data[worker] = None
+
+    # -------------------------------------------------------------- memory
+    def device_bytes_per_worker(self) -> int:
+        """Peak slot bytes — the paper's '<1 GB per worker' quantity."""
+        return self.store.expert_bytes

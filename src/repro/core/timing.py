@@ -1,0 +1,390 @@
+"""Discrete-event timing model (the container is CPU-only; TPU/GPU wall
+clock is modeled, not measured — see DESIGN.md §9).
+
+Single-token decode on one device is weight-streaming bound, so stage
+durations derive from *bytes moved* at calibrated effective bandwidths:
+
+    t_compute(stage) = stage_param_bytes / eff_hbm_Bps
+    t_load(expert)   = expert_bytes      / pcie_Bps
+    t_lan(payload)   = payload_bytes     / lan_Bps + lan_latency
+
+The OD-MoE pipeline itself (worker grouping, staggered loads, shadow
+lookahead, alignment late-departure, misprediction reloads) is replayed
+event-by-event from a real engine ``Trace`` following Figs. 2/4/5.
+Baseline systems (fully-cached, CPU, single-node LRU/LFU offloading with
+optional expert quantization) are simulated from the same routing trace
+so every comparison shares the identical expert-activation sequence.
+
+``RTX3090_EDGE`` reproduces the paper's testbed; ``TPU_V5E`` maps the
+same mechanism onto the TPU target (ICI instead of LAN/PCIe).
+"""
+from __future__ import annotations
+
+from collections import OrderedDict, defaultdict
+from dataclasses import dataclass, replace
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.models.config import ATTN, MOE_FF, DENSE_FF, ModelConfig
+from .align import AlignmentPolicy, kv_bytes_per_token
+from .engine import Trace
+from .schedule import GroupSchedule
+
+
+@dataclass(frozen=True)
+class HardwareProfile:
+    name: str
+    eff_hbm_gbps: float        # effective weight-streaming bandwidth, GB/s
+    pcie_gbps: float           # CPU->GPU expert-loading bandwidth, GB/s
+    lan_gbps: float            # inter-node link, Gbit/s
+    lan_latency_ms: float      # per-message overhead
+    cpu_mem_gbps: float = 40.0   # for the llama.cpp-style CPU baseline
+    weight_bytes: int = 4        # full-precision deployment (paper: FP32)
+
+    @property
+    def lan_bps(self) -> float:
+        return self.lan_gbps * 1e9 / 8
+
+    def t_lan(self, payload_bytes: float) -> float:
+        return payload_bytes / self.lan_bps + self.lan_latency_ms * 1e-3
+
+    def t_stream(self, param_bytes: float) -> float:
+        return param_bytes / (self.eff_hbm_gbps * 1e9)
+
+    def t_load(self, param_bytes: float) -> float:
+        return param_bytes / (self.pcie_gbps * 1e9)
+
+
+# Calibrated so the fully-cached HF-Transformers reference lands at the
+# paper's ~4.9 tok/s for Mixtral-8x7B FP32 (Table 2); every other number
+# is then *derived*, not fitted.  936 GB/s HBM * ~0.28 framework
+# efficiency at batch=1.
+RTX3090_EDGE = HardwareProfile(
+    name="rtx3090-edge", eff_hbm_gbps=260.0, pcie_gbps=24.0,
+    lan_gbps=1.0, lan_latency_ms=0.15, cpu_mem_gbps=42.0, weight_bytes=4)
+
+# TPU v5e target: experts stream HBM<-host over PCIe-class DMA; node hops
+# ride ICI (~50 GB/s/link, microsecond-scale latency).
+TPU_V5E = HardwareProfile(
+    name="tpu-v5e", eff_hbm_gbps=600.0, pcie_gbps=32.0,
+    lan_gbps=400.0, lan_latency_ms=0.005, weight_bytes=2)
+
+
+# ------------------------------------------------------------ byte budgets
+def layer_bytes(cfg: ModelConfig, wb: int) -> Dict[str, float]:
+    """Parameter bytes per layer kind (drives stage durations)."""
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    attn = (d * cfg.num_heads * hd + 2 * d * cfg.num_kv_heads * hd
+            + cfg.num_heads * hd * d) * wb
+    dense_ff = 3 * d * cfg.d_ff * wb
+    expert = 3 * d * cfg.d_expert_resolved * wb
+    router = d * cfg.num_experts * wb
+    mamba = cfg._mamba_params() * wb
+    embed = cfg.vocab_size * d * wb
+    return {"attn": attn, "dense_ff": dense_ff, "expert": expert,
+            "router": router, "mamba": mamba, "embed": embed}
+
+
+def embedding_payload(cfg: ModelConfig, wb: int = 4) -> float:
+    """One token's activation shipped main<->worker (paper: ~16 KB)."""
+    return cfg.d_model * wb
+
+
+# --------------------------------------------------------------- OD-MoE
+@dataclass
+class ODMoETimings:
+    per_token_s: List[float]
+    io_stall_s: List[float]
+
+    @property
+    def tokens_per_s(self) -> float:
+        return 1.0 / float(np.mean(self.per_token_s))
+
+
+def simulate_odmoe(cfg: ModelConfig, trace: Trace, sched: GroupSchedule,
+                   profile: HardwareProfile,
+                   shadow_scheme: str = "int8",
+                   predictor: str = "sep") -> ODMoETimings:
+    """Replay an engine trace through the Fig. 2 pipeline.
+
+    One continuous clock; per-worker timelines.  A worker's next
+    predicted load starts as soon as (a) the prediction is available and
+    (b) the worker is free — so loads for layer l+G-1 overlap compute of
+    layer l exactly as in Fig. 2.  Mispredicted experts reload only
+    after the main node's gate result (the paper's fallback).
+    """
+    wb = profile.weight_bytes
+    lb = layer_bytes(cfg, wb)
+    kinds = cfg.layer_kinds()
+    emb = embedding_payload(cfg, wb)
+
+    # stage durations
+    t_main_attn = profile.t_stream(lb["attn"]) + 2 * profile.t_lan(emb)
+    t_main_mamba = profile.t_stream(lb["mamba"])
+    t_main_dense_ff = profile.t_stream(lb["dense_ff"])
+    t_router = profile.t_stream(lb["router"])
+    t_worker = profile.t_stream(lb["expert"]) + profile.t_lan(emb)
+    t_load = profile.t_load(lb["expert"])
+    t_head = profile.t_stream(lb["embed"])
+
+    # shadow: runs the whole (quantized) model on its own node
+    qf = {"fp16": 0.5, "int8": 0.25, "nf4": 0.125}.get(shadow_scheme, 1.0)
+    shadow_active = cfg.active_param_count() * wb * qf
+    t_shadow_layer = profile.t_stream(shadow_active / cfg.num_layers)
+    align_payload = kv_bytes_per_token(cfg, wb)
+    n_moe = sum(1 for _, ff in kinds if ff == MOE_FF)
+
+    per_token, stalls = [], []
+    worker_free = defaultdict(float)          # worker -> absolute free time
+    t = 0.0                                   # continuous clock
+    for rec in trace.records:
+        iter_start = t
+        stall = 0.0
+        # --- shadow late departure (Fig. 5): alignment payload must land
+        delay = 0.0
+        if predictor == "sep":
+            if rec.aligned_kv:
+                delay += profile.t_lan(align_payload)
+            if rec.aligned_token:
+                delay += profile.t_lan(4)
+        shadow_start = iter_start + delay
+
+        def pred_avail(layer_idx: int, main_now: float) -> float:
+            if predictor == "sep":
+                # shadow must itself pass layer `layer_idx`, then notify
+                return (shadow_start + (layer_idx + 1) * t_shadow_layer
+                        + profile.lan_latency_ms * 1e-3)
+            # gate extrapolation: prediction for layer l emerges from the
+            # main model's own (l-1)-th layer — i.e. "now"
+            return main_now
+
+        layer_rec = {lr.layer: lr for lr in rec.layers}
+        moe_i = -1
+        for li, (mixer, ff) in enumerate(kinds):
+            t += t_main_attn if mixer == ATTN else t_main_mamba
+            if ff == DENSE_FF:
+                t += t_main_dense_ff
+                continue
+            if ff != MOE_FF:
+                continue
+            moe_i += 1
+            lr = layer_rec.get(li)
+            t += t_router                      # gate runs on main node
+            g = sched.group_of(moe_i)
+            workers = sched.workers_of_group(g)
+            # predicted loads: issued as early as prediction + worker allow
+            load_done = 0.0
+            if lr is not None and lr.predicted is not None:
+                for w in workers:
+                    ls = max(pred_avail(li, t - t_router), worker_free[w])
+                    worker_free[w] = ls + t_load
+                    load_done = max(load_done, ls + t_load)
+            else:
+                # no prefetch at all: load after the gate result
+                for w in workers:
+                    ls = max(t, worker_free[w])
+                    worker_free[w] = ls + t_load
+                    load_done = max(load_done, ls + t_load)
+            # mispredictions: reload after gate result on the same workers
+            if lr is not None and lr.predicted is not None and lr.reloads:
+                for w in workers[: lr.reloads]:
+                    ls = max(t, worker_free[w])
+                    worker_free[w] = ls + t_load
+                    load_done = max(load_done, ls + t_load)
+            ready = t + profile.t_lan(emb)     # embedding reaches workers
+            ec_start = max(ready, load_done)
+            stall += max(0.0, ec_start - ready)
+            t = ec_start + t_worker
+            for w in workers:
+                worker_free[w] = max(worker_free[w], t)
+        t += t_head
+        per_token.append(t - iter_start)
+        stalls.append(stall)
+    return ODMoETimings(per_token, stalls)
+
+
+# -------------------------------------------------------------- baselines
+def simulate_cached(cfg: ModelConfig, profile: HardwareProfile) -> float:
+    """Fully GPU-cached single-server deployment -> tokens/s."""
+    active = cfg.active_param_count() * profile.weight_bytes
+    return 1.0 / profile.t_stream(active)
+
+
+def simulate_cpu(cfg: ModelConfig, profile: HardwareProfile) -> float:
+    """llama.cpp-style CPU inference (DRAM-streaming bound)."""
+    active = cfg.active_param_count() * profile.weight_bytes
+    return 1.0 / (active / (profile.cpu_mem_gbps * 1e9))
+
+
+class _LRU:
+    def __init__(self, capacity: int):
+        self.capacity = capacity
+        self.od: "OrderedDict" = OrderedDict()
+
+    def access(self, key) -> bool:
+        hit = key in self.od
+        if hit:
+            self.od.move_to_end(key)
+        else:
+            if len(self.od) >= self.capacity:
+                self.od.popitem(last=False)
+            self.od[key] = True
+        return hit
+
+
+class _LFU:
+    def __init__(self, capacity: int):
+        self.capacity = capacity
+        self.counts: Dict = defaultdict(int)
+        self.resident: set = set()
+
+    def access(self, key) -> bool:
+        self.counts[key] += 1
+        hit = key in self.resident
+        if not hit:
+            if len(self.resident) >= self.capacity:
+                victim = min(self.resident, key=lambda k: self.counts[k])
+                self.resident.discard(victim)
+            self.resident.add(key)
+        return hit
+
+
+def simulate_offload_cache(cfg: ModelConfig, trace: Trace,
+                           profile: HardwareProfile, *,
+                           policy: str = "lru", cache_experts: int = 0,
+                           quant_factor: float = 1.0) -> Dict[str, float]:
+    """Single-node expert-offloading baseline (Mixtral-Offloading / HOBBIT
+    / MoE-Infinity family) replayed on the SAME routing trace.
+
+    ``cache_experts`` = GPU expert-cache capacity (in experts);
+    ``quant_factor`` scales expert bytes (HOBBIT/AdapMoE quantization).
+    """
+    wb = profile.weight_bytes
+    lb = layer_bytes(cfg, wb)
+    kinds = cfg.layer_kinds()
+    cache = (_LRU if policy == "lru" else _LFU)(max(cache_experts, 1))
+    t_attn = profile.t_stream(lb["attn"])
+    t_dense = profile.t_stream(lb["dense_ff"])
+    t_mamba = profile.t_stream(lb["mamba"])
+    t_exp = profile.t_stream(lb["expert"] * quant_factor)
+    t_load = profile.t_load(lb["expert"] * quant_factor)
+    t_head = profile.t_stream(lb["embed"])
+    hits = misses = 0
+    per_token = []
+    for rec in trace.records:
+        t = 0.0
+        layer_rec = {lr.layer: lr for lr in rec.layers}
+        for li, (mixer, ff) in enumerate(kinds):
+            t += t_attn if mixer == ATTN else t_mamba
+            if ff == DENSE_FF:
+                t += t_dense
+            if ff != MOE_FF:
+                continue
+            lr = layer_rec.get(li)
+            experts = ([int(e) for e in lr.true.reshape(-1)]
+                       if lr is not None else [])
+            for e in set(experts):
+                if cache.access((li, e)):
+                    hits += 1
+                else:
+                    misses += 1
+                    t += t_load               # single PCIe link: serial loads
+                t += t_exp
+        t += t_head
+        per_token.append(t)
+    total = hits + misses
+    return {"tokens_per_s": 1.0 / float(np.mean(per_token)),
+            "cache_hit_rate": hits / total if total else 0.0}
+
+
+# ---------------------------------------------------------------- prefill
+def simulate_prefill_odmoe(cfg: ModelConfig, profile: HardwareProfile,
+                           prompt_len: int, n_workers: int = 8,
+                           n_minibatches: int = 4) -> float:
+    """TTFT under §3.3: per layer all experts load in parallel across the
+    workers; batched embeddings ship in mini-batches so transfer pipelines
+    with compute (Fig. 7b).  Returns seconds."""
+    wb = profile.weight_bytes
+    lb = layer_bytes(cfg, wb)
+    kinds = cfg.layer_kinds()
+    emb_batch = embedding_payload(cfg, wb) * prompt_len
+    # batched expert GEMM is compute-bound; approximate with streaming
+    # cost + per-token compute amortization (batch reuses weights)
+    t = profile.t_stream(lb["embed"])
+    for mixer, ff in kinds:
+        t += profile.t_stream(lb["attn"] if mixer == ATTN else lb["mamba"])
+        if ff == DENSE_FF:
+            t += profile.t_stream(lb["dense_ff"])
+        if ff != MOE_FF:
+            continue
+        experts_per_worker = max(1, cfg.num_experts // n_workers)
+        t_load = profile.t_load(lb["expert"]) * experts_per_worker
+        mb = emb_batch / n_minibatches
+        t_mb_comm = profile.t_lan(mb)
+        t_mb_comp = profile.t_stream(lb["expert"]) / n_minibatches
+        # Fig. 7b pipeline: first mini-batch transfer, then overlap
+        t_pipeline = t_mb_comm + max(t_mb_comm, t_mb_comp) * (
+            n_minibatches - 1) + t_mb_comp
+        t += max(t_load, t_pipeline)
+    return t
+
+
+def simulate_prefill_cached(cfg: ModelConfig, profile: HardwareProfile,
+                            prompt_len: int) -> float:
+    active = cfg.active_param_count() * profile.weight_bytes
+    # weights stream once; compute amortized over the batch
+    return profile.t_stream(active) * (1 + prompt_len / 2048)
+
+
+# --------------------------------------------------------- synthetic trace
+def synthetic_trace(cfg: ModelConfig, n_tokens: int, recall: float,
+                    batch: int = 1, seed: int = 0,
+                    with_predictions: bool = True,
+                    sticky: float = 0.55) -> Trace:
+    """Build a routing trace for a FULL-SIZE config that the CPU engine
+    cannot run, with a target prediction recall measured on the small-
+    model experiments.  Expert popularity is Zipf-ish (real routers are
+    mildly skewed) and per-layer selections are temporally sticky with
+    probability ``sticky`` (successive tokens often reuse experts, which
+    is what gives LRU/LFU baselines their cache hits).  Mispredictions
+    are i.i.d. at rate 1-recall.
+    """
+    from .engine import LayerRecord, TokenRecord  # local: avoid cycle
+    rng = np.random.default_rng(seed)
+    moe_layers = [i for i, (_, ff) in enumerate(cfg.layer_kinds())
+                  if ff == MOE_FF]
+    e, k = cfg.num_experts, cfg.top_k
+    pop = 1.0 / np.arange(1, e + 1) ** 0.5
+    pop /= pop.sum()
+    prev: Dict[int, np.ndarray] = {}
+    trace = Trace()
+    for n in range(1, n_tokens + 1):
+        rec = TokenRecord(index=n, aligned_token=True, aligned_kv=True)
+        for mi, li in enumerate(moe_layers):
+            perm = rng.permutation(e)
+            true = np.stack([rng.choice(e, size=k, replace=False, p=pop)
+                             for _ in range(batch)])
+            if li in prev and sticky > 0:
+                keep = rng.random(true.shape) < sticky
+                true = np.where(keep, prev[li], true)
+            prev[li] = true
+            if with_predictions:
+                pred = true.copy()
+                wrong = rng.random(true.shape) > recall
+                pred[wrong] = perm[pred[wrong]]          # derangement-ish
+                correct = sum(
+                    len(set(map(int, pred[b])) & set(map(int, true[b])))
+                    for b in range(batch))
+                reloads = len({int(x) for x in true.reshape(-1)}
+                              - {int(x) for x in pred.reshape(-1)})
+            else:
+                pred, correct = None, 0
+                reloads = len({int(x) for x in true.reshape(-1)})
+            rec.layers.append(LayerRecord(
+                layer=li, moe_index=mi, group=0, predicted=pred, true=true,
+                correct=correct, reloads=reloads,
+                assignments=[(int(x), 0) for x in
+                             dict.fromkeys(true.reshape(-1).tolist())]))
+        trace.records.append(rec)
+    return trace

@@ -1,0 +1,22 @@
+"""jit'd public wrapper for flash decode attention."""
+from __future__ import annotations
+
+import jax
+
+from .kernel import flash_decode_kernel
+from .ref import flash_decode_ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def flash_decode(q, k, v, kpos, pos, *, window: int = 0,
+                 block_w: int = 1024, force_kernel: bool = False,
+                 interpret: bool | None = None):
+    if interpret is None:
+        interpret = not _on_tpu()
+    if not _on_tpu() and not force_kernel:
+        return flash_decode_ref(q, k, v, kpos, pos, window=window)
+    return flash_decode_kernel(q, k, v, kpos, pos, window=window,
+                               block_w=block_w, interpret=interpret)

@@ -1,0 +1,18 @@
+"""Pure-jnp oracle for single-token GQA decode attention."""
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def flash_decode_ref(q, k, v, kpos, pos, window: int = 0):
+    """q: (B,K,G,Hd); k/v: (B,W,K,Hd); kpos: (B,W); pos: (B,)."""
+    hd = q.shape[-1]
+    s = jnp.einsum("bkgh,bwkh->bkgw", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / jnp.sqrt(jnp.float32(hd))
+    valid = (kpos >= 0) & (kpos <= pos[:, None])
+    if window:
+        valid = valid & (pos[:, None] - kpos < window)
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bkgw,bwkh->bkgh", p, v.astype(jnp.float32))

@@ -1,0 +1,23 @@
+"""jit'd public wrapper for the shadow-model int8 matmul."""
+from __future__ import annotations
+
+import jax
+
+from .kernel import int8_matmul_kernel
+from .ref import int8_matmul_ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def int8_matmul(x, w_q, scale, *, block_m: int = 256, block_n: int = 256,
+                block_k: int = 512, force_kernel: bool = False,
+                interpret: bool | None = None):
+    if interpret is None:
+        interpret = not _on_tpu()
+    if not _on_tpu() and not force_kernel:
+        return int8_matmul_ref(x, w_q, scale)
+    return int8_matmul_kernel(x, w_q, scale, block_m=block_m,
+                              block_n=block_n, block_k=block_k,
+                              interpret=interpret)

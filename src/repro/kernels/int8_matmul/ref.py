@@ -1,0 +1,8 @@
+"""Pure-jnp oracle for the w8a16 dequantizing matmul."""
+import jax.numpy as jnp
+
+
+def int8_matmul_ref(x, w_q, scale):
+    """x: (M,K); w_q: (K,N) int8; scale: (N,) -> (M,N) f32."""
+    w = w_q.astype(jnp.float32) * scale[None, :]
+    return x.astype(jnp.float32) @ w

@@ -1,0 +1,84 @@
+"""Grouped expert-FFN Pallas kernel (gather-GEMM-scatter inner GEMMs).
+
+TPU-native analogue of OD-MoE's cacheless loading: for each routed
+expert, ONLY that expert's weight tiles stream HBM->VMEM while the tile
+is being consumed — no expert weights are ever resident beyond the tile
+in flight (the VMEM working set is the "<1 GB worker slot").
+
+Computes, for dispatched activations xd: (E, C, D) and expert weights
+w_gate/w_up: (E, D, F), w_down: (E, F, D):
+
+    y[e] = (silu(xd[e] @ w_gate[e]) * (xd[e] @ w_up[e])) @ w_down[e]
+
+Grid: (E, C/Cb, F/Fb).  The F axis is the contraction of the down-proj,
+so output tiles are revisited and accumulated across the last grid dim
+("arbitrary" semantics); E and C tiles are parallel.  Tile sizes are
+MXU-aligned (multiples of 128) and sized so the working set
+(x: Cb*D + 3 weight tiles: D*Fb + Fb*D + acc: Cb*D) fits VMEM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _make_ffn_kernel(total_f: int, block_f: int):
+    def _ffn_kernel(x_ref, wg_ref, wu_ref, wd_ref, o_ref):
+        fi = pl.program_id(2)
+        x = x_ref[0]                       # (Cb, D)
+        wg = wg_ref[0]                     # (D, Fb)
+        wu = wu_ref[0]
+        wd = wd_ref[0]                     # (Fb, D)
+        # a ragged final F tile reads out-of-bounds padding on the
+        # contraction dim: zero it or it contaminates the accumulator
+        fmask = (fi * block_f + jax.lax.iota(jnp.int32, block_f)
+                 < total_f)
+        wg = jnp.where(fmask[None, :], wg, 0)
+        wu = jnp.where(fmask[None, :], wu, 0)
+        wd = jnp.where(fmask[:, None], wd, 0)
+        h = jax.nn.silu(jnp.dot(x, wg, preferred_element_type=jnp.float32))
+        u = jnp.dot(x, wu, preferred_element_type=jnp.float32)
+        y = jnp.dot((h * u).astype(x.dtype), wd,
+                    preferred_element_type=jnp.float32)
+
+        @pl.when(fi == 0)
+        def _init():
+            o_ref[0] = y.astype(o_ref.dtype)
+
+        @pl.when(fi > 0)
+        def _acc():
+            o_ref[0] += y.astype(o_ref.dtype)
+
+    return _ffn_kernel
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("block_c", "block_f", "interpret"))
+def moe_ffn_kernel(xd, w_gate, w_up, w_down, *, block_c: int = 128,
+                   block_f: int = 512, interpret: bool = False):
+    """xd: (E, C, D) -> (E, C, D), fp32 accumulation."""
+    e, c, d = xd.shape
+    f = w_gate.shape[-1]
+    bc = min(block_c, c)
+    bf = min(block_f, f)
+    grid = (e, pl.cdiv(c, bc), pl.cdiv(f, bf))
+    return pl.pallas_call(
+        _make_ffn_kernel(f, bf),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bc, d), lambda e_, ci, fi: (e_, ci, 0)),
+            pl.BlockSpec((1, d, bf), lambda e_, ci, fi: (e_, 0, fi)),
+            pl.BlockSpec((1, d, bf), lambda e_, ci, fi: (e_, 0, fi)),
+            pl.BlockSpec((1, bf, d), lambda e_, ci, fi: (e_, fi, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bc, d), lambda e_, ci, fi: (e_, ci, 0)),
+        out_shape=jax.ShapeDtypeStruct((e, c, d), jnp.float32),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel",
+                                             "arbitrary")),
+        interpret=interpret,
+    )(xd, w_gate, w_up, w_down)

@@ -1,0 +1,24 @@
+"""jit'd public wrapper: kernel on TPU, interpret-mode kernel or oracle
+fallback on CPU."""
+from __future__ import annotations
+
+import jax
+
+from .kernel import moe_ffn_kernel
+from .ref import moe_ffn_ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def moe_ffn(xd, w_gate, w_up, w_down, *, block_c: int = 128,
+            block_f: int = 512, force_kernel: bool = False,
+            interpret: bool | None = None):
+    """Grouped expert FFN; see kernel.py for the tiling contract."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    if not _on_tpu() and not force_kernel:
+        return moe_ffn_ref(xd, w_gate, w_up, w_down)
+    return moe_ffn_kernel(xd, w_gate, w_up, w_down, block_c=block_c,
+                          block_f=block_f, interpret=interpret)

@@ -1,0 +1,12 @@
+"""Pure-jnp oracle for the grouped expert FFN."""
+import jax
+import jax.numpy as jnp
+
+
+def moe_ffn_ref(xd, w_gate, w_up, w_down):
+    """xd: (E, C, D) -> (E, C, D) in fp32."""
+    x32 = xd.astype(jnp.float32)
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", x32,
+                               w_gate.astype(jnp.float32)))
+    u = jnp.einsum("ecd,edf->ecf", x32, w_up.astype(jnp.float32))
+    return jnp.einsum("ecf,efd->ecd", h * u, w_down.astype(jnp.float32))

@@ -1,0 +1,20 @@
+"""jit'd public wrapper for the SSD inter-chunk scan."""
+from __future__ import annotations
+
+import jax
+
+from .kernel import ssd_scan_kernel
+from .ref import ssd_scan_ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def ssd_scan(s, decay, *, block_h: int = 16, force_kernel: bool = False,
+             interpret: bool | None = None):
+    if interpret is None:
+        interpret = not _on_tpu()
+    if not _on_tpu() and not force_kernel:
+        return ssd_scan_ref(s, decay)
+    return ssd_scan_kernel(s, decay, block_h=block_h, interpret=interpret)

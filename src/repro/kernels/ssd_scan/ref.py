@@ -1,0 +1,18 @@
+"""Pure-jnp oracle for the inter-chunk SSD recurrence."""
+import jax
+import jax.numpy as jnp
+
+
+def ssd_scan_ref(s, decay):
+    """s: (B,NC,H,P,N); decay: (B,NC,H) -> (h_in, h_last)."""
+    def step(h, inp):
+        s_c, dec = inp
+        h_in = h
+        h = dec[..., None, None] * h + s_c
+        return h, h_in
+
+    h0 = jnp.zeros(s.shape[:1] + s.shape[2:], jnp.float32)
+    h_last, h_in = jax.lax.scan(
+        step, h0, (jnp.moveaxis(s.astype(jnp.float32), 1, 0),
+                   jnp.moveaxis(decay.astype(jnp.float32), 1, 0)))
+    return jnp.moveaxis(h_in, 0, 1), h_last

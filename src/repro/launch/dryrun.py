@@ -1,0 +1,199 @@
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) combo.
+
+MUST be imported/run before any other jax usage: the first two lines
+force 512 placeholder host devices so the production meshes exist on
+this single-CPU container.  Do NOT set this flag anywhere global.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch llama3-8b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all --mesh single --out dryrun.json
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import argparse          # noqa: E402
+import json              # noqa: E402
+import re                # noqa: E402
+import time              # noqa: E402
+import traceback         # noqa: E402
+from typing import Dict, Optional  # noqa: E402
+
+import jax               # noqa: E402
+import numpy as np       # noqa: E402
+
+from repro.configs import get_config, list_archs               # noqa: E402
+from repro.models.config import INPUT_SHAPES                   # noqa: E402
+from repro.launch.mesh import make_production_mesh             # noqa: E402
+from repro.launch.sharding import ShardingRules                # noqa: E402
+from repro.launch import specs as specs_lib                    # noqa: E402
+from repro.launch.steps import (make_prefill_step,             # noqa: E402
+                                make_serve_step, make_train_step)
+
+from repro.launch.hlo_analysis import (collective_traffic,  # noqa: E402
+                                       while_summary)
+
+
+def dryrun_one(arch: str, shape_name: str, multi_pod: bool = False,
+               moe_method: str = "scatter", n_microbatches: int = 8,
+               verbose: bool = True, fsdp_unshard: bool = True) -> Dict:
+    """Lower + compile one combination; return roofline raw terms."""
+    t_start = time.time()
+    cfg0 = get_config(arch)
+    shape = INPUT_SHAPES[shape_name]
+    sp = specs_lib.input_specs(cfg0, shape_name)
+    cfg = sp["cfg"]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    mode = "train" if sp["kind"] == "train" else "serve"
+    rules = ShardingRules(cfg, mesh, mode)
+    if moe_method == "a2a":
+        from repro.models.moe_a2a import make_moe_a2a
+        moe_method = make_moe_a2a(mesh)
+
+    params_abs = specs_lib.abstract_params(cfg)
+    params_sh = rules.params(params_abs)
+
+    with mesh:
+        b = shape.global_batch
+        if sp["kind"] == "train":
+            mb = n_microbatches
+            while shape.global_batch % mb:
+                mb //= 2
+            opt_abs = specs_lib.abstract_opt_state(cfg, params_abs)
+            opt_sh = rules.opt_state(opt_abs, params_abs)
+            batch_sh = rules.batch(sp["batch"])
+            lc = (rules.layer_constraint(params_abs)
+                  if fsdp_unshard else None)
+            mbc = rules.microbatch_constraint(sp["batch"], mb)
+            # NOTE: residual sequence-parallelism (rules.residual_constraint)
+            # was tried and REFUTED: blockwise attention consumes full-seq
+            # K/V, so SP forces per-inner-scan-step seq all-gathers
+            # (513 -> 2269 GB/dev; EXPERIMENTS.md §Perf iter 5).
+            step = make_train_step(cfg, moe_method=moe_method,
+                                   n_microbatches=mb, layer_constraint=lc,
+                                   microbatch_constraint=mbc,
+                                   grad_constraint=rules.grad_constraint(
+                                       params_abs))
+            metrics_abs = jax.eval_shape(step, params_abs, opt_abs,
+                                         sp["batch"])[2]
+            jitted = jax.jit(step,
+                             in_shardings=(params_sh, opt_sh, batch_sh),
+                             out_shardings=(params_sh, opt_sh,
+                                            rules.replicate_tree(metrics_abs)),
+                             donate_argnums=(0, 1))
+            lowered = jitted.lower(params_abs, opt_abs, sp["batch"])
+        elif sp["kind"] == "prefill":
+            cache_len = shape.seq_len + (cfg.frontend_tokens or 0) + 8
+            batch_sh = rules.batch(sp["batch"])
+            step = make_prefill_step(cfg, cache_len, moe_method=moe_method)
+            out_abs = jax.eval_shape(step, params_abs, sp["batch"])
+            out_sh = (rules.token(b), rules.logits(b, cfg.vocab_size),
+                      rules.decode_state(out_abs[2]))
+            jitted = jax.jit(step, in_shardings=(params_sh, batch_sh),
+                             out_shardings=out_sh)
+            lowered = jitted.lower(params_abs, sp["batch"])
+        else:
+            state_abs = sp["state"]
+            state_sh = rules.decode_state(state_abs)
+            tok_sh = rules.token(b)
+            step = make_serve_step(cfg, moe_method=moe_method)
+            jitted = jax.jit(step,
+                             in_shardings=(params_sh, tok_sh, state_sh),
+                             out_shardings=(tok_sh,
+                                            rules.logits(b, cfg.vocab_size),
+                                            state_sh),
+                             donate_argnums=(2,))
+            lowered = jitted.lower(params_abs, sp["token"], state_abs)
+
+        t_lower = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time()
+
+    cost = compiled.cost_analysis() or {}
+    try:
+        mem = compiled.memory_analysis()
+        mem_d = {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "generated_code_bytes": getattr(mem, "generated_code_size_in_bytes",
+                                            None),
+            "alias_bytes": getattr(mem, "alias_size_in_bytes", None),
+        }
+    except Exception as e:  # CPU backend may not implement it
+        mem_d = {"error": str(e)}
+    hlo_txt = compiled.as_text()
+    coll = collective_traffic(hlo_txt)
+    loops = while_summary(hlo_txt)
+
+    n_dev = 512 if multi_pod else 256
+    result = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "devices": n_dev,
+        "kind": sp["kind"],
+        "flops_per_device": cost.get("flops"),
+        "bytes_accessed_per_device": cost.get("bytes accessed"),
+        "collective_bytes_per_device": coll,
+        "while_loops": loops,
+        "memory_analysis": mem_d,
+        "model_params": cfg0.param_count(),
+        "active_params": cfg0.active_param_count(),
+        "lower_s": round(t_lower - t_start, 1),
+        "compile_s": round(t_compile - t_lower, 1),
+        "ok": True,
+    }
+    if verbose:
+        print(f"[dryrun] {arch} x {shape_name} x {result['mesh']}: OK "
+              f"flops/dev={result['flops_per_device']:.3e} "
+              f"coll/dev={coll['total']:.3e}B "
+              f"(lower {result['lower_s']}s compile {result['compile_s']}s)")
+        print(f"  memory_analysis: {mem_d}")
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None,
+                    choices=list(INPUT_SHAPES) + [None])
+    ap.add_argument("--mesh", default="single",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true",
+                    help="all (arch x shape) combos")
+    ap.add_argument("--moe-method", default="a2a",
+                    choices=["scatter", "einsum", "dense", "a2a"])
+    ap.add_argument("--microbatches", type=int, default=8)
+    ap.add_argument("--out", default=None, help="append JSONL here")
+    args = ap.parse_args()
+
+    archs = list_archs() if (args.all or not args.arch) else [args.arch]
+    shapes = list(INPUT_SHAPES) if (args.all or not args.shape) \
+        else [args.shape]
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+
+    results = []
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                try:
+                    r = dryrun_one(arch, shape, multi_pod=mp,
+                                   moe_method=args.moe_method,
+                                   n_microbatches=args.microbatches)
+                except Exception as e:
+                    traceback.print_exc()
+                    r = {"arch": arch, "shape": shape,
+                         "mesh": "2x16x16" if mp else "16x16",
+                         "ok": False, "error": str(e)[-2000:]}
+                results.append(r)
+                if args.out:
+                    with open(args.out, "a") as f:
+                        f.write(json.dumps(r) + "\n")
+    n_ok = sum(r["ok"] for r in results)
+    print(f"\n[dryrun] {n_ok}/{len(results)} combinations lowered+compiled")
+    if n_ok < len(results):
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,157 @@
+"""Post-optimization HLO analysis: trip-count-corrected collective traffic.
+
+XLA's ``compiled.cost_analysis()`` counts a ``while`` body ONCE, so any
+collective (or flop) inside a ``lax.scan`` — which is how our models
+execute layers, microbatches and attention blocks — is undercounted by
+the trip count.  Fortunately the compiled HLO records
+``backend_config={"known_trip_count":{"n":"R"}}`` on every while op, so
+we can reconstruct each computation's execution multiplier from the call
+graph (fusions/calls propagate the caller's multiplier; while bodies
+multiply by their trip count; nested scans compose).
+
+``collective_traffic(hlo_text)`` returns wire bytes per device with the
+standard ring formulas, already multiplied by how often each collective
+actually executes.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Dict, List, Tuple
+
+_DTYPE_BYTES = {"bf16": 2, "f16": 2, "f32": 4, "f64": 8, "s32": 4,
+                "u32": 4, "s8": 1, "u8": 1, "pred": 1, "s64": 8,
+                "u64": 8, "s16": 2, "u16": 2, "f8e4m3fn": 1,
+                "f8e5m2": 1, "c64": 8, "c128": 16}
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([\d,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_TRIP_RE = re.compile(r'known_trip_count[^0-9]*(\d+)')
+_CALL_RE = re.compile(r"(?:calls|body|to_apply)=%([\w.\-]+)")
+_BODY_RE = re.compile(r"body=%([\w.\-]+)")
+_COMP_HDR = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->.*\{")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def parse_computations(hlo_text: str) -> Tuple[Dict[str, List[str]], str]:
+    """-> ({computation_name: [instruction lines]}, entry_name)."""
+    comps: Dict[str, List[str]] = {}
+    entry = None
+    cur = None
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        if cur is None:
+            m = _COMP_HDR.match(stripped)
+            if m and not stripped.startswith("//"):
+                cur = m.group(1)
+                comps[cur] = []
+                if stripped.startswith("ENTRY"):
+                    entry = cur
+        else:
+            if stripped == "}":
+                cur = None
+            else:
+                comps[cur].append(stripped)
+    return comps, entry
+
+
+def computation_multipliers(hlo_text: str) -> Tuple[Dict[str, float],
+                                                    Dict[str, List[str]]]:
+    """Execution count of each computation, composing nested trip counts."""
+    comps, entry = parse_computations(hlo_text)
+    # edges: caller -> [(callee, multiplier)]
+    edges: Dict[str, List[Tuple[str, float]]] = defaultdict(list)
+    for name, lines in comps.items():
+        for line in lines:
+            trip = 1.0
+            if " while(" in line:
+                mt = _TRIP_RE.search(line)
+                if mt:
+                    trip = float(mt.group(1))
+                mb = _BODY_RE.search(line)
+                if mb:
+                    edges[name].append((mb.group(1), trip))
+                continue
+            for callee in _CALL_RE.findall(line):
+                edges[name].append((callee, 1.0))
+    if entry is None:
+        return {name: 1.0 for name in comps}, comps
+    # call graph is a DAG (HLO cannot recurse): relax for depth rounds,
+    # each round recomputing every multiplier from the previous round
+    mult: Dict[str, float] = defaultdict(float)
+    mult[entry] = 1.0
+    for _ in range(len(comps) + 2):
+        new: Dict[str, float] = defaultdict(float)
+        new[entry] = 1.0
+        for caller, callees in edges.items():
+            for callee, t in callees:
+                new[callee] += mult[caller] * t
+        if all(abs(new[k] - mult[k]) < 1e-9 for k in set(new) | set(mult)):
+            break
+        mult = new
+    return dict(mult), comps
+
+
+def collective_traffic(hlo_text: str) -> Dict:
+    """Per-device wire bytes by collective type, trip-count corrected."""
+    mult, comps = computation_multipliers(hlo_text)
+    out = {c: 0.0 for c in COLLECTIVES}
+    counts = {c: 0 for c in COLLECTIVES}
+    static = {c: 0.0 for c in COLLECTIVES}    # uncorrected (body-once)
+    for name, lines in comps.items():
+        m = mult.get(name, 1.0)
+        for line in lines:
+            for coll in COLLECTIVES:
+                idx = -1
+                for marker in (f" {coll}(", f" {coll}-start(",
+                               f"= {coll}(", f"= {coll}-start("):
+                    idx = line.find(marker)
+                    if idx >= 0:
+                        break
+                if idx < 0:
+                    continue
+                head = line[:idx]
+                res = sum(_shape_bytes(sm.group(1), sm.group(2))
+                          for sm in _SHAPE_RE.finditer(head)
+                          if sm.group(1) in _DTYPE_BYTES)
+                mg = _GROUPS_RE.search(line)
+                g = max(int(mg.group(2)) if mg else 2, 1)
+                if coll == "all-gather":
+                    wire = res * (g - 1) / g
+                elif coll == "reduce-scatter":
+                    wire = res * (g - 1)
+                elif coll == "all-reduce":
+                    wire = 2 * res * (g - 1) / g
+                elif coll == "all-to-all":
+                    wire = res * (g - 1) / g
+                else:
+                    wire = res
+                out[coll] += wire * m
+                static[coll] += wire
+                counts[coll] += 1
+                break
+    total = sum(out[c] for c in COLLECTIVES)
+    return {"per_type": out, "counts": counts, "total": total,
+            "total_uncorrected": sum(static[c] for c in COLLECTIVES)}
+
+
+def while_summary(hlo_text: str) -> List[Dict]:
+    """List of while loops with their trip counts (debugging aid)."""
+    out = []
+    for line in hlo_text.splitlines():
+        if " while(" in line:
+            mt = _TRIP_RE.search(line)
+            mb = _BODY_RE.search(line)
+            out.append({"body": mb.group(1) if mb else "?",
+                        "trip_count": int(mt.group(1)) if mt else -1})
+    return out

@@ -1,0 +1,37 @@
+"""Production mesh construction (single-pod 16x16, multi-pod 2x16x16).
+
+A FUNCTION, not a module-level constant, so importing this module never
+touches jax device state (the dry-run sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before any jax
+import; tests and benchmarks must keep seeing 1 device).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_debug_mesh(n_data: int = 2, n_model: int = 2):
+    """Small mesh over however many (host) devices exist — for tests."""
+    return jax.make_mesh((n_data, n_model), ("data", "model"))
+
+
+def data_axes(mesh) -> Tuple[str, ...]:
+    """Batch-parallel axes: ('pod','data') on multi-pod, ('data',) else."""
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def axis_size(mesh, names) -> int:
+    if isinstance(names, str):
+        names = (names,)
+    n = 1
+    for a in names:
+        n *= mesh.shape[a]
+    return n

@@ -1,0 +1,77 @@
+"""Serving driver: OD-MoE cacheless engine on a (reduced) MoE model.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch mixtral-8x7b \
+      --tokens 32 --predictor sep --shadow int8
+
+Runs real prefill+decode through ``ODMoEEngine`` (prediction, on-demand
+loading, alignment, eviction — all live), verifies the output matches
+the dense reference bit-for-bit, and reports recall, load statistics,
+memory by node type, and modeled decode throughput on the paper's edge
+profile.
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.core import (AlignmentPolicy, ODMoEEngine, RTX3090_EDGE,
+                        simulate_cached, simulate_odmoe)
+from repro.models import greedy_generate, init_params
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="mixtral-8x7b")
+    ap.add_argument("--tokens", type=int, default=24)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--predictor", default="sep",
+                    choices=["sep", "nextgate", "multigate", "freq",
+                             "random", "none"])
+    ap.add_argument("--shadow", default="int8",
+                    choices=["fp16", "int8", "nf4"])
+    ap.add_argument("--workers", type=int, default=8)
+    ap.add_argument("--token-period", type=int, default=1)
+    ap.add_argument("--kv-period", type=int, default=1)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch).reduced()
+    if not cfg.num_experts:
+        raise SystemExit(f"{args.arch} has no experts — OD-MoE loading is "
+                         "inapplicable (see DESIGN.md §4); serve it with "
+                         "examples/quickstart.py instead.")
+    key = jax.random.PRNGKey(args.seed)
+    params = init_params(cfg, key)
+    batch = {"tokens": jax.random.randint(key, (1, args.prompt_len), 0,
+                                          cfg.vocab_size)}
+    print(f"[serve] {cfg.name}: E={cfg.num_experts} top{cfg.top_k}, "
+          f"{args.workers} workers, predictor={args.predictor}"
+          + (f"/{args.shadow}" if args.predictor == "sep" else ""))
+    eng = ODMoEEngine(cfg, params, n_workers=args.workers,
+                      predictor=args.predictor, shadow_scheme=args.shadow)
+    policy = AlignmentPolicy(args.token_period, args.kv_period)
+    toks, trace = eng.generate(batch, args.tokens, policy)
+    ref = greedy_generate(cfg, params, batch, args.tokens)
+    exact = bool(np.array_equal(np.asarray(toks), np.asarray(ref)))
+    print(f"  tokens == dense reference: {exact}")
+    assert exact, "engine output diverged from reference"
+    print(f"  recall (Eq.3): {trace.recall():.4f}   "
+          f"reload fraction: {trace.reload_fraction():.4f}")
+    print(f"  loads: {eng.slots.stats}")
+    mem = eng.memory_report()
+    print("  memory: " + ", ".join(
+        f"{k}={v/1e6:.2f}MB" for k, v in mem.items() if k.endswith("bytes")))
+    t = simulate_odmoe(cfg, trace, eng.sched, RTX3090_EDGE,
+                       shadow_scheme=args.shadow,
+                       predictor=args.predictor)
+    print(f"  modeled decode speed ({RTX3090_EDGE.name}): "
+          f"{t.tokens_per_s:.2f} tok/s "
+          f"(fully-cached reference {simulate_cached(cfg, RTX3090_EDGE):.2f})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,277 @@
+"""Sharding rules: parameter / optimizer / batch / decode-state layouts.
+
+Strategy (see DESIGN.md §6):
+  * tensor parallelism on the ``model`` axis: attention heads, FFN hidden,
+    vocab; MoE experts shard on the expert axis when the expert count
+    divides the axis (qwen3's 128, jamba's 16), otherwise on the
+    per-expert FFN hidden dim (mixtral's 8, granite's 40);
+  * ``train`` mode adds FSDP: the non-TP dim of every matrix shards over
+    the batch axes (('pod','data') on multi-pod) so fp32 optimizer state
+    fits HBM for the 30-50B configs;
+  * ``serve`` mode keeps parameters replicated across batch axes
+    (latency: no per-step weight gathers);
+  * KV caches shard batch on the data axes and sequence on ``model``
+    (sequence parallelism — what makes 500k-token caches fit).
+
+Every rule degrades to replication when a dim is not divisible by the
+axis, so all 10 architectures lower on the same meshes.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.models.config import ModelConfig
+from .mesh import axis_size, data_axes
+
+TP = "model"
+
+
+def _div(n: int, size: int) -> bool:
+    return size > 0 and n % size == 0
+
+
+class ShardingRules:
+    """fsdp_style:
+      * "zero"    (default) — parameters are pure-TP; ONLY the fp32
+        optimizer moments additionally shard over the batch axes
+        (ZeRO-style).  Measured: removes the per-layer-scan gradient
+        all-reduces and the involuntary full remats (§Perf iter 3).
+      * "weights" — classic weight FSDP (kept for comparison; pays a
+        per-layer unshard and provoked pathological GSPMD reshards).
+    """
+
+    def __init__(self, cfg: ModelConfig, mesh, mode: str,
+                 fsdp_style: str = "zero"):
+        assert mode in ("train", "serve")
+        self.cfg = cfg
+        self.mesh = mesh
+        self.mode = mode
+        self.fsdp_style = fsdp_style
+        self.dp: Tuple[str, ...] = data_axes(mesh)
+        self.dp_size = axis_size(mesh, self.dp)
+        self.tp_size = axis_size(mesh, TP)
+
+    # ------------------------------------------------------------ helpers
+    def _named(self, spec: P) -> NamedSharding:
+        return NamedSharding(self.mesh, spec)
+
+    def _fsdp(self, dim: int) -> Optional[Tuple[str, ...]]:
+        """Weight-FSDP axes (only for fsdp_style='weights')."""
+        if (self.mode == "train" and self.fsdp_style == "weights"
+                and _div(dim, self.dp_size)):
+            return self.dp
+        return None
+
+    def _tp(self, dim: int) -> Optional[str]:
+        return TP if _div(dim, self.tp_size) else None
+
+    def _tp_heads(self, n_heads: int) -> Optional[str]:
+        """TP only when whole heads map to shards — slicing INSIDE a
+        head puts the attention contraction dim on the mesh and drags
+        collectives into every blockwise-attention scan step (measured:
+        x16384-multiplied all-gathers; §Perf iter 2)."""
+        return TP if _div(n_heads, self.tp_size) else None
+
+    # --------------------------------------------------------- parameters
+    def param_spec(self, path, leaf) -> P:
+        names = [str(getattr(p, "key", getattr(p, "idx", p))) for p in path]
+        last = names[-1]
+        shape = leaf.shape
+        # stacked layer params carry a leading repeat axis; rules below
+        # address the trailing dims, so compute offset:
+        nd = leaf.ndim
+        if nd <= 1:
+            return P()
+        stacked = "layers" in names or "encoder" in names
+
+        def pads(*dims):
+            """PartitionSpec with leading Nones for the repeat axis."""
+            lead = (None,) * (nd - len(dims))
+            return P(*lead, *dims)
+
+        if last == "table":                      # (V, d)
+            return P(self._tp(shape[0]), self._fsdp(shape[1]))
+        if last == "w" and "head" in names:      # (d, V)
+            return P(self._fsdp(shape[0]), self._tp(shape[1]))
+        if last == "w" and "frontend_proj" in names:
+            return P(None, self._tp(shape[1]))
+        if last == "wq":
+            return pads(self._fsdp(shape[-2]),
+                        self._tp_heads(self.cfg.num_heads))
+        if last in ("wk", "wv"):
+            return pads(self._fsdp(shape[-2]),
+                        self._tp_heads(self.cfg.num_kv_heads))
+        if last == "wo":
+            return pads(self._tp_heads(self.cfg.num_heads),
+                        self._fsdp(shape[-1]))
+        if last in ("w_gate", "w_up", "w_down") and nd - (1 if stacked else 0) == 3:
+            e = self.cfg.num_experts_padded
+            expert_parallel = _div(e, self.tp_size)
+            if last in ("w_gate", "w_up"):       # (E, d, f)
+                if expert_parallel:
+                    return pads(TP, self._fsdp(shape[-2]), None)
+                return pads(None, self._fsdp(shape[-2]), self._tp(shape[-1]))
+            if expert_parallel:                  # w_down (E, f, d)
+                return pads(TP, None, self._fsdp(shape[-1]))
+            return pads(None, self._tp(shape[-2]), self._fsdp(shape[-1]))
+        if last in ("w_gate", "w_up"):           # dense mlp (d, f)
+            return pads(self._fsdp(shape[-2]), self._tp(shape[-1]))
+        if last == "w_down":                     # (f, d)
+            return pads(self._tp(shape[-2]), self._fsdp(shape[-1]))
+        if last == "router":                     # (d, E) — tiny, replicate
+            return pads(None, None)
+        if last in ("w_z", "w_x"):               # (d, di) — head-parallel
+            return pads(self._fsdp(shape[-2]), self._tp(shape[-1]))
+        if last in ("w_B", "w_C", "w_dt"):       # small shared paths
+            return pads(self._fsdp(shape[-2]), None)
+        if last == "out_proj":                   # (di, d) — contract TP dim
+            return pads(self._tp(shape[-2]), self._fsdp(shape[-1]))
+        if last == "conv_x_w":                   # (k, di)
+            return pads(None, self._tp(shape[-1]))
+        if last in ("conv_B_w", "conv_C_w"):
+            return pads(None, None)
+        return pads(*([None] * min(nd, 2)))
+
+    def params(self, abstract_params) -> Any:
+        return jax.tree_util.tree_map_with_path(
+            lambda p, l: self._named(self.param_spec(p, l)), abstract_params)
+
+    def opt_state(self, abstract_opt, abstract_params) -> Any:
+        if self.fsdp_style != "zero" or self.mode != "train":
+            psh = self.params(abstract_params)
+            return {"mu": psh, "nu": psh, "step": self._named(P())}
+        # ZeRO: moments shard over the batch axes on the first dim the
+        # param spec leaves free (params themselves stay pure-TP, so the
+        # only extra traffic is a per-step parameter all-gather, not
+        # per-layer-scan reshards).
+        def moment_spec(path, leaf):
+            spec = self.param_spec(path, leaf)
+            entries = list(spec) + [None] * (leaf.ndim - len(spec))
+            for i, e in enumerate(entries):
+                if e is None and _div(leaf.shape[i], self.dp_size):
+                    entries[i] = self.dp
+                    break
+            return self._named(P(*entries))
+
+        msh = jax.tree_util.tree_map_with_path(moment_spec, abstract_params)
+        return {"mu": msh, "nu": msh, "step": self._named(P())}
+
+    # ------------------------------------------- FSDP just-in-time unshard
+    def layer_constraint(self, abstract_params, key: str = "layers"):
+        """Callable resharding a scan-body layer slice: FSDP (batch-axis)
+        dims gather to replicated, TP dims stay sharded.
+
+        Measured effect (EXPERIMENTS.md §Perf iteration 1): without this,
+        GSPMD all-reduces full (tokens x d_ff) activations over the data
+        axis for every contracting-dim-sharded matmul inside the layer
+        scan — ~30-1000x the compute-term collective traffic.
+        """
+        if self.mode != "train":
+            return None
+        layers_abs = {key: abstract_params[key]}
+
+        def body_spec(path, leaf):
+            full = self.param_spec(path, leaf)
+            entries = list(full) + [None] * (leaf.ndim - len(full))
+            sliced = entries[1:]                 # drop the stack axis
+            cleaned = [e if e == TP else None for e in sliced]
+            return self._named(P(*cleaned))
+
+        spec_tree = jax.tree_util.tree_map_with_path(
+            body_spec, layers_abs)[key]
+
+        def constrain(slices):
+            return jax.tree.map(jax.lax.with_sharding_constraint,
+                                slices, spec_tree)
+
+        return constrain
+
+    # -------------------------------------------------------------- batch
+    def _batch_axes(self, b: int):
+        return self.dp if _div(b, self.dp_size) else None
+
+    def batch(self, abstract_batch) -> Any:
+        def spec(path, leaf):
+            bax = self._batch_axes(leaf.shape[0])
+            return self._named(P(bax, *([None] * (leaf.ndim - 1))))
+        return jax.tree_util.tree_map_with_path(spec, abstract_batch)
+
+    def grad_constraint(self, abstract_params):
+        """Pin the grad accumulator to the ZeRO-moment sharding."""
+        if self.mode != "train" or self.fsdp_style != "zero":
+            return None
+        msh = self.opt_state(None, abstract_params)["mu"]
+
+        def constrain(grads):
+            return jax.tree.map(jax.lax.with_sharding_constraint,
+                                grads, msh)
+        return constrain
+
+    def residual_constraint(self, seq_len: int):
+        """Sequence-parallel residual stream (Megatron SP, §Perf iter 5):
+        between blocks the (B, T, d) activations shard T over the TP
+        axis, so the per-layer TP boundary lowers to bf16
+        reduce-scatter + all-gather instead of fp32 all-reduce."""
+        if not _div(seq_len, self.tp_size):
+            return None
+        sh = self._named(P(None, TP, None))
+
+        def constrain(h):
+            return jax.lax.with_sharding_constraint(h, sh)
+        return constrain
+
+    def microbatch_constraint(self, abstract_batch, n_microbatches: int):
+        """Pin (mb, B/mb, ...) microbatches to full batch-parallelism."""
+        def spec(path, leaf):
+            per_mb = leaf.shape[0] // n_microbatches
+            bax = self._batch_axes(per_mb)
+            return self._named(P(None, bax, *([None] * (leaf.ndim - 1))))
+
+        spec_tree = jax.tree_util.tree_map_with_path(spec, abstract_batch)
+
+        def constrain(mbs):
+            return jax.tree.map(jax.lax.with_sharding_constraint,
+                                mbs, spec_tree)
+        return constrain
+
+    # ------------------------------------------------------- decode state
+    def decode_state(self, abstract_state) -> Any:
+        def spec(path, leaf):
+            names = [str(getattr(p, "key", "")) for p in path]
+            last = names[-1] if names else ""
+            s = leaf.shape
+            if last in ("k", "v") and leaf.ndim == 5:   # (R,B,W,kv,hd)
+                return self._named(P(None, self._batch_axes(s[1]),
+                                     self._tp(s[2]), None, None))
+            if last == "pos" and leaf.ndim == 3:        # cache pos (R,B,W)
+                return self._named(P(None, self._batch_axes(s[1]),
+                                     self._tp(s[2])))
+            if last == "pos":                           # decode pos (B,)
+                return self._named(P(self._batch_axes(s[0])))
+            if last == "h" and leaf.ndim == 5:          # ssm (R,B,nh,p,n)
+                return self._named(P(None, self._batch_axes(s[1]),
+                                     self._tp(s[2]), None, None))
+            if last == "conv" and leaf.ndim == 4:       # (R,B,k-1,ch)
+                return self._named(P(None, self._batch_axes(s[1]),
+                                     None, self._tp(s[3])))
+            if leaf.ndim == 5:                          # cross memories
+                return self._named(P(None, self._batch_axes(s[1]),
+                                     self._tp(s[2]), None, None))
+            bax = self._batch_axes(s[0]) if leaf.ndim else None
+            return self._named(P(bax, *([None] * max(leaf.ndim - 1, 0))))
+        return jax.tree_util.tree_map_with_path(spec, abstract_state)
+
+    def token(self, b: int) -> NamedSharding:
+        return self._named(P(self._batch_axes(b)))
+
+    def logits(self, b: int, v: int) -> NamedSharding:
+        return self._named(P(self._batch_axes(b), self._tp(v)))
+
+    def replicated(self) -> NamedSharding:
+        return self._named(P())
+
+    def replicate_tree(self, tree) -> Any:
+        return jax.tree.map(lambda _: self._named(P()), tree)

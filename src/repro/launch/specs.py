@@ -1,0 +1,119 @@
+"""Abstract input/state specs per (architecture x input shape).
+
+Everything here is ``jax.ShapeDtypeStruct`` — weak-type-correct,
+shardable, and never allocated — which is what lets full-size 8B-52B
+configs lower and compile on this CPU-only container.
+
+Shape semantics (see system spec):
+  * train_*    -> ``train_step``  {tokens, (frontend_embeds)}
+  * prefill_*  -> ``prefill_step`` (full prompt forward + cache seeding)
+  * decode_*   -> ``serve_step``   ONE token against a seq_len KV cache
+  * long_500k  -> serve_step with sub-quadratic attention: native for
+    ssm/hybrid; sliding-window (16384) variant for dense/vlm archs; the
+    seamless decoder uses windowed self-attn + O(S) cross-attn.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import encdec as encdec_lib
+from repro.models import transformer as tf_lib
+from repro.models.config import InputShape, ModelConfig, INPUT_SHAPES
+from repro.optim import init_opt_state
+
+LONG_CONTEXT_WINDOW = 16384
+
+
+def shape_config(cfg: ModelConfig, shape: InputShape) -> ModelConfig:
+    """Per-shape config variant (sliding window for dense long-context)."""
+    if (shape.name == "long_500k" and cfg.sliding_window == 0
+            and cfg.family in ("dense", "vlm", "audio")):
+        return dataclasses.replace(cfg, sliding_window=LONG_CONTEXT_WINDOW)
+    return cfg
+
+
+def supported(cfg: ModelConfig, shape: InputShape) -> Tuple[bool, str]:
+    """Every assigned (arch x shape) pair is runnable (DESIGN.md §4)."""
+    return True, ""
+
+
+def _tok(b, t):
+    return jax.ShapeDtypeStruct((b, t), jnp.int32)
+
+
+def _front(cfg: ModelConfig, b: int, n: Optional[int] = None):
+    n = n or cfg.frontend_tokens or 256
+    fd = cfg.frontend_dim or cfg.d_model
+    return jax.ShapeDtypeStruct((b, n, fd), jnp.dtype(cfg.dtype))
+
+
+# ------------------------------------------------------------------ inputs
+def train_batch_specs(cfg: ModelConfig, shape: InputShape) -> Dict:
+    b, t = shape.global_batch, shape.seq_len
+    batch = {"tokens": _tok(b, t)}
+    if cfg.is_encoder_decoder:
+        # audio: seq_len frames in, seq_len text tokens out
+        batch["frontend_embeds"] = _front(cfg, b, t)
+    elif cfg.frontend:
+        batch["frontend_embeds"] = _front(cfg, b)   # image patches
+    return batch
+
+
+def prefill_batch_specs(cfg: ModelConfig, shape: InputShape) -> Dict:
+    return train_batch_specs(cfg, shape)
+
+
+def abstract_params(cfg: ModelConfig):
+    from repro.models import init_params
+    key = jax.ShapeDtypeStruct((2,), jnp.uint32)
+    return jax.eval_shape(lambda k: init_params(cfg, k), key)
+
+
+def abstract_opt_state(cfg: ModelConfig, params_abs=None):
+    params_abs = params_abs or abstract_params(cfg)
+    return jax.eval_shape(init_opt_state, params_abs)
+
+
+def abstract_decode_state(cfg: ModelConfig, shape: InputShape):
+    """State pytree for serve_step at this shape (cache len = seq_len)."""
+    b, cache_len = shape.global_batch, shape.seq_len
+    dt = jnp.dtype(cfg.dtype)
+
+    def build():
+        if cfg.is_encoder_decoder:
+            caches = encdec_lib.init_dec_caches(cfg, b, cache_len, dt)
+            pattern, reps = cfg.pattern()
+            hd = cfg.resolved_head_dim
+            mem = tuple(
+                {"k": jnp.zeros((reps, b, cache_len, cfg.num_kv_heads, hd), dt),
+                 "v": jnp.zeros((reps, b, cache_len, cfg.num_kv_heads, hd), dt)}
+                for _ in pattern)
+            return {"caches": caches, "memories": mem,
+                    "pos": jnp.zeros((b,), jnp.int32)}
+        caches = tf_lib.init_caches(cfg, b, cache_len, dt)
+        return {"caches": caches, "pos": jnp.zeros((b,), jnp.int32)}
+
+    return jax.eval_shape(build)
+
+
+def decode_token_spec(shape: InputShape):
+    return jax.ShapeDtypeStruct((shape.global_batch,), jnp.int32)
+
+
+def input_specs(cfg: ModelConfig, shape_name: str) -> Dict:
+    """All abstract inputs for (cfg, shape) keyed by step argument."""
+    shape = INPUT_SHAPES[shape_name]
+    cfg = shape_config(cfg, shape)
+    if shape.kind == "train":
+        return {"cfg": cfg, "kind": "train",
+                "batch": train_batch_specs(cfg, shape)}
+    if shape.kind == "prefill":
+        return {"cfg": cfg, "kind": "prefill",
+                "batch": prefill_batch_specs(cfg, shape)}
+    return {"cfg": cfg, "kind": "decode",
+            "token": decode_token_spec(shape),
+            "state": abstract_decode_state(cfg, shape)}

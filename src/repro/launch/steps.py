@@ -1,0 +1,108 @@
+"""jit-able step functions: train / prefill / decode (serve).
+
+These close over a ``ModelConfig`` and are what ``dryrun.py`` lowers and
+``train.py`` / ``serve.py`` execute.  Training microbatches via
+``lax.scan`` grad accumulation (+ per-layer remat) so the 4k-sequence
+shapes fit HBM on the production mesh.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import decode_step, loss_fn, prefill
+from repro.models.config import ModelConfig
+from repro.optim import AdamWConfig, adamw_update
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: AdamWConfig = AdamWConfig(),
+                    moe_method: str = "scatter", n_microbatches: int = 1,
+                    remat: bool = True, layer_constraint=None,
+                    microbatch_constraint=None,
+                    residual_constraint=None,
+                    grad_constraint=None) -> Callable:
+    """(params, opt_state, batch) -> (params, opt_state, metrics).
+
+    ``microbatch_constraint`` pins the post-reshape (mb, B/mb, ...) batch
+    sharding: without it GSPMD splits the batch tiling across the
+    microbatch axis and each microbatch runs only partially
+    batch-parallel (measured §Perf iter 4).
+    """
+
+    def one_loss(params, mb):
+        loss, metrics = loss_fn(cfg, params, mb, moe_method=moe_method,
+                                remat=remat,
+                                layer_constraint=layer_constraint,
+                                residual_constraint=residual_constraint)
+        return loss, metrics
+
+    def train_step(params, opt_state, batch):
+        if n_microbatches <= 1:
+            (loss, metrics), grads = jax.value_and_grad(
+                one_loss, has_aux=True)(params, batch)
+        else:
+            def split(x):
+                return x.reshape((n_microbatches, x.shape[0] // n_microbatches)
+                                 + x.shape[1:])
+            mbs = jax.tree.map(split, batch)
+            if microbatch_constraint is not None:
+                mbs = microbatch_constraint(mbs)
+
+            def acc_step(carry, mb):
+                g_acc, l_acc = carry
+                (l, m), g = jax.value_and_grad(one_loss, has_aux=True)(
+                    params, mb)
+                g_acc = jax.tree.map(jnp.add, g_acc, g)
+                if grad_constraint is not None:
+                    # accumulator sharded like the ZeRO moments: per-mb
+                    # weight-grad sync becomes a reduce-scatter into the
+                    # shard instead of a full all-reduce (§Perf iter 8)
+                    g_acc = grad_constraint(g_acc)
+                return (g_acc, l_acc + l), m
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                              params)
+            if grad_constraint is not None:
+                g0 = grad_constraint(g0)
+            (grads, loss), ms = jax.lax.scan(acc_step, (g0, 0.0), mbs)
+            grads = jax.tree.map(lambda g: g / n_microbatches, grads)
+            loss = loss / n_microbatches
+            metrics = jax.tree.map(lambda x: jnp.mean(x, axis=0), ms)
+        params, opt_state, om = adamw_update(params, grads, opt_state,
+                                             opt_cfg)
+        return params, opt_state, {**metrics, **om, "loss": loss}
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, cache_len: int,
+                      moe_method: str = "scatter") -> Callable:
+    """(params, batch) -> (first_token, logits, state)."""
+
+    def prefill_step(params, batch):
+        logits, state = prefill(cfg, params, batch, cache_len,
+                                moe_method=moe_method)
+        token = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return token, logits, state
+
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig, moe_method: str = "scatter"
+                    ) -> Callable:
+    """(params, token, state) -> (next_token, logits, new_state).
+
+    ONE decode step against the resident KV/SSM cache — what the decode
+    input shapes lower.
+    """
+
+    def serve_step(params, token, state):
+        logits, new_state = decode_step(cfg, params, token, state,
+                                        moe_method=moe_method)
+        new_token = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return new_token, logits, new_state
+
+    return serve_step

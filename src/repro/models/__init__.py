@@ -1,0 +1,10 @@
+from .config import (ATTN, DENSE_FF, INPUT_SHAPES, MAMBA, MOE_FF, NO_FF,
+                     InputShape, ModelConfig)
+from .api import (decode_step, greedy_generate, init_params, loss_fn,
+                  prefill)
+
+__all__ = [
+    "ATTN", "DENSE_FF", "INPUT_SHAPES", "MAMBA", "MOE_FF", "NO_FF",
+    "InputShape", "ModelConfig", "decode_step", "greedy_generate",
+    "init_params", "loss_fn", "prefill",
+]

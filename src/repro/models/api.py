@@ -1,0 +1,146 @@
+"""Unified model API — family dispatch for init / loss / prefill / decode.
+
+Every architecture (dense / moe / ssm / hybrid / vlm / audio) is driven
+through the same four functions, which is what lets configs, the
+launcher, the OD-MoE engine and the dry-run treat the model zoo
+uniformly:
+
+    params              = init_params(cfg, key)
+    loss, metrics       = loss_fn(cfg, params, batch)
+    logits, state       = prefill(cfg, params, batch, max_cache_len)
+    logits, state       = decode_step(cfg, params, token, state, pos)
+
+``state`` bundles caches (KV / SSM / cross-memories) as one pytree.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import encdec as encdec_lib
+from . import transformer as tf_lib
+from .config import ModelConfig
+
+
+def init_params(cfg: ModelConfig, key) -> dict:
+    if cfg.is_encoder_decoder:
+        return encdec_lib.init_encdec(key, cfg)
+    return tf_lib.init_lm(key, cfg)
+
+
+# -------------------------------------------------------------------- train
+def loss_fn(cfg: ModelConfig, params, batch, moe_method: str = "scatter",
+            remat: bool = False, layer_constraint=None,
+            residual_constraint=None) -> Tuple[jax.Array, dict]:
+    """Next-token cross-entropy (+ MoE load-balance aux).
+
+    batch: {"tokens": (B,T) int32, "loss_mask": (B,T) optional,
+            "frontend_embeds": (B,N,fd) for vlm/audio}.
+    """
+    tokens = batch["tokens"]
+    if cfg.is_encoder_decoder:
+        logits, aux = encdec_lib.encdec_seq(
+            cfg, params, batch["frontend_embeds"], tokens, remat=remat,
+            layer_constraint=layer_constraint)
+        n_front = 0
+    else:
+        logits, aux, _ = tf_lib.lm_seq(
+            cfg, params, tokens,
+            frontend_embeds=batch.get("frontend_embeds"),
+            moe_method=moe_method, remat=remat,
+            layer_constraint=layer_constraint,
+            residual_constraint=residual_constraint)
+        n_front = aux["n_front"]
+        logits = logits[:, n_front:]
+    targets = tokens[:, 1:]
+    logits = logits[:, :-1]
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    mask = batch.get("loss_mask")
+    mask = jnp.ones_like(nll) if mask is None else mask[:, 1:].astype(nll.dtype)
+    ce = jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    lb = aux.get("load_balance_loss", 0.0)
+    loss = ce + cfg.router_aux_weight * lb
+    return loss, {"ce": ce, "load_balance_loss": lb, "loss": loss}
+
+
+# ------------------------------------------------------------------ serving
+def prefill(cfg: ModelConfig, params, batch, max_cache_len: int,
+            moe_method: str = "scatter"):
+    """Process the prompt; return (last-token logits, decode state)."""
+    tokens = batch["tokens"]
+    if cfg.is_encoder_decoder:
+        enc_out = encdec_lib.encode(cfg, params, batch["frontend_embeds"])
+        memories = encdec_lib.build_memories(cfg, params, enc_out)
+        b = tokens.shape[0]
+        # run the decoder prefix through in one pass and seed the caches
+        logits, aux, caches = tf_like_prefill_encdec(
+            cfg, params, tokens, memories, max_cache_len)
+        state = {"caches": caches, "memories": memories,
+                 "pos": jnp.full((b,), tokens.shape[1], jnp.int32)}
+        return logits, state
+    logits, aux, caches = tf_lib.lm_seq(
+        cfg, params, tokens, frontend_embeds=batch.get("frontend_embeds"),
+        make_cache=True, max_cache_len=max_cache_len, moe_method=moe_method)
+    b, t = tokens.shape
+    n_front = aux["n_front"]
+    state = {"caches": caches,
+             "pos": jnp.full((b,), t + n_front, jnp.int32)}
+    return logits[:, -1], state
+
+
+def tf_like_prefill_encdec(cfg, params, tokens, memories, max_cache_len):
+    """Decoder-side prefill for enc-dec: full pass + cache seeding."""
+    from .blocks import block_seq
+    from .layers import embed as _embed
+    pattern, _ = cfg.pattern()
+    x = _embed(tokens, params["embed"])
+    b, t, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(t, dtype=jnp.int32), (b, t))
+
+    def body(h, slices):
+        lp, mem = slices
+        caches = []
+        for i, kinds in enumerate(pattern):
+            h, _, cache = block_seq(cfg, lp[i], kinds, h, positions,
+                                    causal=True, memory=mem[i],
+                                    make_cache=True,
+                                    max_cache_len=max_cache_len)
+            caches.append(cache)
+        return h, tuple(caches)
+
+    x, caches = jax.lax.scan(body, x, (params["layers"], memories))
+    return tf_lib.logits_from_hidden(cfg, params, x)[:, -1], {}, caches
+
+
+def decode_step(cfg: ModelConfig, params, token, state, *,
+                moe_method: str = "dense"):
+    """One greedy-decode step.  token: (B,) int32."""
+    pos = state["pos"]
+    if cfg.is_encoder_decoder:
+        logits, caches = encdec_lib.encdec_decode(
+            cfg, params, token, state["caches"], state["memories"], pos)
+        new_state = dict(state, caches=caches, pos=pos + 1)
+        return logits, new_state
+    logits, caches, aux = tf_lib.lm_decode(
+        cfg, params, token, state["caches"], pos, moe_method=moe_method)
+    new_state = dict(state, caches=caches, pos=pos + 1)
+    return logits, new_state
+
+
+def greedy_generate(cfg: ModelConfig, params, batch, num_tokens: int,
+                    max_cache_len: int = 0, moe_method: str = "dense"):
+    """Reference autoregressive generation (prefill + decode loop)."""
+    max_cache_len = max_cache_len or (batch["tokens"].shape[1] + num_tokens)
+    logits, state = prefill(cfg, params, batch, max_cache_len,
+                            moe_method=moe_method)
+    token = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    out = [token]
+    for _ in range(num_tokens - 1):
+        logits, state = decode_step(cfg, params, token, state,
+                                    moe_method=moe_method)
+        token = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        out.append(token)
+    return jnp.stack(out, axis=1)

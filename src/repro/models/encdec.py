@@ -1,0 +1,140 @@
+"""Encoder-decoder backbone (seamless-m4t-v2 style, audio -> text).
+
+The speech encoder consumes precomputed frame embeddings from the STUB
+audio frontend (per the spec carve-out) and runs bidirectional attention;
+the text decoder is causal with per-layer cross-attention over the
+encoder memory.  Cross K/V are computed once per request
+(``build_memories``) so each decode step is O(S_enc) — linear — which is
+why the ``long_500k`` decode shape runs for this architecture.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import attention as attn_lib
+from .blocks import block_decode, block_seq, init_block, init_block_cache
+from .config import ATTN, DENSE_FF, ModelConfig
+from .layers import _dense_init, apply_norm, embed, init_embedding, init_norm
+from .transformer import logits_from_hidden
+
+ENC_KINDS = (ATTN, DENSE_FF)
+
+
+# --------------------------------------------------------------------- init
+def init_encdec(key, cfg: ModelConfig) -> dict:
+    dt = jnp.dtype(cfg.dtype)
+    k_e, k_d, k_t, k_h, k_p = jax.random.split(key, 5)
+    fd = cfg.frontend_dim or cfg.d_model
+
+    enc_keys = jax.random.split(k_e, cfg.num_encoder_layers)
+    enc_layers = [init_block(k, cfg, ENC_KINDS) for k in enc_keys]
+    enc_stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *enc_layers)
+
+    pattern, reps = cfg.pattern()
+    dec_keys = jax.random.split(k_d, len(pattern) * reps)
+    dec_stacked = []
+    for i, kinds in enumerate(pattern):
+        per_rep = [init_block(dec_keys[i * reps + r], cfg, kinds,
+                              with_cross=True) for r in range(reps)]
+        dec_stacked.append(jax.tree.map(lambda *xs: jnp.stack(xs), *per_rep))
+
+    params = {
+        "frontend_proj": {"w": _dense_init(k_p, (fd, cfg.d_model), dt),
+                          "b": jnp.zeros((cfg.d_model,), dt)},
+        "encoder": enc_stacked,
+        "enc_norm": init_norm(cfg.d_model, dt),
+        "embed": init_embedding(k_t, cfg.vocab_size, cfg.d_model, dt),
+        "layers": tuple(dec_stacked),
+        "final_norm": init_norm(cfg.d_model, dt),
+    }
+    if not cfg.tie_embeddings:
+        params["head"] = {"w": _dense_init(k_h, (cfg.d_model, cfg.vocab_size), dt)}
+    return params
+
+
+def init_dec_caches(cfg: ModelConfig, batch: int, max_len: int, dtype):
+    pattern, reps = cfg.pattern()
+    out = []
+    for kinds in pattern:
+        c = init_block_cache(cfg, kinds, batch, max_len, dtype)
+        out.append(jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (reps,) + a.shape), c))
+    return tuple(out)
+
+
+# ----------------------------------------------------------------- encoder
+def encode(cfg: ModelConfig, params, frame_embeds,
+           remat: bool = False) -> jax.Array:
+    """frame_embeds: (B, S, frontend_dim) -> encoder memory (B, S, d)."""
+    proj = params["frontend_proj"]
+    x = frame_embeds @ proj["w"] + proj["b"]
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+
+    def body(h, lp):
+        h, _, _ = block_seq(cfg, lp, ENC_KINDS, h, positions, causal=False)
+        return h, 0
+
+    scan_body = jax.checkpoint(body) if remat else body
+    x, _ = jax.lax.scan(scan_body, x, params["encoder"])
+    return apply_norm(cfg, x, params["enc_norm"])
+
+
+def build_memories(cfg: ModelConfig, params, enc_out) -> Tuple:
+    """Per-decoder-layer cross K/V, stacked over repeats."""
+    pattern, reps = cfg.pattern()
+    out = []
+    for i in range(len(pattern)):
+        cross_stacked = params["layers"][i]["cross"]
+
+        def one(rep_params):
+            return attn_lib.cross_attn_memory(cfg, rep_params, enc_out)
+
+        out.append(jax.vmap(one)(cross_stacked))
+    return tuple(out)
+
+
+# ----------------------------------------------------------------- decoder
+def encdec_seq(cfg: ModelConfig, params, frame_embeds, tokens,
+               remat: bool = False, layer_constraint=None):
+    """Teacher-forced full forward.  Returns (logits, aux)."""
+    enc_out = encode(cfg, params, frame_embeds)
+    memories = build_memories(cfg, params, enc_out)
+    pattern, _ = cfg.pattern()
+    x = embed(tokens, params["embed"])
+    b, t, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(t, dtype=jnp.int32), (b, t))
+
+    def body(h, slices):
+        lp, mem = slices
+        if layer_constraint is not None:
+            lp = layer_constraint(lp)
+        for i, kinds in enumerate(pattern):
+            h, _, _ = block_seq(cfg, lp[i], kinds, h, positions,
+                                causal=True, memory=mem[i])
+        return h, 0
+
+    scan_body = jax.checkpoint(body) if remat else body
+    x, _ = jax.lax.scan(scan_body, x, (params["layers"], memories))
+    return logits_from_hidden(cfg, params, x), {"load_balance_loss": 0.0}
+
+
+def encdec_decode(cfg: ModelConfig, params, token, caches, memories, pos):
+    """One decoder token against KV caches + precomputed cross memories."""
+    pattern, _ = cfg.pattern()
+    x = embed(token[:, None], params["embed"])
+
+    def body(h, slices):
+        lp, lc, mem = slices
+        new_caches = []
+        for i, kinds in enumerate(pattern):
+            h, c, _ = block_decode(cfg, lp[i], kinds, h, lc[i], pos,
+                                   memory=mem[i])
+            new_caches.append(c)
+        return h, tuple(new_caches)
+
+    x, new_caches = jax.lax.scan(body, x, (params["layers"], caches, memories))
+    return logits_from_hidden(cfg, params, x)[:, 0], new_caches

@@ -1,0 +1,28 @@
+"""STUB modality frontends (the one spec-allowed carve-out).
+
+[vlm] and [audio] architectures specify only the transformer backbone;
+the vision encoder / audio codec are not implemented.  These helpers
+produce the *embedding tensors the real frontends would emit* — correct
+shape, dtype and scale — so the backbone, serving path, and dry-run all
+consume exactly what a ViT/conv-codec would hand them.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+
+
+def frontend_embed_shape(cfg: ModelConfig, batch: int):
+    """Shape of the precomputed frame/patch embeddings."""
+    n = cfg.frontend_tokens or 256
+    d = cfg.frontend_dim or cfg.d_model
+    return (batch, n, d)
+
+
+def synthetic_frontend_embeds(cfg: ModelConfig, key, batch: int,
+                              dtype=jnp.float32) -> jax.Array:
+    """Random unit-scale embeddings standing in for ViT/codec output."""
+    shape = frontend_embed_shape(cfg, batch)
+    return jax.random.normal(key, shape, dtype)

@@ -1,0 +1,204 @@
+"""Mamba2 (SSD — state-space duality) mixer.  [arXiv:2405.21060]
+
+Sequence mode uses the chunked dual form: an attention-like intra-chunk
+term plus a ``lax.scan`` over chunk states for the inter-chunk recurrence
+(mirrored by the ``ssd_scan`` Pallas kernel on TPU).  Decode mode is the
+O(1)-per-token recurrence on a persistent
+``{"h": (B,H,P,N), "conv": (B, d_conv-1, conv_ch)}`` state — this is what
+makes the ssm/hybrid architectures natively sub-quadratic for the
+``long_500k`` shape.
+
+Projections are SPLIT (w_z / w_x / w_B / w_C / w_dt + per-component
+convs) rather than fused: the z/x paths shard head-wise on the tensor-
+parallel axis while the small shared B/C/dt paths replicate — a fused
+in_proj cannot express that layout (this was measured: the fused version
+left all mamba parameters replicated on the serve mesh; see
+EXPERIMENTS.md §Perf).
+
+ngroups is fixed at 1 (as in the 2.7b reference model).
+Notation: H = ssm heads, P = head dim, N = ssm state size, Q = chunk.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import _dense_init, rms_norm
+
+NEG_INF = -1e30
+
+
+# --------------------------------------------------------------------- init
+def init_mamba(key, cfg: ModelConfig) -> dict:
+    d, di, ns, nh = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    ks = jax.random.split(key, 9)
+    dt = jnp.dtype(cfg.dtype)
+    a_init = jnp.log(jnp.linspace(1.0, 16.0, nh))
+    return {
+        "w_z": _dense_init(ks[0], (d, di), dt),
+        "w_x": _dense_init(ks[1], (d, di), dt),
+        "w_B": _dense_init(ks[2], (d, ns), dt),
+        "w_C": _dense_init(ks[3], (d, ns), dt),
+        "w_dt": _dense_init(ks[4], (d, nh), dt),
+        "conv_x_w": _dense_init(ks[5], (cfg.ssm_conv, di), dt, scale=0.5),
+        "conv_x_b": jnp.zeros((di,), dt),
+        "conv_B_w": _dense_init(ks[6], (cfg.ssm_conv, ns), dt, scale=0.5),
+        "conv_B_b": jnp.zeros((ns,), dt),
+        "conv_C_w": _dense_init(ks[7], (cfg.ssm_conv, ns), dt, scale=0.5),
+        "conv_C_b": jnp.zeros((ns,), dt),
+        "A_log": a_init.astype(dt),
+        "dt_bias": jnp.full((nh,), -2.0, dt),   # softplus(-2) ~ 0.13
+        "D": jnp.ones((nh,), dt),
+        "norm": {"scale": jnp.ones((di,), dt)},
+        "out_proj": _dense_init(ks[8], (di, d), dt),
+    }
+
+
+def init_ssm_state(cfg: ModelConfig, batch: int, dtype) -> dict:
+    nh, p, n = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    conv_ch = cfg.d_inner + 2 * cfg.ssm_state
+    return {
+        "h": jnp.zeros((batch, nh, p, n), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, conv_ch), dtype),
+    }
+
+
+# ------------------------------------------------------------------ helpers
+def _causal_conv(w, b, u):
+    """Depthwise causal conv over (B, T, C), kernel size k."""
+    k = w.shape[0]
+    pad = jnp.pad(u, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(pad[:, i: i + u.shape[1]] * w[i] for i in range(k))
+    return jax.nn.silu(out + b)
+
+
+def _conv_step(w, b, state, u_t):
+    """One-token causal conv.  state: (B, k-1, C); u_t: (B, C)."""
+    window = jnp.concatenate([state, u_t[:, None]], axis=1)   # (B,k,C)
+    out = jnp.einsum("bkc,kc->bc", window, w) + b
+    return jax.nn.silu(out), window[:, 1:]
+
+
+def _gates(cfg: ModelConfig, params, dt_raw):
+    """dt (B,...,H) -> (dt, log_a) with a = exp(dt * -exp(A_log))."""
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + params["dt_bias"].astype(jnp.float32))
+    log_a = dt * (-jnp.exp(params["A_log"].astype(jnp.float32)))
+    return dt, log_a
+
+
+def _split_conv_state(cfg: ModelConfig, conv):
+    di, ns = cfg.d_inner, cfg.ssm_state
+    return conv[..., :di], conv[..., di:di + ns], conv[..., di + ns:]
+
+
+# --------------------------------------------------------------- sequence
+def mamba_seq(cfg: ModelConfig, params, x, initial_state: dict = None
+              ) -> Tuple[jax.Array, dict]:
+    """Full-sequence SSD.  x: (B, T, d); chunk padding handled."""
+    b, t, _ = x.shape
+    nh, p, n, q = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state, cfg.ssm_chunk
+    q = min(q, t)
+    pad = (-t) % q
+    z = x @ params["w_z"]
+    x_raw = x @ params["w_x"]
+    B_raw = x @ params["w_B"]
+    C_raw = x @ params["w_C"]
+    dt_raw = x @ params["w_dt"]
+    xs = _causal_conv(params["conv_x_w"], params["conv_x_b"], x_raw)
+    B = _causal_conv(params["conv_B_w"], params["conv_B_b"], B_raw)
+    C = _causal_conv(params["conv_C_w"], params["conv_C_b"], C_raw)
+    if pad:
+        xs, B, C = (jnp.pad(v, ((0, 0), (0, pad), (0, 0)))
+                    for v in (xs, B, C))
+        dt_raw = jnp.pad(dt_raw, ((0, 0), (0, pad), (0, 0)))
+    tt = t + pad
+    nc = tt // q
+    xh = xs.reshape(b, nc, q, nh, p).astype(jnp.float32)
+    Bc = B.reshape(b, nc, q, n).astype(jnp.float32)
+    Cc = C.reshape(b, nc, q, n).astype(jnp.float32)
+    dt, log_a = _gates(cfg, params, dt_raw.reshape(b, nc, q, nh))
+    if pad:
+        # padded steps must be identity transitions: dt = 0 -> a = 1,
+        # no state injection — otherwise h_last is corrupted.
+        step_valid = (jnp.arange(tt) < t).reshape(1, nc, q, 1)
+        dt = dt * step_valid
+        log_a = log_a * step_valid
+    seg = jnp.cumsum(log_a, axis=2)                                # (B,nc,Q,H)
+
+    # ---- intra-chunk (attention-like dual form)
+    rel = seg[:, :, :, None, :] - seg[:, :, None, :, :]            # (B,nc,Q,S,H)
+    causal = jnp.tril(jnp.ones((q, q), bool))[None, None, :, :, None]
+    decay = jnp.exp(jnp.where(causal, rel, NEG_INF))
+    cb = jnp.einsum("bcqn,bcsn->bcqs", Cc, Bc)
+    m = cb[..., None] * decay * dt[:, :, None, :, :]               # (B,nc,Q,S,H)
+    y_intra = jnp.einsum("bcqsh,bcshp->bcqhp", m, xh)
+
+    # ---- chunk boundary states
+    tail = seg[:, :, -1:, :] - seg                                 # decay to end
+    s_chunk = jnp.einsum("bcsh,bcsn,bcshp->bchpn",
+                         dt * jnp.exp(tail), Bc, xh)               # (B,nc,H,P,N)
+    chunk_decay = jnp.exp(seg[:, :, -1, :])                        # (B,nc,H)
+
+    # ---- inter-chunk recurrence over chunk index (ssd_scan kernel on TPU)
+    h0 = (initial_state["h"] if initial_state is not None
+          else jnp.zeros((b, nh, p, n), jnp.float32))
+
+    def step(h, inp):
+        s_c, dec = inp
+        h_out = h                                                  # state entering chunk
+        h = dec[..., None, None] * h + s_c
+        return h, h_out
+
+    h_last, h_in = jax.lax.scan(
+        step, h0,
+        (jnp.moveaxis(s_chunk, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)))
+    h_in = jnp.moveaxis(h_in, 0, 1)                                # (B,nc,H,P,N)
+    y_inter = jnp.einsum("bcqn,bchpn->bcqhp", Cc, h_in) \
+        * jnp.exp(seg)[..., None]
+
+    y = (y_intra + y_inter).reshape(b, tt, nh * p)[:, :t]
+    y = y + (params["D"].astype(jnp.float32)[None, None, :, None]
+             * xh.reshape(b, tt, nh, p)[:, :t]).reshape(b, t, nh * p)
+    y = rms_norm(y.astype(x.dtype) * jax.nn.silu(z), params["norm"],
+                 cfg.norm_eps)
+    out = y @ params["out_proj"]
+    k = cfg.ssm_conv
+    # conv state = last k-1 *pre-conv* channel inputs (left-pad short seqs)
+    raw = jnp.concatenate([x_raw, B_raw, C_raw], axis=-1)
+    padded = jnp.pad(raw, ((0, 0), (k - 1, 0), (0, 0)))
+    conv_state = padded[:, padded.shape[1] - (k - 1):]
+    return out, {"h": h_last, "conv": conv_state.astype(x.dtype)}
+
+
+# ----------------------------------------------------------------- decode
+def mamba_decode(cfg: ModelConfig, params, x, state: dict
+                 ) -> Tuple[jax.Array, dict]:
+    """One-token recurrence.  x: (B, 1, d)."""
+    b = x.shape[0]
+    nh, p, n = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    x0 = x[:, 0]
+    z = x0 @ params["w_z"]
+    x_raw = x0 @ params["w_x"]
+    B_raw = x0 @ params["w_B"]
+    C_raw = x0 @ params["w_C"]
+    dt_raw = x0 @ params["w_dt"]
+    cx, cB, cC = _split_conv_state(cfg, state["conv"])
+    xs, cx = _conv_step(params["conv_x_w"], params["conv_x_b"], cx, x_raw)
+    B, cB = _conv_step(params["conv_B_w"], params["conv_B_b"], cB, B_raw)
+    C, cC = _conv_step(params["conv_C_w"], params["conv_C_b"], cC, C_raw)
+    conv_state = jnp.concatenate([cx, cB, cC], axis=-1)
+    xh = xs.reshape(b, nh, p).astype(jnp.float32)
+    dt, log_a = _gates(cfg, params, dt_raw)
+    a = jnp.exp(log_a)                                             # (B,H)
+    h = state["h"] * a[..., None, None] + jnp.einsum(
+        "bh,bn,bhp->bhpn", dt, B.astype(jnp.float32), xh)
+    y = jnp.einsum("bn,bhpn->bhp", C.astype(jnp.float32), h)
+    y = y + params["D"].astype(jnp.float32)[None, :, None] * xh
+    y = y.reshape(b, nh * p).astype(x.dtype) * jax.nn.silu(z)
+    y = rms_norm(y, params["norm"], cfg.norm_eps)
+    out = (y @ params["out_proj"])[:, None]
+    return out, {"h": h, "conv": conv_state}

@@ -1,0 +1,179 @@
+"""Top-k routed Mixture-of-Experts FFN.
+
+Routing (Mixtral-style): softmax over the top-k router logits only.
+Three dispatch strategies, selectable per call site:
+
+  * ``dense``   — every expert computes every token, combined with the
+                  (mostly zero) gate matrix.  Exact, no drops; O(N·E).
+                  Used by CPU smoke tests and as the routing oracle.
+  * ``scatter`` — capacity-based gather/GEMM/scatter-add.  Each expert
+                  owns ``C`` slots; tokens are placed by cumulative
+                  position and over-capacity tokens fall through on the
+                  residual path.  No (N,E,C) one-hot tensor is ever
+                  materialized.  Default for compiled SPMD paths.
+  * ``einsum``  — classic GShard one-hot dispatch/combine einsums.  Kept
+                  as an alternative for the §Perf sharding comparison.
+
+The router also returns the per-token top-k expert ids — the signal the
+OD-MoE engine and the SEP predictor consume.
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import _dense_init
+
+
+# --------------------------------------------------------------------- init
+def init_moe(key, cfg: ModelConfig) -> dict:
+    """Router has ``num_experts`` outputs; expert weights carry
+    ``num_experts_padded`` rows (pad rows are inert — never routed) so
+    the expert axis divides the tensor-parallel mesh axis."""
+    d, f, e = cfg.d_model, cfg.d_expert_resolved, cfg.num_experts
+    ep = cfg.num_experts_padded
+    kr, kg, ku, kd = jax.random.split(key, 4)
+    dt = jnp.dtype(cfg.dtype)
+    return {
+        "router": _dense_init(kr, (d, e), dt),
+        "w_gate": _dense_init(kg, (ep, d, f), dt),
+        "w_up": _dense_init(ku, (ep, d, f), dt),
+        "w_down": _dense_init(kd, (ep, f, d), dt),
+    }
+
+
+# ------------------------------------------------------------------- router
+def route(cfg: ModelConfig, params, x) -> Tuple[jax.Array, jax.Array, dict]:
+    """x: (N, d) -> (topk_idx (N,k), topk_gate (N,k), aux)."""
+    logits = (x.astype(jnp.float32) @ params["router"].astype(jnp.float32))
+    topk_logits, topk_idx = jax.lax.top_k(logits, cfg.top_k)
+    topk_gate = jax.nn.softmax(topk_logits, axis=-1)
+    # Switch-style load-balance loss: E * sum_e f_e * p_e
+    probs = jax.nn.softmax(logits, axis=-1)
+    e = cfg.num_experts
+    f_e = jnp.mean(
+        jnp.sum(jax.nn.one_hot(topk_idx, e, dtype=jnp.float32), axis=1), axis=0)
+    p_e = jnp.mean(probs, axis=0)
+    lb_loss = e * jnp.sum(f_e * p_e) / cfg.top_k
+    aux = {"load_balance_loss": lb_loss, "router_logits": logits}
+    return topk_idx, topk_gate, aux
+
+
+def capacity(cfg: ModelConfig, n_tokens: int, factor: float = None) -> int:
+    factor = cfg.capacity_factor if factor is None else factor
+    c = int(math.ceil(cfg.top_k * n_tokens / cfg.num_experts * factor))
+    return max(c, 1)
+
+
+# ----------------------------------------------------------------- dispatch
+def moe_dense(cfg: ModelConfig, params, x) -> Tuple[jax.Array, dict]:
+    """Exact dense dispatch.  x: (N, d)."""
+    topk_idx, topk_gate, aux = route(cfg, params, x)
+    e = cfg.num_experts
+    gates = jnp.zeros((x.shape[0], e), x.dtype)
+    gates = gates.at[jnp.arange(x.shape[0])[:, None], topk_idx].set(
+        topk_gate.astype(x.dtype))
+    wg, wu, wd = (params[k][:e] for k in ("w_gate", "w_up", "w_down"))
+    h = jnp.einsum("nd,edf->enf", x, wg)
+    u = jnp.einsum("nd,edf->enf", x, wu)
+    y = jnp.einsum("enf,efd->end", jax.nn.silu(h) * u, wd)
+    out = jnp.einsum("end,ne->nd", y, gates)
+    aux["topk_idx"] = topk_idx
+    return out, aux
+
+
+def _slot_assignment(cfg: ModelConfig, topk_idx, topk_gate, cap: int):
+    """Compute (token->slot) placement under per-expert capacity ``cap``.
+
+    Returns flat ``slot_token`` (Ep*C,) token index feeding each slot,
+    ``slot_gate`` / ``slot_valid`` (Ep*C,) and per-(token,k) ``kept``.
+    Slots of padded experts (index >= num_experts) stay empty.
+    """
+    n, k = topk_idx.shape
+    e = cfg.num_experts
+    ep = cfg.num_experts_padded
+    flat_expert = topk_idx.reshape(-1)                                   # (N*k,)
+    onehot = jax.nn.one_hot(flat_expert, e, dtype=jnp.int32)             # (N*k,E)
+    pos_in_expert = jnp.cumsum(onehot, axis=0) * onehot                  # 1-based
+    pos = jnp.sum(pos_in_expert, axis=-1) - 1                            # (N*k,)
+    kept = pos < cap
+    slot = flat_expert * cap + jnp.where(kept, pos, 0)
+    token_of = jnp.repeat(jnp.arange(n), k)
+    slot_token = jnp.zeros((ep * cap,), jnp.int32)
+    slot_gate = jnp.zeros((ep * cap,), topk_gate.dtype)
+    slot_token = slot_token.at[jnp.where(kept, slot, ep * cap)].set(
+        token_of, mode="drop")
+    slot_gate = slot_gate.at[jnp.where(kept, slot, ep * cap)].set(
+        topk_gate.reshape(-1), mode="drop")
+    slot_valid = jnp.zeros((ep * cap,), bool).at[
+        jnp.where(kept, slot, ep * cap)].set(True, mode="drop")
+    return slot_token, slot_gate, slot_valid, kept
+
+
+def moe_scatter(cfg: ModelConfig, params, x, cap_factor: float = None
+                ) -> Tuple[jax.Array, dict]:
+    """Capacity-based gather/GEMM/scatter dispatch.  x: (N, d)."""
+    n, d = x.shape
+    topk_idx, topk_gate, aux = route(cfg, params, x)
+    cap = capacity(cfg, n, cap_factor)
+    e = cfg.num_experts_padded
+    slot_token, slot_gate, slot_valid, kept = _slot_assignment(
+        cfg, topk_idx, topk_gate, cap)
+    xd = jnp.take(x, slot_token, axis=0) * slot_valid[:, None].astype(x.dtype)
+    xd = xd.reshape(e, cap, d)
+    h = jnp.einsum("ecd,edf->ecf", xd, params["w_gate"])
+    u = jnp.einsum("ecd,edf->ecf", xd, params["w_up"])
+    y = jnp.einsum("ecf,efd->ecd", jax.nn.silu(h) * u, params["w_down"])
+    y = (y.reshape(e * cap, d) * slot_gate[:, None].astype(x.dtype))
+    out = jnp.zeros_like(x).at[slot_token].add(
+        y * slot_valid[:, None].astype(x.dtype))
+    aux["topk_idx"] = topk_idx
+    aux["drop_fraction"] = 1.0 - jnp.mean(kept.astype(jnp.float32))
+    return out, aux
+
+
+def moe_einsum(cfg: ModelConfig, params, x, cap_factor: float = None
+               ) -> Tuple[jax.Array, dict]:
+    """GShard one-hot dispatch/combine einsums.  x: (N, d)."""
+    n, d = x.shape
+    topk_idx, topk_gate, aux = route(cfg, params, x)
+    cap = capacity(cfg, n, cap_factor)
+    e, k = cfg.num_experts_padded, cfg.top_k
+    expert_oh = jax.nn.one_hot(topk_idx, e, dtype=jnp.float32)           # (N,k,E)
+    pos = jnp.cumsum(expert_oh.reshape(n * k, e), axis=0).reshape(n, k, e)
+    pos = (pos - 1.0) * expert_oh                                        # 0-based
+    kept = (pos < cap) & (expert_oh > 0)
+    pos_oh = jax.nn.one_hot(pos.astype(jnp.int32), cap, dtype=jnp.float32)
+    dispatch = jnp.einsum("nke,nkec->nec",
+                          expert_oh * kept.astype(jnp.float32), pos_oh)
+    combine = jnp.einsum("nk,nke,nkec->nec",
+                         topk_gate.astype(jnp.float32),
+                         expert_oh * kept.astype(jnp.float32), pos_oh)
+    xd = jnp.einsum("nd,nec->ecd", x.astype(jnp.float32), dispatch).astype(x.dtype)
+    h = jnp.einsum("ecd,edf->ecf", xd, params["w_gate"])
+    u = jnp.einsum("ecd,edf->ecf", xd, params["w_up"])
+    y = jnp.einsum("ecf,efd->ecd", jax.nn.silu(h) * u, params["w_down"])
+    out = jnp.einsum("ecd,nec->nd", y.astype(jnp.float32), combine).astype(x.dtype)
+    aux["topk_idx"] = topk_idx
+    aux["drop_fraction"] = 1.0 - jnp.mean(
+        jnp.sum(kept, axis=(1, 2)).astype(jnp.float32) / k)
+    return out, aux
+
+
+DISPATCH = {"dense": moe_dense, "scatter": moe_scatter, "einsum": moe_einsum}
+
+
+def moe_ff(cfg: ModelConfig, params, x2d, method="scatter",
+           cap_factor: float = None) -> Tuple[jax.Array, dict]:
+    """``method`` is a dispatch name or a callable
+    ``(cfg, params, x2d) -> (out, aux)`` (e.g. the shard_map all-to-all
+    dispatch from ``moe_a2a.make_moe_a2a``)."""
+    if callable(method):
+        return method(cfg, params, x2d)
+    if method == "dense":
+        return moe_dense(cfg, params, x2d)
+    return DISPATCH[method](cfg, params, x2d, cap_factor)

@@ -1,0 +1,5 @@
+from .quantize import (NF4_LEVELS, dequantize, quantize, quantize_pytree,
+                       shadow_params, simulate_quantization)
+
+__all__ = ["NF4_LEVELS", "dequantize", "quantize", "quantize_pytree",
+           "shadow_params", "simulate_quantization"]

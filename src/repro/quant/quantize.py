@@ -1,0 +1,115 @@
+"""Weight quantization for the SEP shadow model: FP16 / INT8 / NF4.
+
+The shadow model in OD-MoE is the full model quantized to a cheaper
+precision.  We implement real quantize->dequantize so the shadow model's
+numerics (and therefore its expert-routing divergence, the quantity the
+paper studies) are faithful:
+
+  * fp16  — plain dtype cast.
+  * int8  — symmetric per-output-channel (last axis) scaling.
+  * nf4   — 4-bit NormalFloat with per-block (64) absmax scaling, the
+            QLoRA code-book.
+
+``quantize``/``dequantize`` expose the packed representation (used by the
+int8 Pallas shadow matmul kernel); ``simulate_quantization`` returns a
+float tensor carrying the quantization error (used for SEP experiments
+where we only care about numerics, not memory).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+# The 16 NormalFloat-4 levels from QLoRA (Dettmers et al., 2023).
+NF4_LEVELS = jnp.array([
+    -1.0, -0.6961928009986877, -0.5250730514526367, -0.39491748809814453,
+    -0.28444138169288635, -0.18477343022823334, -0.09105003625154495, 0.0,
+    0.07958029955625534, 0.16093020141124725, 0.24611230194568634,
+    0.33791524171829224, 0.44070982933044434, 0.5626170039176941,
+    0.7229568362236023, 1.0], dtype=jnp.float32)
+
+NF4_BLOCK = 64
+
+
+# ----------------------------------------------------------------- int8
+def quantize_int8(w) -> Tuple[jax.Array, jax.Array]:
+    """Symmetric per-channel (last axis) int8.  Returns (q, scale)."""
+    absmax = jnp.max(jnp.abs(w), axis=tuple(range(w.ndim - 1)), keepdims=True)
+    scale = jnp.maximum(absmax, 1e-8) / 127.0
+    q = jnp.clip(jnp.round(w / scale), -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def dequantize_int8(q, scale):
+    return q.astype(jnp.float32) * scale
+
+
+# ------------------------------------------------------------------ nf4
+def quantize_nf4(w) -> Tuple[jax.Array, jax.Array]:
+    """Blockwise (64) absmax NF4.  Returns (codes uint8, scales)."""
+    flat = w.reshape(-1)
+    pad = (-flat.shape[0]) % NF4_BLOCK
+    flat = jnp.pad(flat, (0, pad))
+    blocks = flat.reshape(-1, NF4_BLOCK).astype(jnp.float32)
+    absmax = jnp.maximum(jnp.max(jnp.abs(blocks), axis=1, keepdims=True), 1e-8)
+    normed = blocks / absmax
+    codes = jnp.argmin(
+        jnp.abs(normed[..., None] - NF4_LEVELS[None, None, :]), axis=-1)
+    return codes.astype(jnp.uint8), absmax.astype(jnp.float32)
+
+
+def dequantize_nf4(codes, scales, shape):
+    vals = NF4_LEVELS[codes.astype(jnp.int32)] * scales
+    n = 1
+    for s in shape:
+        n *= s
+    return vals.reshape(-1)[:n].reshape(shape)
+
+
+# ------------------------------------------------------------- dispatch
+def quantize(w, scheme: str):
+    if scheme == "fp16":
+        return (w.astype(jnp.float16),)
+    if scheme == "int8":
+        return quantize_int8(w)
+    if scheme == "nf4":
+        return quantize_nf4(w) + (w.shape,)
+    raise ValueError(f"unknown scheme {scheme!r}")
+
+
+def dequantize(packed, scheme: str):
+    if scheme == "fp16":
+        return packed[0].astype(jnp.float32)
+    if scheme == "int8":
+        return dequantize_int8(*packed)
+    if scheme == "nf4":
+        return dequantize_nf4(*packed)
+    raise ValueError(f"unknown scheme {scheme!r}")
+
+
+def simulate_quantization(w, scheme: str):
+    """Quantize-dequantize round trip (float tensor with quant error)."""
+    if scheme in ("fp32", "none"):
+        return w
+    return dequantize(quantize(w, scheme), scheme).astype(w.dtype)
+
+
+_MIN_QUANT_SIZE = 256  # leave norms / small vectors in full precision
+
+
+def quantize_pytree(params, scheme: str):
+    """Quantize every large weight leaf; small leaves stay fp32."""
+    def one(w):
+        if w.ndim >= 2 and w.size >= _MIN_QUANT_SIZE and jnp.issubdtype(
+                w.dtype, jnp.floating):
+            return simulate_quantization(w, scheme)
+        return w
+    return jax.tree.map(one, params)
+
+
+def shadow_params(params, scheme: str):
+    """The SEP shadow model's parameters: quantized view of the full set."""
+    return quantize_pytree(params, scheme)

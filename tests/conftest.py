@@ -1,0 +1,43 @@
+import jax
+import pytest
+
+from repro.models.config import ModelConfig
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+@pytest.fixture(autouse=True, scope="module")
+def _release_jit_code():
+    """The suite JITs thousands of small executables; without periodic
+    release, LLVM's execution engine eventually fails to allocate JIT
+    code pages ("Failed to materialize symbols") late in the run."""
+    yield
+    jax.clear_caches()
+
+
+@pytest.fixture
+def key():
+    return jax.random.PRNGKey(0)
+
+
+def tiny_dense(**kw):
+    base = dict(name="t-dense", family="dense", num_layers=3, d_model=64,
+                num_heads=4, num_kv_heads=2, d_ff=128, vocab_size=97)
+    base.update(kw)
+    return ModelConfig(**base)
+
+
+def tiny_moe(**kw):
+    base = dict(name="t-moe", family="moe", num_layers=4, d_model=64,
+                num_heads=4, num_kv_heads=2, d_ff=0, d_expert=96,
+                vocab_size=97, num_experts=8, top_k=2)
+    base.update(kw)
+    return ModelConfig(**base)
+
+
+def tiny_ssm(**kw):
+    base = dict(name="t-ssm", family="ssm", num_layers=2, d_model=64,
+                num_heads=1, num_kv_heads=1, d_ff=0, vocab_size=97,
+                ssm_state=16, ssm_head_dim=16, ssm_chunk=4)
+    base.update(kw)
+    return ModelConfig(**base)

@@ -1,0 +1,22 @@
+"""Alignment policy + payload sizes (paper §3.2 numbers)."""
+from repro.configs import get_config
+from repro.core import AlignmentPolicy, kv_bytes_per_token
+
+
+def test_policy_periods():
+    p = AlignmentPolicy(2, 4)
+    assert [p.align_token_at(n) for n in range(1, 6)] == \
+        [False, True, False, True, False]
+    assert [p.align_kv_at(n) for n in range(1, 6)] == \
+        [False, False, False, True, False]
+    off = AlignmentPolicy(0, 0)
+    assert not off.align_token_at(4) and not off.align_kv_at(4)
+    assert AlignmentPolicy(1, 16).label() == "T1_KV16"
+
+
+def test_paper_kv_payload():
+    """Mixtral-8x7B fp32: 8 KB/token/layer -> 256 KB per alignment."""
+    cfg = get_config("mixtral-8x7b")
+    per_layer = 2 * cfg.num_kv_heads * cfg.resolved_head_dim * 4
+    assert per_layer == 8192
+    assert kv_bytes_per_token(cfg, 4) == 8192 * 32

@@ -1,0 +1,91 @@
+"""Attention: blockwise==naive, sliding window, RoPE properties, caches."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from conftest import tiny_dense
+from repro.models import attention as A
+from repro.models.layers import apply_rope
+
+
+@pytest.mark.parametrize("causal", [True, False])
+@pytest.mark.parametrize("window", [0, 17])
+@pytest.mark.parametrize("qb,kb", [(16, 16), (32, 24), (100, 100)])
+def test_blockwise_matches_naive(causal, window, qb, kb, key):
+    cfg = tiny_dense()
+    p = A.init_attention(key, cfg)
+    x = jax.random.normal(key, (2, 100, cfg.d_model))
+    pos = jnp.broadcast_to(jnp.arange(100), (2, 100))
+    ref = A.attn_seq(cfg, p, x, pos, causal=causal, window=window)
+    blk = A.attn_seq_blockwise(cfg, p, x, pos, causal=causal, window=window,
+                               q_block=qb, kv_block=kb)
+    np.testing.assert_allclose(np.asarray(ref), np.asarray(blk),
+                               atol=2e-5, rtol=1e-4)
+
+
+def test_attn_seq_auto_switches_blockwise(key, monkeypatch):
+    cfg = tiny_dense()
+    p = A.init_attention(key, cfg)
+    monkeypatch.setattr(A, "BLOCKWISE_THRESHOLD", 64)
+    x = jax.random.normal(key, (1, 80, cfg.d_model))
+    pos = jnp.broadcast_to(jnp.arange(80), (1, 80))
+    auto = A.attn_seq(cfg, p, x, pos)
+    monkeypatch.setattr(A, "BLOCKWISE_THRESHOLD", 4096)
+    naive = A.attn_seq(cfg, p, x, pos)
+    np.testing.assert_allclose(np.asarray(auto), np.asarray(naive),
+                               atol=2e-5, rtol=1e-4)
+
+
+def test_decode_matches_seq_with_ring_buffer(key):
+    """Sliding-window ring buffer decode equals windowed full attention."""
+    cfg = tiny_dense(sliding_window=8)
+    p = A.init_attention(key, cfg)
+    T = 20
+    x = jax.random.normal(key, (1, T, cfg.d_model))
+    pos = jnp.broadcast_to(jnp.arange(T), (1, T))
+    ref = A.attn_seq(cfg, p, x, pos, causal=True, window=8)
+    cache = A.init_cache(cfg, 1, T, x.dtype)
+    outs = []
+    for t in range(T):
+        o, cache = A.attn_decode(cfg, p, x[:, t:t + 1],
+                                 cache, jnp.array([t]))
+        outs.append(o)
+    dec = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(ref), np.asarray(dec),
+                               atol=2e-5, rtol=1e-4)
+
+
+@settings(deadline=None, max_examples=20)
+@given(shift=st.integers(0, 50), hd=st.sampled_from([16, 32, 64]),
+       frac=st.sampled_from([0.5, 1.0]))
+def test_rope_relative_position_invariance(shift, hd, frac):
+    """<rope(q,i), rope(k,j)> depends only on i-j (per full/partial RoPE)."""
+    key = jax.random.PRNGKey(3)
+    q = jax.random.normal(key, (1, 1, 1, hd))
+    k = jax.random.normal(jax.random.PRNGKey(4), (1, 1, 1, hd))
+    def score(i, j):
+        qr = apply_rope(q, jnp.array([[i]]), 1e4, frac)
+        kr = apply_rope(k, jnp.array([[j]]), 1e4, frac)
+        return float(jnp.sum(qr * kr))
+    assert score(5, 3) == pytest.approx(score(5 + shift, 3 + shift),
+                                        rel=1e-4, abs=1e-4)
+
+
+def test_rope_partial_leaves_tail_untouched(key):
+    x = jax.random.normal(key, (1, 4, 2, 64))
+    out = apply_rope(x, jnp.arange(4)[None], 1e4, 0.5)
+    np.testing.assert_allclose(np.asarray(out[..., 32:]),
+                               np.asarray(x[..., 32:]), rtol=1e-6)
+
+
+def test_gqa_bias(key):
+    cfg = tiny_dense(qkv_bias=True)
+    p = A.init_attention(key, cfg)
+    assert "bq" in p and p["bq"].shape == (cfg.num_heads * 16,)
+    x = jax.random.normal(key, (1, 8, cfg.d_model))
+    pos = jnp.broadcast_to(jnp.arange(8), (1, 8))
+    out = A.attn_seq(cfg, p, x, pos)
+    assert out.shape == (1, 8, cfg.d_model)
+    assert bool(jnp.all(jnp.isfinite(out)))

@@ -1,0 +1,69 @@
+"""HLO analysis: trip-count multipliers + collective wire-byte parsing."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.launch.hlo_analysis import (collective_traffic,
+                                       computation_multipliers,
+                                       while_summary)
+
+
+def _nested_scan_hlo():
+    def f(x, w):
+        def body(c, wi):
+            return c @ wi, 0
+        c, _ = jax.lax.scan(body, x, w)              # 8 trips
+
+        def body2(c, wi):
+            def inner(c2, wj):
+                return c2 @ wj, 0
+            c, _ = jax.lax.scan(inner, c, wi)        # 4 trips x 2
+            return c, 0
+        c, _ = jax.lax.scan(body2, c, w.reshape(2, 4, 64, 64))
+        return c
+    return jax.jit(f).lower(
+        jax.ShapeDtypeStruct((64, 64), jnp.float32),
+        jax.ShapeDtypeStruct((8, 64, 64), jnp.float32)).compile().as_text()
+
+
+def test_trip_count_multipliers():
+    txt = _nested_scan_hlo()
+    loops = while_summary(txt)
+    assert sorted(l["trip_count"] for l in loops) == [2, 4, 8]
+    mult, _ = computation_multipliers(txt)
+    assert 8.0 in mult.values()          # inner body: 2 x 4
+    inner = [l["body"] for l in loops if l["trip_count"] == 4][0]
+    assert mult[inner] == 8.0
+
+
+SYNTH_HLO = """
+HloModule synth
+
+%region_body (arg: (s32[], f32[128])) -> (s32[], f32[128]) {
+  %ar = f32[128]{0} all-reduce(%x), replica_groups=[16,16]<=[256], to_apply=%add
+  ROOT %t = tuple(%i, %ar)
+}
+
+%region_cond (arg: (s32[], f32[128])) -> pred[] {
+  ROOT %cmp = pred[] compare(%i, %c)
+}
+
+ENTRY %main (p0: f32[128]) -> f32[128] {
+  %ag = f32[1024]{0} all-gather(%p0), replica_groups=[2,128]<=[256], dimensions={0}
+  %w = (s32[], f32[128]) while(%t0), condition=%region_cond, body=%region_body, backend_config={"known_trip_count":{"n":"10"}}
+  ROOT %gte = f32[128]{0} get-tuple-element(%w), index=1
+}
+"""
+
+
+def test_collective_traffic_parsing():
+    out = collective_traffic(SYNTH_HLO)
+    # all-gather: result 1024*4B * (g-1)/g with g=128 -> ~4064B, once
+    ag = out["per_type"]["all-gather"]
+    assert ag == pytest.approx(4096 * 127 / 128)
+    # all-reduce inside while: 2*(g-1)/g*512B * 10 trips
+    ar = out["per_type"]["all-reduce"]
+    assert ar == pytest.approx(2 * 512 * 15 / 16 * 10)
+    assert out["counts"]["all-reduce"] == 1
+    assert out["total"] == pytest.approx(ag + ar)
+    assert out["total_uncorrected"] < out["total"]

@@ -1,0 +1,92 @@
+"""Model API: decode == teacher-forced logits for every family."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import ModelConfig, init_params, prefill, decode_step
+from repro.models.transformer import lm_seq
+
+CASES = {
+    "dense": dict(family="dense", num_layers=3, d_model=64, num_heads=4,
+                  num_kv_heads=2, d_ff=128, vocab_size=97, qkv_bias=True),
+    "dense-sw": dict(family="dense", num_layers=3, d_model=64, num_heads=4,
+                     num_kv_heads=2, d_ff=128, vocab_size=97,
+                     sliding_window=6),
+    "partial-rope": dict(family="dense", num_layers=2, d_model=64,
+                         num_heads=4, num_kv_heads=2, d_ff=128,
+                         vocab_size=97, rope_fraction=0.5),
+    "moe": dict(family="moe", num_layers=2, d_model=64, num_heads=4,
+                num_kv_heads=2, d_ff=0, d_expert=96, vocab_size=97,
+                num_experts=4, top_k=2),
+    "ssm": dict(family="ssm", num_layers=2, d_model=64, num_heads=1,
+                num_kv_heads=1, d_ff=0, vocab_size=97, ssm_state=16,
+                ssm_head_dim=16, ssm_chunk=4),
+    "hybrid": dict(family="hybrid", num_layers=4, d_model=64, num_heads=4,
+                   num_kv_heads=2, d_ff=128, vocab_size=97, ssm_state=16,
+                   ssm_head_dim=16, ssm_chunk=4, attn_every=4,
+                   attn_offset=3, num_experts=4, top_k=2, d_expert=64,
+                   moe_every=2, moe_offset=1),
+    "vlm": dict(family="vlm", num_layers=2, d_model=64, num_heads=4,
+                num_kv_heads=2, d_ff=128, vocab_size=97, frontend="vision",
+                frontend_tokens=5, frontend_dim=48),
+    "audio-encdec": dict(family="audio", num_layers=2, d_model=64,
+                         num_heads=4, num_kv_heads=4, d_ff=128,
+                         vocab_size=97, is_encoder_decoder=True,
+                         num_encoder_layers=2, frontend="audio",
+                         frontend_tokens=7, frontend_dim=40,
+                         norm_type="layernorm"),
+}
+
+
+@pytest.mark.parametrize("name", sorted(CASES))
+def test_decode_matches_teacher_forcing(name, key):
+    cfg = ModelConfig(name=name, **CASES[name])
+    p = init_params(cfg, key)
+    T = 12
+    batch = {"tokens": jax.random.randint(key, (2, T), 0, cfg.vocab_size)}
+    nf = 0
+    if cfg.frontend:
+        fd = cfg.frontend_dim
+        batch["frontend_embeds"] = jax.random.normal(
+            key, (2, cfg.frontend_tokens, fd))
+    if cfg.is_encoder_decoder:
+        from repro.models.encdec import encdec_seq
+        full_logits, _ = encdec_seq(cfg, p, batch["frontend_embeds"],
+                                    batch["tokens"])
+    else:
+        full_logits, aux, _ = lm_seq(
+            cfg, p, batch["tokens"],
+            frontend_embeds=batch.get("frontend_embeds"),
+            moe_method="dense")
+        nf = aux["n_front"]
+        full_logits = full_logits[:, nf:]
+    pre = dict(batch, tokens=batch["tokens"][:, : T // 2])
+    logits, state = prefill(cfg, p, pre, max_cache_len=T + nf + 4,
+                            moe_method="dense")
+    errs = [float(jnp.max(jnp.abs(logits - full_logits[:, T // 2 - 1])))]
+    for t in range(T // 2, T):
+        logits, state = decode_step(cfg, p, batch["tokens"][:, t], state,
+                                    moe_method="dense")
+        errs.append(float(jnp.max(jnp.abs(logits - full_logits[:, t]))))
+    assert max(errs) < 5e-4, f"{name}: decode diverged {max(errs)}"
+
+
+def test_pattern_factoring():
+    cfg = ModelConfig(name="j", family="hybrid", num_layers=32, d_model=64,
+                      num_heads=4, num_kv_heads=2, d_ff=128, vocab_size=97,
+                      ssm_state=16, ssm_head_dim=16, attn_every=8,
+                      attn_offset=4, num_experts=4, top_k=2, d_expert=64,
+                      moe_every=2, moe_offset=1)
+    pattern, reps = cfg.pattern()
+    assert len(pattern) == 8 and reps == 4
+    assert pattern[4][0] == "attn"
+    assert sum(1 for _, ff in pattern if ff == "moe") == 4
+
+
+def test_param_count_matches_init(key):
+    for name in ("dense", "moe", "ssm", "hybrid"):
+        cfg = ModelConfig(name=name, **CASES[name])
+        p = init_params(cfg, key)
+        actual = sum(x.size for x in jax.tree.leaves(p))
+        assert actual == cfg.param_count(), name

@@ -1,0 +1,47 @@
+"""Worker grouping + round-robin schedule + Eq. (1)."""
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import GroupSchedule
+
+
+def test_eq1_paper_example():
+    """t_maxload(EL_{l+4}) = 4 t^M + 3 t^W for the 8-worker G=2 testbed."""
+    s = GroupSchedule(8, 2)
+    assert s.n_groups == 4
+    assert s.t_maxload(1.0, 2.0) == pytest.approx(4 * 1.0 + 3 * 2.0)
+
+
+def test_round_robin_groups():
+    s = GroupSchedule(8, 2)
+    assert [s.group_of(i) for i in range(8)] == [0, 1, 2, 3, 0, 1, 2, 3]
+    assert s.workers_of_group(2) == [4, 5]
+
+
+def test_assignment_one_to_one():
+    s = GroupSchedule(8, 2)
+    a = s.assign(1, [3, 7])
+    assert a == [(3, 2), (7, 3)]
+    # k > group size wraps round-robin
+    a = s.assign(0, [1, 2, 3])
+    assert [w for _, w in a] == [0, 1, 0]
+
+
+@settings(deadline=None, max_examples=30)
+@given(nw=st.sampled_from([2, 4, 8, 16]), g=st.sampled_from([1, 2, 4, 8]),
+       tm=st.floats(0.1, 10), tw=st.floats(0.1, 10))
+def test_eq1_properties(nw, g, tm, tw):
+    if nw % g:
+        return
+    s = GroupSchedule(nw, g)
+    tmax = s.t_maxload(tm, tw)
+    G = s.n_groups
+    assert tmax == pytest.approx(G * tm + (G - 1) * tw)
+    # more groups -> more time to hide loads
+    assert s.io_bottlenecked(tmax + 1e-6, tm, tw)
+    assert not s.io_bottlenecked(tmax - 1e-6, tm, tw)
+
+
+def test_invalid_group_size():
+    with pytest.raises(ValueError):
+        GroupSchedule(8, 3)

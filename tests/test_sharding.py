@@ -1,0 +1,127 @@
+"""Sharding rules: layouts, divisibility fallbacks, spec coverage."""
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_config
+from repro.launch.mesh import make_debug_mesh
+from repro.launch.sharding import ShardingRules
+from repro.launch import specs as specs_lib
+
+
+class FakeMesh:
+    """Mesh stand-in with production axis sizes (1 real device only)."""
+    def __init__(self, shape):
+        self.shape = shape
+        self.axis_names = tuple(shape)
+
+
+def rules(mode="serve", multi=False, fsdp_style="zero"):
+    shape = ({"pod": 2, "data": 16, "model": 16} if multi
+             else {"data": 16, "model": 16})
+    r = ShardingRules.__new__(ShardingRules)
+    r.cfg = get_config("mixtral-8x7b")
+    r.mesh = FakeMesh(shape)
+    r.mode = mode
+    r.fsdp_style = fsdp_style
+    r.dp = tuple(a for a in shape if a != "model")
+    r.dp_size = 1
+    for a in r.dp:
+        r.dp_size *= shape[a]
+    r.tp_size = 16
+    return r
+
+
+def spec_of(r, path_names, shape):
+    class K:
+        def __init__(self, key):
+            self.key = key
+    leaf = jax.ShapeDtypeStruct(shape, jnp.bfloat16)
+    return r.param_spec([K(n) for n in path_names], leaf)
+
+
+def test_attention_tp_layout():
+    r = rules("serve")
+    assert spec_of(r, ["layers", "0", "mixer", "wq"],
+                   (32, 4096, 4096)) == P(None, None, "model")
+    assert spec_of(r, ["layers", "0", "mixer", "wo"],
+                   (32, 4096, 4096)) == P(None, "model", None)
+
+
+def test_expert_parallel_when_divisible():
+    r = rules("serve")
+    r.cfg = get_config("qwen3-moe-30b-a3b")       # 128 experts % 16 == 0
+    assert spec_of(r, ["layers", "0", "ff", "w_gate"],
+                   (48, 128, 2048, 768)) == P(None, "model", None, None)
+
+
+def test_expert_padding_enables_expert_parallel():
+    """mixtral pads 8->16 experts so the expert axis shards (§Perf 7)."""
+    r = rules("serve")
+    assert r.cfg.num_experts_padded == 16
+    assert spec_of(r, ["layers", "0", "ff", "w_gate"],
+                   (32, 16, 4096, 14336)) == P(None, "model", None, None)
+
+
+def test_ffn_fallback_when_experts_not_divisible():
+    import dataclasses
+    r = rules("serve")                            # unpadded 8 experts
+    r.cfg = dataclasses.replace(r.cfg, padded_experts=0)
+    assert spec_of(r, ["layers", "0", "ff", "w_gate"],
+                   (32, 8, 4096, 14336)) == P(None, None, None, "model")
+    assert spec_of(r, ["layers", "0", "ff", "w_down"],
+                   (32, 8, 14336, 4096)) == P(None, None, "model", None)
+
+
+def test_train_mode_weight_fsdp_style():
+    """fsdp_style='weights' shards weights over the data axes; the
+    default 'zero' style keeps params pure-TP (§Perf iter 3)."""
+    r = rules("train", fsdp_style="weights")
+    s = spec_of(r, ["layers", "0", "mixer", "wq"], (32, 4096, 4096))
+    assert s == P(None, ("data",), "model")
+    r2 = rules("train", multi=True, fsdp_style="weights")
+    s2 = spec_of(r2, ["layers", "0", "mixer", "wq"], (32, 4096, 4096))
+    assert s2 == P(None, ("pod", "data"), "model")
+    r3 = rules("train")                       # zero style
+    s3 = spec_of(r3, ["layers", "0", "mixer", "wq"], (32, 4096, 4096))
+    assert s3 == P(None, None, "model")
+
+
+def test_vectors_replicated():
+    r = rules("train")
+    assert spec_of(r, ["layers", "0", "norm1", "scale"], (32, 4096)) \
+        == P(None, None)  # stacked 1-leading + vector -> 2D replicated
+
+
+def test_mamba_split_projection_layout():
+    r = rules("serve")
+    r.cfg = get_config("mamba2-2.7b")
+    assert spec_of(r, ["layers", "0", "mixer", "w_x"],
+                   (64, 2560, 5120)) == P(None, None, "model")
+    assert spec_of(r, ["layers", "0", "mixer", "w_B"],
+                   (64, 2560, 128)) == P(None, None, None)
+    assert spec_of(r, ["layers", "0", "mixer", "out_proj"],
+                   (64, 5120, 2560)) == P(None, "model", None)
+
+
+def test_decode_state_sharding_real_mesh(key):
+    """End-to-end on a real (1,1) debug mesh: every leaf gets a sharding."""
+    mesh = make_debug_mesh(1, 1)
+    cfg = get_config("qwen2.5-3b").reduced()
+    r = ShardingRules(cfg, mesh, "serve")
+    from repro.models.config import INPUT_SHAPES
+    import dataclasses
+    shape = dataclasses.replace(INPUT_SHAPES["decode_32k"],
+                                seq_len=64, global_batch=2)
+    state = specs_lib.abstract_decode_state(cfg, shape)
+    sh = r.decode_state(state)
+    assert len(jax.tree.leaves(sh)) == len(jax.tree.leaves(state))
+
+
+def test_granite_pads_to_expert_parallel():
+    r = rules("serve")
+    r.cfg = get_config("granite-moe-3b-a800m")    # 40 experts pad to 48
+    assert r.cfg.num_experts_padded == 48
+    s = spec_of(r, ["layers", "0", "ff", "w_gate"], (32, 48, 1536, 512))
+    assert s == P(None, "model", None, None)

@@ -1,0 +1,68 @@
+"""End-to-end system behaviour: the paper's pipeline on a small model.
+
+The headline invariant: OD-MoE (cacheless on-demand loading + SEP
+prediction + alignment) produces BIT-IDENTICAL greedy output to a dense
+fully-cached deployment while touching only one expert slot per worker —
+i.e. the paper's "75% speed at 1/3 memory with no quality loss" claim
+reduces, on the quality axis, to exactness, which we can test.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import tiny_moe
+from repro.core import (AlignmentPolicy, ODMoEEngine, RTX3090_EDGE,
+                        simulate_cached, simulate_odmoe)
+from repro.models import greedy_generate, init_params
+
+
+@pytest.fixture(scope="module")
+def system():
+    cfg = tiny_moe(num_layers=4)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (1, 10),
+                                          0, cfg.vocab_size)}
+    return cfg, params, batch
+
+
+def test_end_to_end_odmoe_pipeline(system):
+    cfg, params, batch = system
+    ref = np.asarray(greedy_generate(cfg, params, batch, 10))
+    eng = ODMoEEngine(cfg, params, n_workers=8, predictor="sep",
+                      shadow_scheme="int8")
+    toks, trace = eng.generate(batch, 10, AlignmentPolicy(1, 1))
+    # 1) exactness
+    assert np.array_equal(np.asarray(toks), ref)
+    # 2) cacheless memory: worker slot holds exactly one expert
+    mem = eng.memory_report()
+    assert mem["per_worker_bytes"] == eng.store.expert_bytes
+    assert mem["total_bytes"] < mem["fully_cached_bytes"]
+    # 3) the trace drives a faster-than-no-prefetch timing
+    t = simulate_odmoe(cfg, trace, eng.sched, RTX3090_EDGE,
+                       shadow_scheme="int8")
+    assert t.tokens_per_s > 0
+    # 4) every MoE layer was served
+    assert all(len(r.layers) == len(eng.moe_layers)
+               for r in trace.records)
+
+
+def test_decoding_deterministic_across_runs(system):
+    cfg, params, batch = system
+    eng1 = ODMoEEngine(cfg, params, predictor="sep", shadow_scheme="int8")
+    t1, _ = eng1.generate(batch, 6, AlignmentPolicy(1, 1))
+    eng2 = ODMoEEngine(cfg, params, predictor="sep", shadow_scheme="int8")
+    t2, _ = eng2.generate(batch, 6, AlignmentPolicy(1, 1))
+    assert np.array_equal(np.asarray(t1), np.asarray(t2))
+
+
+def test_trace_eq2_eq3_consistency(system):
+    """Overall recall (Eq.3) equals the ratio of summed Eq.2 numerators."""
+    cfg, params, batch = system
+    eng = ODMoEEngine(cfg, params, predictor="sep", shadow_scheme="nf4")
+    _, trace = eng.generate(batch, 8, AlignmentPolicy(1, 1))
+    per_tok = trace.recall_per_token()
+    num = sum(sum(lr.correct for lr in r.layers) for r in trace.records)
+    den = sum(sum(lr.true.size for lr in r.layers) for r in trace.records)
+    assert trace.recall() == pytest.approx(num / den)
+    assert min(per_tok) >= 0 and max(per_tok) <= 1

@@ -1,0 +1,72 @@
+"""Discrete-event timing model: orderings the paper establishes."""
+import pytest
+
+from repro.configs import get_config
+from repro.core import (RTX3090_EDGE, GroupSchedule, simulate_cached,
+                        simulate_cpu, simulate_odmoe, simulate_offload_cache,
+                        simulate_prefill_cached, simulate_prefill_odmoe,
+                        synthetic_trace)
+
+CFG = get_config("mixtral-8x7b")
+SCHED = GroupSchedule(8, 2)
+PROF = RTX3090_EDGE
+
+
+def test_calibration_anchor():
+    """Fully-cached reference calibrated to the paper's ~4.9 tok/s."""
+    assert simulate_cached(CFG, PROF) == pytest.approx(4.89, rel=0.1)
+    assert simulate_cpu(CFG, PROF) == pytest.approx(0.82, rel=0.15)
+
+
+def test_odmoe_reaches_large_fraction_of_cached():
+    tr = synthetic_trace(CFG, 128, recall=0.9994)
+    t = simulate_odmoe(CFG, tr, SCHED, PROF, shadow_scheme="fp16")
+    frac = t.tokens_per_s / simulate_cached(CFG, PROF)
+    assert 0.5 < frac < 1.0          # paper: 75%
+
+
+def test_recall_monotonicity():
+    """Higher recall -> faster decode (fewer reload stalls)."""
+    speeds = []
+    for r in (0.5, 0.9, 0.99):
+        tr = synthetic_trace(CFG, 96, recall=r)
+        speeds.append(simulate_odmoe(CFG, tr, SCHED, PROF).tokens_per_s)
+    assert speeds[0] < speeds[1] < speeds[2]
+
+
+def test_prefetch_beats_no_prefetch():
+    tr = synthetic_trace(CFG, 96, recall=0.97)
+    tr_none = synthetic_trace(CFG, 96, recall=0.0, with_predictions=False)
+    with_p = simulate_odmoe(CFG, tr, SCHED, PROF).tokens_per_s
+    without = simulate_odmoe(CFG, tr_none, SCHED, PROF).tokens_per_s
+    assert with_p > 1.5 * without
+
+
+def test_more_workers_help():
+    tr = synthetic_trace(CFG, 96, recall=0.97)
+    s4 = simulate_odmoe(CFG, tr, GroupSchedule(4, 2), PROF).tokens_per_s
+    s8 = simulate_odmoe(CFG, tr, GroupSchedule(8, 2), PROF).tokens_per_s
+    assert s8 > s4
+
+
+def test_offload_cache_hit_rate_improves_with_capacity():
+    tr = synthetic_trace(CFG, 128, recall=0.9)
+    small = simulate_offload_cache(CFG, tr, PROF, cache_experts=16)
+    big = simulate_offload_cache(CFG, tr, PROF, cache_experts=128)
+    assert big["cache_hit_rate"] > small["cache_hit_rate"]
+    assert big["tokens_per_s"] > small["tokens_per_s"]
+
+
+def test_prefill_ttft_ordering():
+    """Cached TTFT < OD-MoE TTFT; TTFT grows with prompt length."""
+    t16 = simulate_prefill_odmoe(CFG, PROF, 16)
+    t128 = simulate_prefill_odmoe(CFG, PROF, 128)
+    assert t128 >= t16
+    assert simulate_prefill_cached(CFG, PROF, 16) < t16
+
+
+def test_minibatch_pipelining_helps():
+    """Fig. 7: mini-batched prefill beats single-shot transfer."""
+    t1 = simulate_prefill_odmoe(CFG, PROF, 512, n_minibatches=1)
+    t4 = simulate_prefill_odmoe(CFG, PROF, 512, n_minibatches=4)
+    assert t4 <= t1
