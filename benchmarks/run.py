@@ -16,7 +16,7 @@ import jax
 
 from . import (fig3_recall, fig6_periods_recall, fig7_prefill,
                fig8_ablation, fig9_periods_speed, roofline,
-               table1_predictors, table2_speed)
+               serving_throughput, table1_predictors, table2_speed)
 
 MODULES = {
     "fig3": fig3_recall,
@@ -27,6 +27,7 @@ MODULES = {
     "table1": table1_predictors,
     "table2": table2_speed,
     "roofline": roofline,
+    "serving": serving_throughput,
 }
 
 

@@ -1,0 +1,78 @@
+"""Continuous-batching traffic demo: requests stream into the cacheless
+engine, get co-scheduled by predicted-expert overlap, and leave with
+per-request latency — all bit-identical to decoding each alone.
+
+    PYTHONPATH=src python examples/serve_traffic.py [--requests 8]
+                                                    [--arrival-rate 100]
+
+Shows the per-step composition timeline (who rode each batch), the
+per-request TTFT/TPOT table, and the load-amortization counters that
+make multi-request demand aggregation visible.
+"""
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.core import ODMoEEngine
+from repro.models import greedy_generate, init_params
+from repro.serve import BatchComposer, ServingLoop, make_traffic
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--arrival-rate", type=float, default=100.0,
+                    help="req/s of modeled time (<=0: all at t=0)")
+    ap.add_argument("--max-batch", type=int, default=4)
+    ap.add_argument("--tokens", type=int, default=10)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_config("mixtral-8x7b").reduced(num_layers=6, d_model=128,
+                                             num_experts=8, d_expert=256)
+    params = init_params(cfg, jax.random.PRNGKey(args.seed))
+    reqs = make_traffic(cfg, args.requests, args.arrival_rate,
+                        max_new=args.tokens, seed=args.seed)
+
+    eng = ODMoEEngine(cfg, params, n_workers=8, predictor="sep",
+                      shadow_scheme="int8")
+    loop = ServingLoop(eng, max_batch=args.max_batch,
+                       composer=BatchComposer(args.max_batch, "overlap"))
+    res = loop.run(reqs)
+
+    print(f"{cfg.name}: E={cfg.num_experts} top-{cfg.top_k}, 8 workers, "
+          f"{args.requests} requests @ {args.arrival_rate}/s\n")
+    print("composition timeline (step: request ids):")
+    for s in res.steps:
+        print(f"  {s.step:>3}  t={s.start_s * 1e3:7.2f}ms  "
+              f"B={len(s.request_ids)}  {s.request_ids}")
+
+    print(f"\n{'rid':>4}{'prompt':>8}{'tokens':>8}{'TTFT ms':>10}"
+          f"{'TPOT ms':>10}{'recall':>8}{'exact':>7}")
+    t = res.timings
+    for i, (rid, st) in enumerate(res.states.items()):
+        ref = np.asarray(greedy_generate(
+            cfg, params,
+            {"tokens": jnp.asarray(st.request.prompt)[None, :]},
+            st.request.max_new_tokens))[0]
+        exact = bool(np.array_equal(ref, res.outputs[rid]))
+        print(f"{rid:>4}{len(st.request.prompt):>8}"
+              f"{len(st.generated):>8}{t.ttft_s[i] * 1e3:>10.2f}"
+              f"{t.tpot_s[i] * 1e3:>10.2f}{st.trace.recall():>8.3f}"
+              f"{str(exact):>7}")
+        assert exact, f"request {rid} diverged from its solo reference"
+
+    rep = t.report()
+    served = [len(e.requests) for e in eng.slots.events if e.requests]
+    print(f"\naggregate: {rep['throughput_tok_s']:.1f} tok/s over "
+          f"{rep['makespan_s'] * 1e3:.1f} ms; mean batch "
+          f"{res.mean_batch:.2f}; {len(eng.slots.events)} loads, "
+          f"{np.mean(served):.2f} requests/load "
+          f"({sum(1 for s in served if s > 1)} shared)")
+
+
+if __name__ == "__main__":
+    main()

@@ -3,22 +3,28 @@ cacheless on-demand expert loading engine, worker-group scheduling, and
 the discrete-event timing model that replays engine traces on calibrated
 hardware profiles."""
 from .align import AlignmentPolicy, kv_bytes_per_token
-from .engine import LayerRecord, ODMoEEngine, TokenRecord, Trace
+from .engine import (LayerRecord, ODMoEEngine, TokenRecord, Trace,
+                     concat_cache_lists, slice_cache_list)
 from .predictor import (FrequencyPredictor, GateExtrapolator,
-                        RandomPredictor, SEPShadow, moe_layer_indices)
+                        RandomPredictor, SEPShadow, concat_shadow_states,
+                        moe_layer_indices, slice_shadow_state)
 from .schedule import GroupSchedule
-from .store import ExpertStore, WorkerSlots
-from .timing import (RTX3090_EDGE, TPU_V5E, HardwareProfile,
-                     simulate_cached, simulate_cpu, simulate_odmoe,
-                     simulate_offload_cache, simulate_prefill_cached,
-                     simulate_prefill_odmoe, synthetic_trace)
+from .store import ExpertStore, LoadEvent, WorkerSlots
+from .timing import (RTX3090_EDGE, TPU_V5E, DecodeClock, HardwareProfile,
+                     ServingTimings, poisson_arrivals, simulate_cached,
+                     simulate_cpu, simulate_odmoe, simulate_offload_cache,
+                     simulate_prefill_cached, simulate_prefill_odmoe,
+                     synthetic_trace)
 
 __all__ = [
     "AlignmentPolicy", "kv_bytes_per_token", "LayerRecord", "ODMoEEngine",
-    "TokenRecord", "Trace", "FrequencyPredictor", "GateExtrapolator",
-    "RandomPredictor", "SEPShadow", "moe_layer_indices", "GroupSchedule",
-    "ExpertStore", "WorkerSlots", "RTX3090_EDGE", "TPU_V5E",
-    "HardwareProfile", "simulate_cached", "simulate_cpu", "simulate_odmoe",
+    "TokenRecord", "Trace", "concat_cache_lists", "slice_cache_list",
+    "FrequencyPredictor", "GateExtrapolator", "RandomPredictor",
+    "SEPShadow", "concat_shadow_states", "moe_layer_indices",
+    "slice_shadow_state", "GroupSchedule", "ExpertStore", "LoadEvent",
+    "WorkerSlots", "RTX3090_EDGE", "TPU_V5E", "DecodeClock",
+    "HardwareProfile", "ServingTimings", "poisson_arrivals",
+    "simulate_cached", "simulate_cpu", "simulate_odmoe",
     "simulate_offload_cache", "simulate_prefill_cached",
     "simulate_prefill_odmoe", "synthetic_trace",
 ]

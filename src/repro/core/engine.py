@@ -8,6 +8,17 @@ which predicted experts are loaded just-in-time and from which they are
 promptly evicted after their layer computes (no cache).  Mispredictions
 trigger reload events, exactly like the paper's fallback path.
 
+Two entry points share the same decode step:
+
+  * ``generate`` — one fixed batch decoded end-to-end (the paper's
+    single-stream experiment driver);
+  * ``prefill_request`` + ``decode_batch`` — the request-level API the
+    continuous-batching serving loop (``repro.serve``) is built on.
+    Per-request caches are kept separate between iterations and joined
+    with ``concat_cache_lists`` for each composed step, so requests can
+    join and retire between decode iterations (dynamic batch
+    membership) while sharing one worker fleet and one expert store.
+
 Everything the timing model needs — who loaded what and when, which
 predictions missed, when alignment delayed the shadow — is captured in
 the returned ``Trace``.
@@ -15,13 +26,15 @@ the returned ``Trace``.
 Correctness invariant (tested): greedy tokens produced by the engine are
 bit-identical to the reference ``greedy_generate`` on the same weights,
 because expert compute consumes the physically-loaded slot contents and
-mispredicted experts are always reloaded before use.
+mispredicted experts are always reloaded before use.  Composed batches
+preserve it per-request: expert contributions accumulate in the same
+(row, top-k rank) order regardless of which wave physically computed
+them, so batch membership never changes a request's arithmetic.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from functools import partial
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -50,6 +63,7 @@ class LayerRecord:
     correct: int                         # sum_b |pred_b ∩ true_b|
     reloads: int
     assignments: List[Tuple[int, int]]   # (expert, worker)
+    waves: Optional[List[List[Tuple[int, int]]]] = None  # per-wave subsets
 
 
 @dataclass
@@ -89,6 +103,25 @@ class Trace:
                 reloads += lr.reloads
                 loads += len(lr.assignments)
         return reloads / loads if loads else 0.0
+
+
+# ------------------------------------------------------- batch membership
+def concat_cache_lists(cache_lists: Sequence[List]) -> List:
+    """Join per-request per-layer cache lists along the batch axis.
+
+    Every request must have been prefilled with the same
+    ``max_cache_len`` (the serving loop guarantees this) so the KV
+    buffers share a window size.
+    """
+    if len(cache_lists) == 1:
+        return list(cache_lists[0])
+    return [jax.tree.map(lambda *xs: jnp.concatenate(xs, axis=0), *per_layer)
+            for per_layer in zip(*cache_lists)]
+
+
+def slice_cache_list(cache_list: List, i: int) -> List:
+    """Extract request ``i`` from a composed cache list (batch of 1)."""
+    return [jax.tree.map(lambda a: a[i:i + 1], c) for c in cache_list]
 
 
 class ODMoEEngine:
@@ -143,17 +176,28 @@ class ODMoEEngine:
             out.append(jax.tree.map(lambda *xs: jnp.stack(xs), *per_rep))
         return tuple(out)
 
+    # ----------------------------------------------------------- requests
+    def prefill_request(self, batch, max_cache_len: int):
+        """Prefill one request (or fixed batch) on the main node.
+
+        Returns ``(first_token (B,), cache_list, pos (B,))`` — the
+        per-request decode state the serving loop carries between
+        composed iterations.  The first generated token falls out of
+        prefill, so a request's TTFT is admission wait + prefill time.
+        """
+        logits, state = prefill(self.cfg, self.params, batch, max_cache_len,
+                                moe_method="dense")
+        token = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return token, self._unstack(state["caches"]), state["pos"]
+
     # ------------------------------------------------------------ generate
     def generate(self, batch, num_tokens: int,
                  policy: AlignmentPolicy = AlignmentPolicy(1, 1)):
         cfg = self.cfg
         prompt_len = batch["tokens"].shape[1]
         max_cache_len = prompt_len + num_tokens + 2
-        logits, state = prefill(cfg, self.params, batch, max_cache_len,
-                                moe_method="dense")
-        main_token = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-        cache_list = self._unstack(state["caches"])
-        pos = state["pos"]
+        main_token, cache_list, pos = self.prefill_request(
+            batch, max_cache_len)
         if self.shadow is not None:
             self.shadow.reset(batch, max_cache_len)
         tokens_out = [main_token]
@@ -170,15 +214,23 @@ class ODMoEEngine:
                 shadow_in = main_token if at else self.shadow.token
                 preds = self.shadow.step(shadow_in)
             rec = TokenRecord(index=n, aligned_token=at, aligned_kv=ak)
-            main_token, cache_list, pos = self._decode_token(
+            main_token, cache_list, pos = self.decode_batch(
                 main_token, cache_list, pos, preds, n, rec)
             tokens_out.append(main_token)
             trace.records.append(rec)
         return jnp.stack(tokens_out, axis=1), trace
 
     # ---------------------------------------------------------- one token
-    def _decode_token(self, token, cache_list, pos, preds, token_idx,
-                      rec: TokenRecord):
+    def decode_batch(self, token, cache_list, pos, preds, step_idx,
+                     rec: TokenRecord):
+        """One decode iteration for the (possibly composed) batch.
+
+        ``token``/``pos`` are (B,); ``cache_list`` is per-layer with
+        batch axis B; ``preds`` maps layer -> (B,k) predicted experts
+        for THIS iteration (rows in batch order).  Rows are arithmetically
+        independent, so the serving loop may change batch membership
+        freely between calls.  Appends per-layer records to ``rec``.
+        """
         cfg = self.cfg
         x = embed(token[:, None], self.params["embed"])
         pending: Dict[int, np.ndarray] = dict(preds)
@@ -206,67 +258,106 @@ class ODMoEEngine:
             if self.rand is not None:
                 pending[li] = self.rand.predict(li, b)
             pred = pending.get(li)
-            rec.layers.append(self._serve_layer(
-                token_idx, li, moe_i, pred, true))
+            lr, y = self._serve_and_compute(
+                step_idx, li, moe_i, pred, true, h, np.asarray(topk_gate))
+            rec.layers.append(lr)
             if self.freq is not None:
                 self.freq.observe(li, true)
-            # expert computation from physically-loaded slots
-            y = self._expert_compute(li, h, true, np.asarray(topk_gate))
             x = x + y[:, None].astype(x.dtype)
-            # prompt eviction — cacheless rule
-            for w in self.sched.workers_of_group(self.sched.group_of(moe_i)):
+            # prompt eviction — cacheless rule.  Every worker that took a
+            # load this layer (group + spill) drops its expert.
+            used = {w for _, w in lr.assignments}
+            used.update(self.sched.workers_of_group(lr.group))
+            for w in sorted(used):
                 self.slots.evict(w)
         logits = logits_from_hidden(cfg, self.params, x)[:, 0]
         return (jnp.argmax(logits, axis=-1).astype(jnp.int32), cache_list,
                 pos + 1)
 
-    def _serve_layer(self, token_idx, layer, moe_i, pred, true) -> LayerRecord:
+    # ------------------------------------------------------ serve+compute
+    def _serve_and_compute(self, step_idx, layer, moe_i, pred, true, h,
+                           gates) -> Tuple[LayerRecord, jax.Array]:
+        """Load the routed experts and compute their FFNs from worker
+        slots, in *waves* when the composed batch needs more unique
+        experts than the fleet holds at once (each wave assigns distinct
+        workers; later waves overwrite earlier slots, which the timing
+        model sees as serialized loads on busy workers).
+
+        Expert contributions are accumulated per row in top-k rank
+        order, independent of wave membership, so a request's output is
+        bit-identical however the batch was composed.
+        """
         group = self.sched.group_of(moe_i)
-        # 1) predicted experts were loaded ahead of time
+        workers = self.sched.workers_of_group(group)
+        spill = self.sched.spill_workers(group)
+        # 1) predicted experts were loaded ahead of time.  A composed
+        # batch can predict more unique experts than the group holds;
+        # those spread onto the other groups' idle workers (the whole
+        # fleet serves the batch).  Predictions beyond the fleet size
+        # cannot be held anywhere and fall through to the reload path.
         if pred is not None:
             pred_experts = list(dict.fromkeys(int(e) for e in pred.reshape(-1)))
-            for e, w in self.sched.assign(moe_i, pred_experts):
-                self.slots.load(token_idx, layer, e, w, predicted=True)
+            targets = workers + spill
+            for e, w in zip(pred_experts, targets):
+                self.slots.load(step_idx, layer, e, w, predicted=True)
         # 2) gate result is ground truth: reload anything missing
         needed = list(dict.fromkeys(int(e) for e in true.reshape(-1)))
         reloads = 0
-        assignments = []
-        workers = self.sched.workers_of_group(group)
-        # workers already serving a *correct* prediction must not be evicted
-        claimed = {self.slots.worker_with(layer, e) for e in needed}
-        claimed.discard(None)
-        free = [w for w in workers if w not in claimed]
-        # batch>1 can need more experts than the group holds: spill onto
-        # idle workers of other groups (they are between loads anyway)
-        free += [w for w in range(self.sched.n_workers)
-                 if w not in claimed and w not in workers]
-        for e in needed:
-            w = self.slots.worker_with(layer, e)
-            if w is None:
-                w = free.pop(0) if free else workers[0]
-                self.slots.load(token_idx, layer, e, w, predicted=False)
+        assignments: List[Tuple[int, int]] = []
+        waves: List[List[Tuple[int, int]]] = []
+        contrib: Dict[Tuple[int, int], jax.Array] = {}
+        remaining = needed
+        while remaining:
+            # workers already serving a *correct* prediction are claimed
+            wave: Dict[int, int] = {}
+            for e in remaining:
+                w = self.slots.worker_with(layer, e)
+                if w is not None:
+                    wave[e] = w
+            claimed = set(wave.values())
+            free = [w for w in workers + spill if w not in claimed]
+            for e in remaining:
+                if e in wave:
+                    continue
+                if not free:
+                    break                          # overflow -> next wave
+                w = free.pop(0)
+                self.slots.load(step_idx, layer, e, w, predicted=False)
                 reloads += 1
-            assignments.append((e, w))
+                wave[e] = w
+            self._compute_wave(h, true, gates, wave, contrib)
+            done = [(e, wave[e]) for e in remaining if e in wave]
+            assignments.extend(done)
+            waves.append(done)
+            remaining = [e for e in remaining if e not in wave]
+        # deterministic accumulation: (row, rank) order, wave-independent
+        y = jnp.zeros((true.shape[0], h.shape[1]), jnp.float32)
+        for bi in range(true.shape[0]):
+            for j in range(true.shape[1]):
+                y = y.at[bi].add(contrib[(bi, j)])
         correct = recall_counts(pred, true) if pred is not None else 0
-        return LayerRecord(layer=layer, moe_index=moe_i, group=group,
-                           predicted=pred, true=true, correct=correct,
-                           reloads=reloads, assignments=assignments)
+        lr = LayerRecord(layer=layer, moe_index=moe_i, group=group,
+                         predicted=pred, true=true, correct=correct,
+                         reloads=reloads, assignments=assignments,
+                         waves=waves)
+        return lr, y
 
-    def _expert_compute(self, layer, h, true, gates):
-        """Compute the routed expert FFNs from worker-slot weights."""
-        b, d = h.shape
-        y = jnp.zeros((b, d), jnp.float32)
-        for bi in range(b):
+    def _compute_wave(self, h, true, gates, wave: Dict[int, int], contrib):
+        """Expert FFNs for the (row, rank) pairs routed to this wave's
+        experts, consuming the physically-loaded slot weights."""
+        for bi in range(true.shape[0]):
             hb = h[bi].astype(jnp.float32)
             for j in range(true.shape[1]):
                 e = int(true[bi, j])
-                w = self.slots.worker_with(layer, e)
-                assert w is not None, "expert must be resident"
+                if e not in wave:
+                    continue
+                w = wave[e]
+                assert self.slots.resident[w] is not None, \
+                    "expert must be resident"
                 wd = self.slots.slot(w)
                 out = (jax.nn.silu(hb @ wd["w_gate"]) * (hb @ wd["w_up"])
                        ) @ wd["w_down"]
-                y = y.at[bi].add(float(gates[bi, j]) * out)
-        return y
+                contrib[(bi, j)] = float(gates[bi, j]) * out
 
     # ------------------------------------------------------------- memory
     def memory_report(self) -> dict:

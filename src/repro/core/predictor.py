@@ -61,6 +61,17 @@ class SEPShadow:
     ``step(token)`` runs one shadow decode step and returns the routing
     decisions it *observed* — the multi-layer-lookahead prediction for
     the full model — plus the shadow's own next greedy token.
+
+    Two call styles share one implementation:
+
+      * **stateful** (``reset`` / ``step`` / ``align_*``) — one shadow
+        tracking one fixed batch, used by ``ODMoEEngine.generate``;
+      * **functional** (``prefill_state`` / ``step_state`` /
+        ``align_kv_state``) — the shadow state is an explicit pytree
+        ``{"caches", "pos", "token"}`` owned by the caller, so the
+        serving loop can keep one state per request, *peek* a step
+        without committing it, and concatenate states into a composed
+        batch (see ``concat_shadow_states``).
     """
 
     def __init__(self, cfg: ModelConfig, params, scheme: str = "int8"):
@@ -72,23 +83,47 @@ class SEPShadow:
         self._decode = jax.jit(
             lambda p, t, s: decode_step(cfg, p, t, s, moe_method="dense"))
 
+    # ------------------------------------------------------- functional
+    def prefill_state(self, batch, max_cache_len: int) -> dict:
+        """Prefill a fresh shadow state for one request (or batch)."""
+        logits, state = prefill(self.cfg, self.params, batch,
+                                max_cache_len, moe_method="dense")
+        token = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return dict(state, token=token)
+
+    def step_state(self, state: dict, token):
+        """Pure one-step shadow decode: consume ``token`` against
+        ``state``; return ``({layer: predicted (B,k)}, new_state)``
+        without touching the stateful shadow."""
+        from repro.models.transformer import lm_decode
+        logits, caches, aux = lm_decode(
+            self.cfg, self.params, token, state["caches"],
+            state["pos"], moe_method="dense")
+        new = dict(state, caches=caches, pos=state["pos"] + 1,
+                   token=jnp.argmax(logits, axis=-1).astype(jnp.int32))
+        return topk_to_layer_dict(self.cfg, aux["topk"]), new
+
+    @staticmethod
+    def align_kv_state(state: dict, main_state: dict) -> dict:
+        """Return ``state`` with caches/pos overwritten by the main
+        model's (the §3.2 KV alignment, functional form)."""
+        return dict(state, caches=main_state["caches"],
+                    pos=main_state["pos"])
+
+    # --------------------------------------------------------- stateful
     def reset(self, batch, max_cache_len: int):
-        logits, self.state = prefill(self.cfg, self.params, batch,
-                                     max_cache_len, moe_method="dense")
-        self.token = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        st = self.prefill_state(batch, max_cache_len)
+        self.token = st.pop("token")
+        self.state = st
         return self.token
 
     def step(self, token) -> Dict[int, np.ndarray]:
         """Consume ``token``; return {layer: predicted (B,k)} and update
         the shadow's own next token."""
-        from repro.models.transformer import lm_decode
-        logits, caches, aux = lm_decode(
-            self.cfg, self.params, token, self.state["caches"],
-            self.state["pos"], moe_method="dense")
-        self.state = dict(self.state, caches=caches,
-                          pos=self.state["pos"] + 1)
-        self.token = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-        return topk_to_layer_dict(self.cfg, aux["topk"])
+        preds, new = self.step_state(self.state, token)
+        self.token = new.pop("token")
+        self.state = new
+        return preds
 
     # ------------------------------------------------------------ align
     def align_tokens(self, main_token):
@@ -99,6 +134,38 @@ class SEPShadow:
         self.state = dict(self.state,
                           caches=jax.tree.map(lambda a: a, main_state["caches"]),
                           pos=main_state["pos"])
+
+
+def concat_shadow_states(states: Sequence[dict]) -> dict:
+    """Join per-request shadow states along the batch axis.
+
+    Caches are stacked per pattern position with a leading repeat axis,
+    so their batch axis is 1; ``pos`` and ``token`` are (B,).  States
+    must share the same cache length (the serving loop allocates every
+    request with a common ``max_cache_len``).
+
+    Utility for batching shadow decode across requests; the serving
+    loop currently steps each request's shadow individually (peeks must
+    be cacheable per request), so production code does not yet call
+    this — see tests/test_serving.py for the round-trip contract.
+    """
+    if len(states) == 1:
+        return states[0]
+    caches = tuple(
+        jax.tree.map(lambda *xs: jnp.concatenate(xs, axis=1),
+                     *(s["caches"][p] for s in states))
+        for p in range(len(states[0]["caches"])))
+    return {"caches": caches,
+            "pos": jnp.concatenate([s["pos"] for s in states]),
+            "token": jnp.concatenate([s["token"] for s in states])}
+
+
+def slice_shadow_state(state: dict, i: int) -> dict:
+    """Extract request ``i`` from a composed shadow state (batch of 1)."""
+    caches = tuple(jax.tree.map(lambda a: a[:, i:i + 1], c)
+                   for c in state["caches"])
+    return {"caches": caches, "pos": state["pos"][i:i + 1],
+            "token": state["token"][i:i + 1]}
 
 
 # ------------------------------------------------------- on-the-fly

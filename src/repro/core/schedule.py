@@ -41,6 +41,17 @@ class GroupSchedule:
         return [(e, workers[j % len(workers)])
                 for j, e in enumerate(experts)]
 
+    def spill_workers(self, group: int) -> List[int]:
+        """Deterministic overflow order when a composed batch routes more
+        unique experts than ``group`` holds: the other groups' workers,
+        nearest group first (they are between loads for their own layers).
+        Shared by every request in the composed batch — the batch is one
+        schedule, not per-request schedules."""
+        order: List[int] = []
+        for step in range(1, self.n_groups):
+            order.extend(self.workers_of_group((group + step) % self.n_groups))
+        return order
+
     # --------------------------------------------------------------- Eq. 1
     def t_maxload(self, t_main: float, t_worker: float) -> float:
         """Maximum expert-load duration with no compute stall (Eq. 1).

@@ -27,12 +27,13 @@ EXPERT_WEIGHT_NAMES = ("w_gate", "w_up", "w_down")
 
 @dataclass
 class LoadEvent:
-    token: int              # decoding iteration
+    token: int              # decoding iteration (serving: global step index)
     layer: int              # absolute layer index
     expert: int
     worker: int
     predicted: bool         # True: issued from SEP prediction; False: reload
     bytes: int
+    requests: Tuple[int, ...] = ()   # serving: request ids sharing this load
 
 
 class ExpertStore:
@@ -73,6 +74,13 @@ class WorkerSlots:
         self.stats = {"loads": 0, "predicted_loads": 0, "reloads": 0,
                       "hits": 0, "evictions": 0}
         self._slot_data: List[Optional[dict]] = [None] * n_workers
+        self._request_context: Tuple[int, ...] = ()
+
+    def set_request_context(self, request_ids) -> None:
+        """Tag subsequent load events with the composed batch's request
+        ids.  One physical load then carries the full set of requests it
+        serves — the amortization signal the serving benchmarks report."""
+        self._request_context = tuple(int(r) for r in request_ids)
 
     # ------------------------------------------------------------- actions
     def load(self, token: int, layer: int, expert: int, worker: int,
@@ -93,7 +101,8 @@ class WorkerSlots:
         self.stats["loads"] += 1
         self.stats["predicted_loads" if predicted else "reloads"] += 1
         self.events.append(LoadEvent(token, layer, expert, worker, predicted,
-                                     self.store.expert_bytes))
+                                     self.store.expert_bytes,
+                                     self._request_context))
 
     def slot(self, worker: int) -> dict:
         assert self._slot_data[worker] is not None, "empty slot used"

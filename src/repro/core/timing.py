@@ -102,106 +102,219 @@ class ODMoETimings:
         return 1.0 / float(np.mean(self.per_token_s))
 
 
-def simulate_odmoe(cfg: ModelConfig, trace: Trace, sched: GroupSchedule,
-                   profile: HardwareProfile,
-                   shadow_scheme: str = "int8",
-                   predictor: str = "sep") -> ODMoETimings:
-    """Replay an engine trace through the Fig. 2 pipeline.
+class DecodeClock:
+    """Incremental Fig. 2 replay: one (possibly composed) decode
+    iteration at a time on a continuous clock.
 
     One continuous clock; per-worker timelines.  A worker's next
     predicted load starts as soon as (a) the prediction is available and
     (b) the worker is free — so loads for layer l+G-1 overlap compute of
     layer l exactly as in Fig. 2.  Mispredicted experts reload only
     after the main node's gate result (the paper's fallback).
+
+    ``simulate_odmoe`` drives it over a whole trace; the serving loop
+    drives it step-by-step, interleaving arrivals and prefills, which is
+    what makes admission decisions time-consistent with the decode
+    pipeline they share.
     """
-    wb = profile.weight_bytes
-    lb = layer_bytes(cfg, wb)
-    kinds = cfg.layer_kinds()
-    emb = embedding_payload(cfg, wb)
 
-    # stage durations
-    t_main_attn = profile.t_stream(lb["attn"]) + 2 * profile.t_lan(emb)
-    t_main_mamba = profile.t_stream(lb["mamba"])
-    t_main_dense_ff = profile.t_stream(lb["dense_ff"])
-    t_router = profile.t_stream(lb["router"])
-    t_worker = profile.t_stream(lb["expert"]) + profile.t_lan(emb)
-    t_load = profile.t_load(lb["expert"])
-    t_head = profile.t_stream(lb["embed"])
+    def __init__(self, cfg: ModelConfig, sched: GroupSchedule,
+                 profile: HardwareProfile, shadow_scheme: str = "int8",
+                 predictor: str = "sep"):
+        self.sched = sched
+        self.profile = profile
+        self.predictor = predictor
+        wb = profile.weight_bytes
+        lb = layer_bytes(cfg, wb)
+        self.kinds = cfg.layer_kinds()
+        emb = embedding_payload(cfg, wb)
+        self.emb = emb
+        # stage durations
+        self.t_main_attn = profile.t_stream(lb["attn"]) + 2 * profile.t_lan(emb)
+        self.t_main_mamba = profile.t_stream(lb["mamba"])
+        self.t_main_dense_ff = profile.t_stream(lb["dense_ff"])
+        self.t_router = profile.t_stream(lb["router"])
+        self.t_worker = profile.t_stream(lb["expert"]) + profile.t_lan(emb)
+        self.t_load = profile.t_load(lb["expert"])
+        self.t_head = profile.t_stream(lb["embed"])
+        # shadow: runs the whole (quantized) model on its own node
+        qf = {"fp16": 0.5, "int8": 0.25, "nf4": 0.125}.get(shadow_scheme, 1.0)
+        shadow_active = cfg.active_param_count() * wb * qf
+        self.t_shadow_layer = profile.t_stream(shadow_active / cfg.num_layers)
+        self.align_payload = kv_bytes_per_token(cfg, wb)
+        self.worker_free: Dict[int, float] = defaultdict(float)
+        self.now = 0.0
 
-    # shadow: runs the whole (quantized) model on its own node
-    qf = {"fp16": 0.5, "int8": 0.25, "nf4": 0.125}.get(shadow_scheme, 1.0)
-    shadow_active = cfg.active_param_count() * wb * qf
-    t_shadow_layer = profile.t_stream(shadow_active / cfg.num_layers)
-    align_payload = kv_bytes_per_token(cfg, wb)
-    n_moe = sum(1 for _, ff in kinds if ff == MOE_FF)
+    def advance_to(self, t: float) -> None:
+        """Idle until ``t`` (waiting for the next arrival)."""
+        if t > self.now:
+            self.now = t
 
-    per_token, stalls = [], []
-    worker_free = defaultdict(float)          # worker -> absolute free time
-    t = 0.0                                   # continuous clock
-    for rec in trace.records:
-        iter_start = t
+    def charge_prefill(self, seconds: float) -> None:
+        """Serialize a prefill on the pipeline: the main node and the
+        whole worker fleet are busy for its duration (§3.3 loads every
+        expert across the workers)."""
+        self.now += seconds
+        for w in range(self.sched.n_workers):
+            self.worker_free[w] = max(self.worker_free[w], self.now)
+
+    def step(self, rec) -> tuple:
+        """Advance through one decode iteration; return (duration, stall).
+
+        ``rec`` is an engine ``TokenRecord``; a composed batch shows up
+        only through its per-layer reload counts and spill assignments —
+        the pipeline structure is identical to single-stream decode.
+        """
+        profile, sched = self.profile, self.sched
+        iter_start = t = self.now
         stall = 0.0
         # --- shadow late departure (Fig. 5): alignment payload must land
         delay = 0.0
-        if predictor == "sep":
+        if self.predictor == "sep":
             if rec.aligned_kv:
-                delay += profile.t_lan(align_payload)
+                delay += profile.t_lan(self.align_payload)
             if rec.aligned_token:
                 delay += profile.t_lan(4)
         shadow_start = iter_start + delay
 
         def pred_avail(layer_idx: int, main_now: float) -> float:
-            if predictor == "sep":
+            if self.predictor == "sep":
                 # shadow must itself pass layer `layer_idx`, then notify
-                return (shadow_start + (layer_idx + 1) * t_shadow_layer
+                return (shadow_start + (layer_idx + 1) * self.t_shadow_layer
                         + profile.lan_latency_ms * 1e-3)
             # gate extrapolation: prediction for layer l emerges from the
             # main model's own (l-1)-th layer — i.e. "now"
             return main_now
 
+        worker_free = self.worker_free
         layer_rec = {lr.layer: lr for lr in rec.layers}
         moe_i = -1
-        for li, (mixer, ff) in enumerate(kinds):
-            t += t_main_attn if mixer == ATTN else t_main_mamba
+        for li, (mixer, ff) in enumerate(self.kinds):
+            t += self.t_main_attn if mixer == ATTN else self.t_main_mamba
             if ff == DENSE_FF:
-                t += t_main_dense_ff
+                t += self.t_main_dense_ff
                 continue
             if ff != MOE_FF:
                 continue
             moe_i += 1
             lr = layer_rec.get(li)
-            t += t_router                      # gate runs on main node
+            t += self.t_router                 # gate runs on main node
             g = sched.group_of(moe_i)
             workers = sched.workers_of_group(g)
+            # composed batches overflow the group onto the rest of the
+            # fleet, same order as the engine's spill assignment
+            targets = workers + sched.spill_workers(g)
             # predicted loads: issued as early as prediction + worker allow
             load_done = 0.0
             if lr is not None and lr.predicted is not None:
-                for w in workers:
-                    ls = max(pred_avail(li, t - t_router), worker_free[w])
-                    worker_free[w] = ls + t_load
-                    load_done = max(load_done, ls + t_load)
+                n_pred = len({int(e) for e in lr.predicted.reshape(-1)})
+                n_loads = max(len(workers), min(n_pred, len(targets)))
+                for j in range(n_loads):
+                    w = targets[j % len(targets)]
+                    ls = max(pred_avail(li, t - self.t_router),
+                             worker_free[w])
+                    worker_free[w] = ls + self.t_load
+                    load_done = max(load_done, ls + self.t_load)
             else:
                 # no prefetch at all: load after the gate result
-                for w in workers:
+                n_true = (len({int(e) for e in lr.true.reshape(-1)})
+                          if lr is not None else len(workers))
+                n_loads = max(len(workers), min(n_true, len(targets)))
+                for j in range(n_loads):
+                    w = targets[j % len(targets)]
                     ls = max(t, worker_free[w])
-                    worker_free[w] = ls + t_load
-                    load_done = max(load_done, ls + t_load)
-            # mispredictions: reload after gate result on the same workers
+                    worker_free[w] = ls + self.t_load
+                    load_done = max(load_done, ls + self.t_load)
+            # mispredictions: reload after gate result, queued round-robin
+            # over the same fleet order the engine assigns
             if lr is not None and lr.predicted is not None and lr.reloads:
-                for w in workers[: lr.reloads]:
+                for i in range(lr.reloads):
+                    w = targets[i % len(targets)]
                     ls = max(t, worker_free[w])
-                    worker_free[w] = ls + t_load
-                    load_done = max(load_done, ls + t_load)
-            ready = t + profile.t_lan(emb)     # embedding reaches workers
+                    worker_free[w] = ls + self.t_load
+                    load_done = max(load_done, ls + self.t_load)
+            ready = t + profile.t_lan(self.emb)  # embedding reaches workers
             ec_start = max(ready, load_done)
             stall += max(0.0, ec_start - ready)
-            t = ec_start + t_worker
+            t = ec_start + self.t_worker
             for w in workers:
                 worker_free[w] = max(worker_free[w], t)
-        t += t_head
-        per_token.append(t - iter_start)
-        stalls.append(stall)
+        t += self.t_head
+        self.now = t
+        return t - iter_start, stall
+
+
+def simulate_odmoe(cfg: ModelConfig, trace: Trace, sched: GroupSchedule,
+                   profile: HardwareProfile,
+                   shadow_scheme: str = "int8",
+                   predictor: str = "sep") -> ODMoETimings:
+    """Replay an engine trace through the Fig. 2 pipeline (see
+    ``DecodeClock`` for the event mechanics)."""
+    clock = DecodeClock(cfg, sched, profile, shadow_scheme, predictor)
+    per_token, stalls = [], []
+    for rec in trace.records:
+        d, s = clock.step(rec)
+        per_token.append(d)
+        stalls.append(s)
     return ODMoETimings(per_token, stalls)
+
+
+# ---------------------------------------------------------------- serving
+def poisson_arrivals(rate: float, n: int, seed: int = 0) -> List[float]:
+    """Arrival times (seconds) of ``n`` requests from a Poisson process
+    with ``rate`` req/s; ``rate <= 0`` means everything arrives at t=0."""
+    if rate <= 0:
+        return [0.0] * n
+    rng = np.random.default_rng(seed)
+    return np.cumsum(rng.exponential(1.0 / rate, size=n)).tolist()
+
+
+@dataclass
+class ServingTimings:
+    """Per-request latency + aggregate throughput of a serving run.
+
+    Lists are positional, in ascending request-id order (use
+    ``ServeResult.outputs``/``states``, keyed by rid, to correlate).
+    TTFT covers admission wait + prefill (the first token falls out of
+    prefill); TPOT is the mean inter-token gap over the remaining
+    decode steps.
+    """
+    arrival_s: List[float]
+    first_token_s: List[float]
+    finish_s: List[float]
+    tokens: List[int]
+
+    @property
+    def ttft_s(self) -> List[float]:
+        return [f - a for f, a in zip(self.first_token_s, self.arrival_s)]
+
+    @property
+    def tpot_s(self) -> List[float]:
+        return [(fin - ft) / (n - 1) if n > 1 else 0.0
+                for fin, ft, n in zip(self.finish_s, self.first_token_s,
+                                      self.tokens)]
+
+    @property
+    def makespan_s(self) -> float:
+        return max(self.finish_s) - min(self.arrival_s)
+
+    @property
+    def tokens_per_s(self) -> float:
+        span = self.makespan_s
+        return sum(self.tokens) / span if span > 0 else float("inf")
+
+    def report(self) -> Dict[str, float]:
+        ttft, tpot = self.ttft_s, self.tpot_s
+        return {
+            "n_requests": len(self.tokens),
+            "total_tokens": int(sum(self.tokens)),
+            "makespan_s": self.makespan_s,
+            "throughput_tok_s": self.tokens_per_s,
+            "ttft_mean_s": float(np.mean(ttft)),
+            "ttft_p99_s": float(np.percentile(ttft, 99)),
+            "tpot_mean_s": float(np.mean(tpot)),
+            "tpot_p99_s": float(np.percentile(tpot, 99)),
+        }
 
 
 # -------------------------------------------------------------- baselines

@@ -1,0 +1,10 @@
+"""Version-compatibility shims for the pallas TPU API.
+
+jax renamed ``pltpu.TPUCompilerParams`` to ``pltpu.CompilerParams``; the
+container may pin either side of the rename.  Kernels import the name
+from here so the same source works against both releases.
+"""
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams", None) \
+    or pltpu.TPUCompilerParams

@@ -18,7 +18,7 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+from repro.kernels.compat import CompilerParams
 
 NEG_INF = -1e30
 
@@ -98,7 +98,7 @@ def flash_decode_kernel(q, k, v, kpos, pos, *, block_w: int = 1024,
             jax.ShapeDtypeStruct((b, kh, g, 1), jnp.float32),   # m
             jax.ShapeDtypeStruct((b, kh, g, 1), jnp.float32),   # l
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel",
                                              "arbitrary")),
         interpret=interpret,

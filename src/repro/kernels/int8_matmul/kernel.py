@@ -20,7 +20,7 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+from repro.kernels.compat import CompilerParams
 
 
 def _make_kernel(n_k: int, total_k: int, block_k: int):
@@ -71,7 +71,7 @@ def int8_matmul_kernel(x, w_q, scale, *, block_m: int = 256,
         ],
         out_specs=pl.BlockSpec((bm, bn), lambda mi, ni, ki: (mi, ni)),
         out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel",
                                              "arbitrary")),
         interpret=interpret,

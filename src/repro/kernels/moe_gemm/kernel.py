@@ -23,7 +23,7 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+from repro.kernels.compat import CompilerParams
 
 
 def _make_ffn_kernel(total_f: int, block_f: int):
@@ -77,7 +77,7 @@ def moe_ffn_kernel(xd, w_gate, w_up, w_down, *, block_c: int = 128,
         ],
         out_specs=pl.BlockSpec((1, bc, d), lambda e_, ci, fi: (e_, ci, 0)),
         out_shape=jax.ShapeDtypeStruct((e, c, d), jnp.float32),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel",
                                              "arbitrary")),
         interpret=interpret,

@@ -20,7 +20,7 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+from repro.kernels.compat import CompilerParams
 
 
 def _make_kernel():
@@ -67,7 +67,7 @@ def ssd_scan_kernel(s, decay, *, block_h: int = 16,
             jax.ShapeDtypeStruct((b, nc, h, p, n), jnp.float32),
             jax.ShapeDtypeStruct((b, h, p, n), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel",
                                              "arbitrary")),
         interpret=interpret,

@@ -1,13 +1,23 @@
 """Serving driver: OD-MoE cacheless engine on a (reduced) MoE model.
 
+Single-stream mode (the paper's experiment driver):
+
   PYTHONPATH=src python -m repro.launch.serve --arch mixtral-8x7b \
       --tokens 32 --predictor sep --shadow int8
 
-Runs real prefill+decode through ``ODMoEEngine`` (prediction, on-demand
-loading, alignment, eviction — all live), verifies the output matches
-the dense reference bit-for-bit, and reports recall, load statistics,
-memory by node type, and modeled decode throughput on the paper's edge
-profile.
+Continuous-batching mode (the ``repro.serve`` subsystem) — enabled by
+``--requests``:
+
+  PYTHONPATH=src python -m repro.launch.serve --requests 8 \
+      --arrival-rate 2.0 --max-batch 4
+
+Both run real prefill+decode through ``ODMoEEngine`` (prediction,
+on-demand loading, alignment, eviction — all live) and verify outputs
+match the dense reference bit-for-bit.  Serving mode drives Poisson
+arrivals through ``ServingLoop`` — prefill-on-admission, SEP-overlap
+batch composition — and reports per-request TTFT/TPOT plus aggregate
+throughput from the timing model, alongside load-amortization stats
+(how many requests each physical expert load served).
 """
 from __future__ import annotations
 
@@ -21,12 +31,14 @@ from repro.configs import get_config
 from repro.core import (AlignmentPolicy, ODMoEEngine, RTX3090_EDGE,
                         simulate_cached, simulate_odmoe)
 from repro.models import greedy_generate, init_params
+from repro.serve import BatchComposer, ServingLoop, make_traffic
 
 
-def main():
+def build_parser() -> argparse.ArgumentParser:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="mixtral-8x7b")
-    ap.add_argument("--tokens", type=int, default=24)
+    ap.add_argument("--tokens", type=int, default=24,
+                    help="decode length (serving: max new tokens/request)")
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--predictor", default="sep",
                     choices=["sep", "nextgate", "multigate", "freq",
@@ -37,20 +49,65 @@ def main():
     ap.add_argument("--token-period", type=int, default=1)
     ap.add_argument("--kv-period", type=int, default=1)
     ap.add_argument("--seed", type=int, default=0)
-    args = ap.parse_args()
+    # ----------------------------------------------- serving mode flags
+    ap.add_argument("--requests", type=int, default=0,
+                    help="serve N requests through continuous batching "
+                         "(0 = single-stream mode)")
+    ap.add_argument("--arrival-rate", type=float, default=2.0,
+                    help="Poisson arrival rate, requests/s of modeled "
+                         "time (<=0: all arrive at t=0)")
+    ap.add_argument("--max-batch", type=int, default=4,
+                    help="composed decode batch cap")
+    ap.add_argument("--compose", default="overlap",
+                    choices=["overlap", "fifo"],
+                    help="batch composition policy")
+    return ap
 
-    cfg = get_config(args.arch).reduced()
-    if not cfg.num_experts:
-        raise SystemExit(f"{args.arch} has no experts — OD-MoE loading is "
-                         "inapplicable (see DESIGN.md §4); serve it with "
-                         "examples/quickstart.py instead.")
+
+def serve_traffic(cfg, params, args) -> None:
+    eng = ODMoEEngine(cfg, params, n_workers=args.workers,
+                      predictor=args.predictor, shadow_scheme=args.shadow)
+    policy = AlignmentPolicy(args.token_period, args.kv_period)
+    reqs = make_traffic(cfg, args.requests, args.arrival_rate,
+                        prompt_len=args.prompt_len, max_new=args.tokens,
+                        seed=args.seed)
+    loop = ServingLoop(eng, max_batch=args.max_batch,
+                       composer=BatchComposer(args.max_batch, args.compose),
+                       policy=policy)
+    res = loop.run(reqs)
+    # ---- bit-exactness: every request == its solo reference decode
+    exact = True
+    for r in reqs:
+        ref = np.asarray(greedy_generate(
+            cfg, params, {"tokens": jnp.asarray(r.prompt)[None, :]},
+            r.max_new_tokens))[0]
+        exact &= bool(np.array_equal(ref, res.outputs[r.rid]))
+    print(f"  per-request tokens == solo reference: {exact}")
+    assert exact, "serving output diverged from single-request reference"
+    # ---- latency / throughput report (modeled edge profile)
+    rep = res.timings.report()
+    print(f"  requests: {rep['n_requests']}  tokens: {rep['total_tokens']}"
+          f"  mean batch: {res.mean_batch:.2f}")
+    print(f"  TTFT  mean {rep['ttft_mean_s'] * 1e3:.2f} ms   "
+          f"p99 {rep['ttft_p99_s'] * 1e3:.2f} ms")
+    print(f"  TPOT  mean {rep['tpot_mean_s'] * 1e3:.2f} ms   "
+          f"p99 {rep['tpot_p99_s'] * 1e3:.2f} ms")
+    print(f"  throughput: {rep['throughput_tok_s']:.2f} tok/s over "
+          f"{rep['makespan_s']:.3f} s makespan")
+    # ---- amortization: requests served per physical load
+    ev = eng.slots.events
+    served = [len(e.requests) for e in ev if e.requests]
+    if served:
+        print(f"  loads: {len(ev)}  mean requests/load: "
+              f"{np.mean(served):.2f}  multi-request loads: "
+              f"{sum(1 for s in served if s > 1)}/{len(served)}")
+    print(f"  load stats: {eng.slots.stats}")
+
+
+def serve_single(cfg, params, args) -> None:
     key = jax.random.PRNGKey(args.seed)
-    params = init_params(cfg, key)
     batch = {"tokens": jax.random.randint(key, (1, args.prompt_len), 0,
                                           cfg.vocab_size)}
-    print(f"[serve] {cfg.name}: E={cfg.num_experts} top{cfg.top_k}, "
-          f"{args.workers} workers, predictor={args.predictor}"
-          + (f"/{args.shadow}" if args.predictor == "sep" else ""))
     eng = ODMoEEngine(cfg, params, n_workers=args.workers,
                       predictor=args.predictor, shadow_scheme=args.shadow)
     policy = AlignmentPolicy(args.token_period, args.kv_period)
@@ -71,6 +128,27 @@ def main():
     print(f"  modeled decode speed ({RTX3090_EDGE.name}): "
           f"{t.tokens_per_s:.2f} tok/s "
           f"(fully-cached reference {simulate_cached(cfg, RTX3090_EDGE):.2f})")
+
+
+def main():
+    args = build_parser().parse_args()
+    cfg = get_config(args.arch).reduced()
+    if not cfg.num_experts:
+        raise SystemExit(f"{args.arch} has no experts — OD-MoE loading is "
+                         "inapplicable (see DESIGN.md §4); serve it with "
+                         "examples/quickstart.py instead.")
+    params = init_params(cfg, jax.random.PRNGKey(args.seed))
+    mode = (f"continuous batching: {args.requests} requests @ "
+            f"{args.arrival_rate}/s, max-batch {args.max_batch} "
+            f"({args.compose})" if args.requests else "single stream")
+    print(f"[serve] {cfg.name}: E={cfg.num_experts} top{cfg.top_k}, "
+          f"{args.workers} workers, predictor={args.predictor}"
+          + (f"/{args.shadow}" if args.predictor == "sep" else "")
+          + f" — {mode}")
+    if args.requests:
+        serve_traffic(cfg, params, args)
+    else:
+        serve_single(cfg, params, args)
 
 
 if __name__ == "__main__":

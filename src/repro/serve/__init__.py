@@ -1,0 +1,23 @@
+"""Continuous-batching serving over the cacheless OD-MoE engine.
+
+Three layers, composed by ``ServingLoop.run``:
+
+  * ``request``  — ``Request`` / ``RequestState`` / ``RequestQueue``:
+    arrival, admission, per-request decode + shadow state, lifecycle;
+  * ``composer`` — ``BatchComposer``: which runnable requests decode
+    together, preferring overlapping SEP-predicted expert sets so one
+    on-demand slot load serves many requests;
+  * ``loop``     — ``ServingLoop``: prefill-on-admission, iterative
+    composed decode, co-simulated virtual time (TTFT/TPOT/throughput).
+
+Guarantee: per-request outputs are bit-identical to solo decoding —
+batch composition is scheduling, never arithmetic.
+"""
+from .composer import BatchComposer
+from .loop import ServeResult, ServingLoop, StepRecord
+from .request import Request, RequestQueue, RequestState, make_traffic
+
+__all__ = [
+    "BatchComposer", "ServeResult", "ServingLoop", "StepRecord",
+    "Request", "RequestQueue", "RequestState", "make_traffic",
+]

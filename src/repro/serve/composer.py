@@ -1,0 +1,60 @@
+"""Expert-overlap batch composition (the multi-request demand lever).
+
+Between decode iterations the composer picks which runnable requests
+decode together.  A cacheless system pays one slot load per unique
+(layer, expert) the composed batch activates, so the win condition is
+grouping requests whose *predicted* expert sets overlap: one on-demand
+load then serves several requests' top-k hits (the SlimCaching / HOBBIT
+multi-request aggregation argument, applied to OD-MoE's SEP lookahead).
+
+``overlap`` policy: seed with the oldest runnable request, then greedily
+add the candidate sharing the most predicted (layer, expert) pairs with
+the growing union, FIFO on ties, up to ``max_batch``.  Signatures come
+from each request's cached SEP peek (see ``RequestState.pending``), so
+composition never advances any shadow — it only reads predictions.
+
+``fifo`` policy: the ``max_batch`` oldest requests, the continuous-
+batching baseline every serving benchmark compares against.
+
+Composition is pure policy: whatever subset is chosen, per-request
+outputs are bit-identical to solo decoding (the engine invariant), so
+the composer can only change *when* tokens appear, never *which*.
+"""
+from __future__ import annotations
+
+from typing import List
+
+from .request import RequestState
+
+
+class BatchComposer:
+    def __init__(self, max_batch: int = 4, policy: str = "overlap"):
+        if max_batch < 1:
+            raise ValueError("max_batch must be >= 1")
+        if policy not in ("overlap", "fifo"):
+            raise ValueError(f"unknown composition policy {policy!r}")
+        self.max_batch = max_batch
+        self.policy = policy
+
+    def compose(self, runnable: List[RequestState]) -> List[RequestState]:
+        """Pick <= max_batch requests for the next iteration.  ``runnable``
+        arrives in admission order; the chosen subset keeps that order so
+        batch row <-> request mapping stays deterministic."""
+        if len(runnable) <= self.max_batch or self.policy == "fifo":
+            return runnable[: self.max_batch]
+        sig = {s.rid: s.predicted_experts() for s in runnable}
+        seed, candidates = runnable[0], runnable[1:]
+        chosen = [seed]
+        union = set(sig[seed.rid])
+        while len(chosen) < self.max_batch and candidates:
+            best_i, best_score = 0, -1
+            for i, cand in enumerate(candidates):
+                score = len(union & sig[cand.rid])
+                if score > best_score:          # ties keep the oldest
+                    best_i, best_score = i, score
+            pick = candidates.pop(best_i)
+            union |= sig[pick.rid]
+            chosen.append(pick)
+        # preserve admission order for deterministic row mapping
+        chosen_ids = {s.rid for s in chosen}
+        return [s for s in runnable if s.rid in chosen_ids]

@@ -1,0 +1,240 @@
+"""ServingLoop — continuous batching driven by the OD-MoE engine.
+
+Each outer iteration: (1) admit every request whose arrival time the
+virtual clock has passed, running real prefill on admission (the first
+token falls out of prefill, so TTFT = admission wait + prefill); (2)
+refresh each runnable request's SEP *peek* — a functional shadow step
+that yields the prediction for its next token without committing the
+shadow, so waiting requests never drift; (3) let the ``BatchComposer``
+pick <= max_batch requests, preferring overlapping predicted expert
+sets; (4) run one composed ``decode_batch`` through the engine — shared
+worker fleet, shared expert store, load events tagged with the batch's
+request ids — and charge its duration on the ``DecodeClock``; (5) split
+the batch back into per-request states, commit the participants' shadow
+states, and retire finished requests.
+
+Correctness and time are deliberately co-simulated: admission depends on
+the clock, the clock depends on the composed traces, and both share one
+event stream, so TTFT/TPOT/throughput come out of the same run that
+checks bit-exactness.
+
+The bit-exactness invariant (tested in tests/test_serving.py): every
+request's token stream is bit-identical to running it alone through
+``greedy_generate``, whatever batches it rode in — composition is pure
+scheduling, never arithmetic.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (AlignmentPolicy, DecodeClock, LayerRecord,
+                        ODMoEEngine, RTX3090_EDGE, ServingTimings,
+                        TokenRecord, Trace, concat_cache_lists,
+                        slice_cache_list, simulate_prefill_odmoe)
+from repro.core.predictor import recall_counts
+from repro.core.timing import HardwareProfile
+from .composer import BatchComposer
+from .request import Request, RequestQueue, RequestState
+
+
+@dataclass
+class StepRecord:
+    """One composed decode iteration: who rode, what it cost."""
+    step: int
+    request_ids: List[int]
+    record: TokenRecord
+    start_s: float
+    duration_s: float
+    stall_s: float
+
+
+@dataclass
+class ServeResult:
+    outputs: Dict[int, np.ndarray]       # rid -> generated tokens
+    timings: ServingTimings
+    trace: Trace                         # composed-step trace (loads etc.)
+    steps: List[StepRecord] = field(default_factory=list)
+    states: Dict[int, RequestState] = field(default_factory=dict)
+
+    @property
+    def mean_batch(self) -> float:
+        if not self.steps:
+            return 0.0
+        return float(np.mean([len(s.request_ids) for s in self.steps]))
+
+
+class ServingLoop:
+    def __init__(self, engine: ODMoEEngine, *, max_batch: int = 4,
+                 composer: Optional[BatchComposer] = None,
+                 profile: HardwareProfile = RTX3090_EDGE,
+                 policy: AlignmentPolicy = AlignmentPolicy(1, 1),
+                 max_seq_len: int = 0):
+        self.engine = engine
+        self.composer = composer or BatchComposer(max_batch)
+        self.profile = profile
+        self.policy = policy
+        self.max_seq_len = max_seq_len
+
+    # ------------------------------------------------------------- admit
+    def _admit(self, req: Request, cache_len: int, clock: DecodeClock
+               ) -> RequestState:
+        """Prefill ``req`` on the main node (real compute + modeled
+        time); its first token is emitted here."""
+        eng = self.engine
+        arrival_wait_end = clock.now
+        t_pre = simulate_prefill_odmoe(
+            eng.cfg, self.profile, len(req.prompt),
+            n_workers=eng.sched.n_workers)
+        clock.charge_prefill(t_pre)
+        batch = {"tokens": jnp.asarray(req.prompt)[None, :]}
+        token, cache_list, pos = eng.prefill_request(batch, cache_len)
+        state = RequestState(request=req, token=token,
+                             cache_list=cache_list, pos=pos,
+                             admit_s=arrival_wait_end,
+                             first_token_s=clock.now)
+        state.generated.append(int(token[0]))
+        if eng.shadow is not None:
+            state.shadow_state = eng.shadow.prefill_state(batch, cache_len)
+        return state
+
+    # -------------------------------------------------------- shadow peek
+    def _ensure_peek(self, state: RequestState) -> None:
+        """Functionally step the request's shadow to predict its next
+        token's experts, caching the result until the request actually
+        takes that step (composition must not advance shadows)."""
+        eng = self.engine
+        if eng.shadow is None or state.pending is not None:
+            return
+        n = len(state.generated)          # request-local iteration index
+        at = self.policy.align_token_at(n)
+        ak = self.policy.align_kv_at(n)
+        sh = state.shadow_state
+        if ak:
+            sh = eng.shadow.align_kv_state(
+                sh, {"caches": eng._stack(state.cache_list),
+                     "pos": state.pos})
+        shadow_in = state.token if at else sh["token"]
+        preds, new_sh = eng.shadow.step_state(sh, shadow_in)
+        state.pending = (preds, new_sh, at, ak)
+
+    # --------------------------------------------------------------- run
+    def run(self, requests: Sequence[Request]) -> ServeResult:
+        eng = self.engine
+        if not requests:
+            return ServeResult(outputs={}, timings=ServingTimings(
+                [], [], [], []), trace=Trace())
+        cache_len = self.max_seq_len or (
+            max(len(r.prompt) + r.max_new_tokens for r in requests) + 2)
+        queue = RequestQueue(requests)
+        clock = DecodeClock(eng.cfg, eng.sched, self.profile,
+                            shadow_scheme=(eng.shadow.scheme
+                                           if eng.shadow else "int8"),
+                            predictor=eng.predictor_kind)
+        trace = Trace()
+        steps: List[StepRecord] = []
+        step = 0
+        while not queue.all_done:
+            for req in queue.pop_arrived(clock.now):
+                state = self._admit(req, cache_len, clock)
+                queue.activate(state)
+                if state.done:               # max_new_tokens == 1
+                    state.finish_s = clock.now
+                    queue.retire(state)
+            runnable = queue.runnable()
+            if not runnable:
+                nxt = queue.next_arrival_s()
+                if nxt is None:
+                    break
+                clock.advance_to(nxt)        # idle until the next arrival
+                continue
+            for state in runnable:
+                self._ensure_peek(state)
+            batch = self.composer.compose(runnable)
+            self._decode_composed(batch, clock, trace, steps, step)
+            for state in list(batch):
+                if state.done:
+                    state.finish_s = clock.now
+                    queue.retire(state)
+            step += 1
+        return self._result(queue, trace, steps)
+
+    # ------------------------------------------------------ composed step
+    def _decode_composed(self, batch: List[RequestState],
+                         clock: DecodeClock, trace: Trace,
+                         steps: List[StepRecord], step: int) -> None:
+        eng = self.engine
+        token = jnp.concatenate([s.token for s in batch])
+        pos = jnp.concatenate([s.pos for s in batch])
+        caches = concat_cache_lists([s.cache_list for s in batch])
+        preds: Dict[int, np.ndarray] = {}
+        at = ak = False
+        if eng.shadow is not None:
+            per_req = [s.pending[0] for s in batch]
+            for li in per_req[0]:
+                preds[li] = np.concatenate([p[li] for p in per_req])
+            at = any(s.pending[2] for s in batch)
+            ak = any(s.pending[3] for s in batch)
+        rec = TokenRecord(index=step + 1, aligned_token=at, aligned_kv=ak)
+        eng.slots.set_request_context([s.rid for s in batch])
+        start = clock.now
+        new_token, caches, pos = eng.decode_batch(
+            token, caches, pos, preds, step, rec)
+        eng.slots.set_request_context(())
+        duration, stall = clock.step(rec)
+        trace.records.append(rec)
+        steps.append(StepRecord(step=step,
+                                request_ids=[s.rid for s in batch],
+                                record=rec, start_s=start,
+                                duration_s=duration, stall_s=stall))
+        for i, state in enumerate(batch):
+            state.token = new_token[i:i + 1]
+            state.cache_list = slice_cache_list(caches, i)
+            state.pos = pos[i:i + 1]
+            state.generated.append(int(new_token[i]))
+            if state.pending is not None:
+                state.shadow_state = state.pending[1]
+            state.pending = None
+            state.last_experts = frozenset(
+                (lr.layer, int(e)) for lr in rec.layers
+                for e in lr.true[i].reshape(-1))
+            sliced = self._slice_record(rec, i)
+            sliced.index = len(state.generated) - 1   # request-local n
+            state.trace.records.append(sliced)
+
+    @staticmethod
+    def _slice_record(rec: TokenRecord, i: int) -> TokenRecord:
+        """Request ``i``'s view of a composed record.  Loads/reloads are
+        shared across the batch, so per-request records carry routing and
+        recall only (reloads=0, assignments=[]); load accounting lives in
+        the composed-step trace and the worker-slot event log."""
+        out = TokenRecord(index=rec.index, aligned_token=rec.aligned_token,
+                          aligned_kv=rec.aligned_kv)
+        for lr in rec.layers:
+            pred_i = None if lr.predicted is None else lr.predicted[i:i + 1]
+            true_i = lr.true[i:i + 1]
+            out.layers.append(LayerRecord(
+                layer=lr.layer, moe_index=lr.moe_index, group=lr.group,
+                predicted=pred_i, true=true_i,
+                correct=(recall_counts(pred_i, true_i)
+                         if pred_i is not None else 0),
+                reloads=0, assignments=[]))
+        return out
+
+    # ------------------------------------------------------------ result
+    @staticmethod
+    def _result(queue: RequestQueue, trace: Trace,
+                steps: List[StepRecord]) -> ServeResult:
+        states = dict(sorted(queue.finished.items()))
+        timings = ServingTimings(
+            arrival_s=[s.request.arrival_s for s in states.values()],
+            first_token_s=[s.first_token_s for s in states.values()],
+            finish_s=[s.finish_s for s in states.values()],
+            tokens=[len(s.generated) for s in states.values()])
+        outputs = {rid: np.asarray(s.generated, np.int32)
+                   for rid, s in states.items()}
+        return ServeResult(outputs=outputs, timings=timings, trace=trace,
+                           steps=steps, states=states)

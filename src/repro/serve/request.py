@@ -1,0 +1,141 @@
+"""Request lifecycle for continuous batching over the cacheless engine.
+
+A ``Request`` is what arrives (prompt, token budget, arrival time); a
+``RequestState`` is everything the serving loop carries for it between
+composed decode iterations: the main-model decode state (per-layer
+caches with batch axis 1, absolute position, last emitted token), the
+request's own SEP shadow state, a cached shadow *peek* (the prediction
+for the request's next decode step, computed without committing the
+shadow so a request can wait out composition rounds without drifting),
+its generated tokens, and latency timestamps in the timing model's
+virtual clock.
+
+``RequestQueue`` orders arrivals, admits them when the clock reaches
+their arrival time, and tracks the active/finished populations.  It is
+deliberately free of scheduling policy — which active requests decode
+together each iteration is the ``BatchComposer``'s job.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, FrozenSet, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core import Trace
+
+
+@dataclass
+class Request:
+    """One serving request: ``prompt`` is a 1-D int32 token array."""
+    rid: int
+    prompt: np.ndarray
+    max_new_tokens: int
+    arrival_s: float = 0.0
+
+    def __post_init__(self):
+        self.prompt = np.asarray(self.prompt, np.int32).reshape(-1)
+        if self.max_new_tokens < 1:
+            raise ValueError("max_new_tokens must be >= 1 (the first "
+                             "token falls out of prefill)")
+
+
+@dataclass
+class RequestState:
+    """Mutable per-request decode state between composed iterations."""
+    request: Request
+    token: object                 # (1,) last emitted main token (jax)
+    cache_list: list              # per-layer caches, batch axis 1
+    pos: object                   # (1,) absolute position (jax)
+    shadow_state: Optional[dict] = None
+    # cached shadow peek: (preds {layer: (1,k)}, next_shadow_state,
+    # aligned_token, aligned_kv) — valid until the next committed step
+    pending: Optional[tuple] = None
+    generated: List[int] = field(default_factory=list)
+    last_experts: FrozenSet[Tuple[int, int]] = frozenset()
+    trace: Trace = field(default_factory=Trace)
+    admit_s: float = 0.0
+    first_token_s: float = 0.0
+    finish_s: float = 0.0
+
+    @property
+    def rid(self) -> int:
+        return self.request.rid
+
+    @property
+    def done(self) -> bool:
+        return len(self.generated) >= self.request.max_new_tokens
+
+    def predicted_experts(self) -> FrozenSet[Tuple[int, int]]:
+        """(layer, expert) set this request is predicted to activate on
+        its next decode step — the composer's overlap signature.  Falls
+        back to the previous step's true routing when no SEP peek is
+        available (non-SEP predictors)."""
+        if self.pending is not None:
+            preds = self.pending[0]
+            return frozenset((li, int(e)) for li, p in preds.items()
+                             for e in p.reshape(-1))
+        return self.last_experts
+
+
+def make_traffic(cfg, n: int, rate: float, prompt_len: int = 16,
+                 max_new: int = 10, seed: int = 0) -> List[Request]:
+    """Deterministic request mix shared by the CLI, benchmarks and
+    examples: prompt lengths jittered in [prompt_len/2, prompt_len],
+    token budgets in [max_new/2, max_new], Poisson arrivals at ``rate``
+    req/s of modeled time (<=0: everything at t=0)."""
+    from repro.core import poisson_arrivals
+    rng = np.random.default_rng(seed)
+    arrivals = poisson_arrivals(rate, n, seed=seed + 1)
+    reqs = []
+    for i in range(n):
+        p_lo = min(max(2, prompt_len // 2), prompt_len)
+        plen = int(rng.integers(p_lo, prompt_len + 1))
+        b_lo = min(max(1, max_new // 2), max_new)
+        budget = int(rng.integers(b_lo, max_new + 1))
+        prompt = rng.integers(0, cfg.vocab_size, plen).astype(np.int32)
+        reqs.append(Request(rid=i, prompt=prompt, max_new_tokens=budget,
+                            arrival_s=arrivals[i]))
+    return reqs
+
+
+class RequestQueue:
+    """Arrival-ordered admission + active/finished bookkeeping."""
+
+    def __init__(self, requests: Sequence[Request]):
+        rids = [r.rid for r in requests]
+        if len(set(rids)) != len(rids):
+            raise ValueError("request ids must be unique")
+        self._pending: List[Request] = sorted(
+            requests, key=lambda r: (r.arrival_s, r.rid))
+        self.active: List[RequestState] = []
+        self.finished: Dict[int, RequestState] = {}
+
+    # ---------------------------------------------------------- arrivals
+    def next_arrival_s(self) -> Optional[float]:
+        return self._pending[0].arrival_s if self._pending else None
+
+    def pop_arrived(self, now: float) -> List[Request]:
+        """Remove and return every not-yet-admitted request with
+        ``arrival_s <= now``, in arrival order."""
+        arrived = []
+        while self._pending and self._pending[0].arrival_s <= now:
+            arrived.append(self._pending.pop(0))
+        return arrived
+
+    # --------------------------------------------------------- lifecycle
+    def activate(self, state: RequestState) -> None:
+        self.active.append(state)
+
+    def retire(self, state: RequestState) -> None:
+        self.active.remove(state)
+        self.finished[state.rid] = state
+
+    def runnable(self) -> List[RequestState]:
+        """Active requests eligible for the next composed iteration, in
+        admission order (the composer's FIFO tie-break)."""
+        return [s for s in self.active if not s.done]
+
+    @property
+    def all_done(self) -> bool:
+        return not self._pending and not self.active

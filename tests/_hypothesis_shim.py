@@ -1,0 +1,87 @@
+"""Deterministic stand-in for ``hypothesis`` when it is not installed.
+
+The container does not ship hypothesis and nothing may be pip-installed,
+so ``conftest.py`` registers this module under ``sys.modules`` before
+test collection.  It implements exactly the API surface this suite uses
+— ``given``, ``settings(deadline, max_examples)`` and the ``integers`` /
+``floats`` / ``sampled_from`` / ``lists`` / ``text`` strategies — by
+running each property test over ``max_examples`` draws from a seeded
+RNG.  No shrinking, no database: failures reproduce exactly because the
+draw sequence is fixed.  If the real hypothesis is present it is used
+instead and this file is inert.
+"""
+from __future__ import annotations
+
+import random
+import string
+
+_DEFAULT_EXAMPLES = 20
+_ALPHABET = string.ascii_letters + string.digits + string.punctuation + " "
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def example(self, rng):
+        return self._draw(rng)
+
+
+class strategies:
+    """Namespace mirroring ``hypothesis.strategies``."""
+
+    @staticmethod
+    def integers(min_value=0, max_value=1 << 16):
+        return _Strategy(lambda r: r.randint(min_value, max_value))
+
+    @staticmethod
+    def floats(min_value=0.0, max_value=1.0, **_kw):
+        return _Strategy(lambda r: r.uniform(min_value, max_value))
+
+    @staticmethod
+    def sampled_from(elements):
+        pool = list(elements)
+        return _Strategy(lambda r: r.choice(pool))
+
+    @staticmethod
+    def booleans():
+        return _Strategy(lambda r: bool(r.getrandbits(1)))
+
+    @staticmethod
+    def lists(elements, min_size=0, max_size=10, **_kw):
+        return _Strategy(lambda r: [
+            elements.example(r)
+            for _ in range(r.randint(min_size, max_size))])
+
+    @staticmethod
+    def text(alphabet=_ALPHABET, min_size=0, max_size=20):
+        pool = list(alphabet)
+        return _Strategy(lambda r: "".join(
+            r.choice(pool) for _ in range(r.randint(min_size, max_size))))
+
+
+def settings(deadline=None, max_examples=_DEFAULT_EXAMPLES, **_kw):
+    def apply(fn):
+        fn._shim_max_examples = max_examples
+        return fn
+    return apply
+
+
+def given(**named_strategies):
+    def apply(fn):
+        def property_runner(*args, **kwargs):
+            n = getattr(property_runner, "_shim_max_examples",
+                        getattr(fn, "_shim_max_examples", _DEFAULT_EXAMPLES))
+            rng = random.Random(0)
+            for _ in range(n):
+                drawn = {k: s.example(rng)
+                         for k, s in named_strategies.items()}
+                fn(*args, **kwargs, **drawn)
+        # deliberately no functools.wraps: pytest must see the zero-arg
+        # signature, not the original one (whose parameters it would
+        # otherwise try to resolve as fixtures)
+        property_runner.__name__ = fn.__name__
+        property_runner.__doc__ = fn.__doc__
+        property_runner.__module__ = fn.__module__
+        return property_runner
+    return apply

@@ -1,7 +1,17 @@
+import sys
+
 import jax
 import pytest
 
 from repro.models.config import ModelConfig
+
+try:                                    # prefer the real hypothesis
+    import hypothesis  # noqa: F401
+except ModuleNotFoundError:             # container has none; use the shim
+    from tests import _hypothesis_shim as _shim
+
+    sys.modules["hypothesis"] = _shim
+    sys.modules["hypothesis.strategies"] = _shim.strategies
 
 jax.config.update("jax_platform_name", "cpu")
 

@@ -1,0 +1,19 @@
+"""Docs stay in sync with the code: README/docs must cover every
+``src/repro`` package (same check CI runs via tools/check_docs.py)."""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), os.pardir,
+                                "tools"))
+import check_docs  # noqa: E402
+
+
+def test_readme_and_architecture_exist():
+    assert os.path.exists(os.path.join(check_docs.ROOT, "README.md"))
+    assert os.path.exists(os.path.join(check_docs.ROOT, "docs",
+                                       "ARCHITECTURE.md"))
+
+
+def test_every_package_documented():
+    assert check_docs.repro_packages(), "no packages found"
+    assert check_docs.missing_packages() == []

@@ -1,0 +1,217 @@
+"""Continuous batching: bit-exactness under dynamic membership, the
+one-slot-per-worker invariant under expert-overlap composition, and
+timing-model monotonicity in arrival rate."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import tiny_moe
+from repro.core import (ODMoEEngine, concat_shadow_states,
+                        slice_shadow_state)
+from repro.models import greedy_generate, init_params
+from repro.serve import (BatchComposer, Request, RequestQueue, RequestState,
+                         ServingLoop)
+
+CFG = tiny_moe(num_layers=4)
+
+
+@pytest.fixture(scope="module")
+def model():
+    return CFG, init_params(CFG, jax.random.PRNGKey(0))
+
+
+def make_requests(cfg, n, arrivals, seed=0, min_new=3, max_new=8):
+    rng = np.random.default_rng(seed)
+    return [Request(rid=i,
+                    prompt=rng.integers(0, cfg.vocab_size,
+                                        int(rng.integers(5, 12))
+                                        ).astype(np.int32),
+                    max_new_tokens=int(rng.integers(min_new, max_new + 1)),
+                    arrival_s=arrivals[i])
+            for i in range(n)]
+
+
+def solo_reference(cfg, params, req):
+    batch = {"tokens": jnp.asarray(req.prompt)[None, :]}
+    return np.asarray(greedy_generate(cfg, params, batch,
+                                      req.max_new_tokens))[0]
+
+
+# ------------------------------------------------------------ bit-exactness
+def test_join_leave_bitexact(model):
+    """Requests joining and retiring mid-stream produce tokens
+    bit-identical to decoding each alone — composition is scheduling,
+    never arithmetic."""
+    cfg, params = model
+    # staggered arrivals: some overlap from t=0, later joiners mid-run
+    arrivals = [0.0, 0.0, 0.0, 0.02, 0.05]
+    reqs = make_requests(cfg, 5, arrivals, seed=3)
+    eng = ODMoEEngine(cfg, params, n_workers=8, predictor="sep",
+                      shadow_scheme="fp16")
+    res = ServingLoop(eng, max_batch=3).run(reqs)
+    for r in reqs:
+        assert np.array_equal(solo_reference(cfg, params, r),
+                              res.outputs[r.rid]), r.rid
+    # membership actually changed between steps (join/leave exercised)
+    memberships = [tuple(s.request_ids) for s in res.steps]
+    assert len(set(memberships)) > 1
+    assert res.mean_batch > 1.0
+    assert any(len(m) > 1 for m in memberships)
+
+
+def test_fifo_and_overlap_same_tokens(model):
+    """Composition policy changes scheduling only: fifo and overlap
+    serve identical per-request token streams."""
+    cfg, params = model
+    reqs = make_requests(cfg, 4, [0.0] * 4, seed=7)
+    outs = {}
+    for policy in ("overlap", "fifo"):
+        eng = ODMoEEngine(cfg, params, n_workers=8, predictor="sep",
+                          shadow_scheme="int8")
+        loop = ServingLoop(eng, max_batch=4,
+                           composer=BatchComposer(4, policy))
+        outs[policy] = loop.run(reqs).outputs
+    for rid in outs["overlap"]:
+        assert np.array_equal(outs["overlap"][rid], outs["fifo"][rid])
+
+
+# ------------------------------------------------------- slot invariant
+def test_one_slot_per_worker_under_composition(model):
+    """A composed batch can route more unique experts than the fleet
+    holds; waves must keep every worker serving exactly one expert at a
+    time (distinct workers within a wave, every routed expert computed
+    from a resident slot, nothing resident afterwards)."""
+    cfg, params = model
+    reqs = make_requests(cfg, 4, [0.0] * 4, seed=1, min_new=4, max_new=6)
+    # 4 workers, top-2, batch 4: up to 8 unique experts -> forced waves
+    eng = ODMoEEngine(cfg, params, n_workers=4, predictor="sep",
+                      shadow_scheme="nf4")
+    res = ServingLoop(eng, max_batch=4).run(reqs)
+    for r in reqs:                                   # exactness still holds
+        assert np.array_equal(solo_reference(cfg, params, r),
+                              res.outputs[r.rid])
+    saw_multi_wave = False
+    for rec in res.trace.records:
+        for lr in rec.layers:
+            saw_multi_wave |= len(lr.waves) > 1
+            needed = {int(e) for e in lr.true.reshape(-1)}
+            computed = [e for wave in lr.waves for e, _ in wave]
+            # every routed expert computed exactly once, from one slot
+            assert sorted(computed) == sorted(needed)
+            for wave in lr.waves:
+                workers = [w for _, w in wave]
+                assert len(set(workers)) == len(workers)   # one slot each
+                assert len(wave) <= eng.sched.n_workers
+    assert saw_multi_wave          # the scenario actually forced waves
+    # cacheless rule survives spill: nothing resident at the end
+    assert all(r is None for r in eng.slots.resident)
+
+
+def test_load_events_carry_request_context(model):
+    """Serving loads are tagged with the composed batch; overlapping
+    demand amortizes loads across requests."""
+    cfg, params = model
+    reqs = make_requests(cfg, 4, [0.0] * 4, seed=5)
+    eng = ODMoEEngine(cfg, params, n_workers=8, predictor="sep",
+                      shadow_scheme="fp16")
+    ServingLoop(eng, max_batch=4).run(reqs)
+    tagged = [e for e in eng.slots.events if e.requests]
+    assert tagged, "decode loads must carry request context"
+    assert any(len(e.requests) > 1 for e in tagged)
+
+
+# ------------------------------------------------------------ timing model
+def test_throughput_monotone_in_arrival_rate(model):
+    """Higher arrival rate (same work) must not lower aggregate
+    throughput: tighter arrivals mean more co-scheduling and less idle,
+    never less."""
+    cfg, params = model
+    thru = []
+    for rate in (5.0, 50.0, 0.0):      # 0 = burst (everything at t=0)
+        arrivals = ([0.0] * 4 if rate == 0.0 else
+                    list(np.arange(4) / rate))
+        reqs = make_requests(cfg, 4, arrivals, seed=11)
+        eng = ODMoEEngine(cfg, params, n_workers=8, predictor="sep",
+                          shadow_scheme="fp16")
+        res = ServingLoop(eng, max_batch=4).run(reqs)
+        thru.append(res.timings.tokens_per_s)
+    assert thru[0] <= thru[1] * 1.001
+    assert thru[1] <= thru[2] * 1.001
+
+
+def test_ttft_tpot_sane(model):
+    cfg, params = model
+    reqs = make_requests(cfg, 3, [0.0, 0.001, 0.002], seed=2)
+    eng = ODMoEEngine(cfg, params, n_workers=8, predictor="sep",
+                      shadow_scheme="int8")
+    res = ServingLoop(eng, max_batch=2).run(reqs)
+    t = res.timings
+    assert all(x > 0 for x in t.ttft_s)
+    assert all(x > 0 for x in t.tpot_s)
+    assert t.makespan_s > 0
+    rep = t.report()
+    assert rep["total_tokens"] == sum(len(v) for v in res.outputs.values())
+
+
+# ------------------------------------------------------------- unit pieces
+def test_shadow_state_concat_slice_roundtrip(model):
+    """Joining per-request shadow states along the batch axis and
+    slicing them back is lossless (the composed-shadow building block)."""
+    cfg, params = model
+    eng = ODMoEEngine(cfg, params, predictor="sep", shadow_scheme="int8")
+    rng = np.random.default_rng(0)
+    states = [eng.shadow.prefill_state(
+        {"tokens": jnp.asarray(rng.integers(0, cfg.vocab_size, (1, 6)))},
+        max_cache_len=12) for _ in range(2)]
+    joined = concat_shadow_states(states)
+    assert joined["pos"].shape == (2,)
+    for i, st in enumerate(states):
+        back = slice_shadow_state(joined, i)
+        assert np.array_equal(back["token"], st["token"])
+        assert np.array_equal(back["pos"], st["pos"])
+        flat_a = jax.tree.leaves(back["caches"])
+        flat_b = jax.tree.leaves(st["caches"])
+        assert all(np.array_equal(a, b) for a, b in zip(flat_a, flat_b))
+
+
+
+def test_request_queue_lifecycle():
+    reqs = [Request(rid=i, prompt=np.arange(4), max_new_tokens=2,
+                    arrival_s=t) for i, t in enumerate([0.3, 0.1, 0.2])]
+    q = RequestQueue(reqs)
+    assert q.next_arrival_s() == pytest.approx(0.1)
+    assert [r.rid for r in q.pop_arrived(0.25)] == [1, 2]
+    assert q.pop_arrived(0.25) == []
+    assert [r.rid for r in q.pop_arrived(0.5)] == [0]
+    assert q.next_arrival_s() is None
+    assert q.all_done                  # everything popped, none active
+    with pytest.raises(ValueError):    # duplicate ids rejected
+        RequestQueue([reqs[0], reqs[0]])
+
+
+def test_composer_prefers_overlap():
+    def fake(rid, sig):
+        s = RequestState(request=Request(rid=rid, prompt=np.arange(3),
+                                         max_new_tokens=4),
+                         token=None, cache_list=[], pos=None)
+        s.last_experts = frozenset(sig)
+        return s
+
+    a = fake(0, {(1, 0), (1, 1), (3, 2)})
+    b = fake(1, {(1, 5), (3, 6)})              # disjoint from a
+    c = fake(2, {(1, 0), (3, 2)})              # overlaps a
+    chosen = BatchComposer(max_batch=2).compose([a, b, c])
+    assert [s.rid for s in chosen] == [0, 2]
+    # fifo ignores signatures
+    chosen = BatchComposer(max_batch=2, policy="fifo").compose([a, b, c])
+    assert [s.rid for s in chosen] == [0, 1]
+
+
+def test_composer_validation():
+    with pytest.raises(ValueError):
+        BatchComposer(max_batch=0)
+    with pytest.raises(ValueError):
+        BatchComposer(policy="nope")
+    with pytest.raises(ValueError):
+        Request(rid=0, prompt=np.arange(3), max_new_tokens=0)

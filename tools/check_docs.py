@@ -1,0 +1,71 @@
+"""Docs coverage check: every top-level package under ``src/repro``
+must be mentioned (as ``repro.<pkg>``, ``src/repro/<pkg>`` or
+``<pkg>/``) in README.md or a file under docs/.
+
+Run directly (CI) or via tests/test_docs.py (tier-1):
+
+    python tools/check_docs.py
+"""
+from __future__ import annotations
+
+import os
+import re
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def repro_packages() -> list:
+    base = os.path.join(ROOT, "src", "repro")
+    # namespace packages (e.g. launch/) have no __init__.py — any
+    # directory holding python modules counts
+    return sorted(
+        d for d in os.listdir(base)
+        if os.path.isdir(os.path.join(base, d))
+        and any(f.endswith(".py")
+                for f in os.listdir(os.path.join(base, d))))
+
+
+def doc_text() -> str:
+    texts = []
+    readme = os.path.join(ROOT, "README.md")
+    if os.path.exists(readme):
+        with open(readme) as f:
+            texts.append(f.read())
+    docs_dir = os.path.join(ROOT, "docs")
+    if os.path.isdir(docs_dir):
+        for name in sorted(os.listdir(docs_dir)):
+            if name.endswith(".md"):
+                with open(os.path.join(docs_dir, name)) as f:
+                    texts.append(f.read())
+    return "\n".join(texts)
+
+
+def missing_packages() -> list:
+    text = doc_text()
+    missing = []
+    for pkg in repro_packages():
+        pattern = (rf"repro[./]{pkg}\b|src/repro/{pkg}\b|`{pkg}/`"
+                   rf"|\b{pkg}/ ")
+        if not re.search(pattern, text):
+            missing.append(pkg)
+    return missing
+
+
+def main() -> int:
+    pkgs = repro_packages()
+    if not pkgs:
+        print("no packages found under src/repro — wrong checkout?")
+        return 1
+    missing = missing_packages()
+    if missing:
+        print("packages not mentioned in README.md or docs/:")
+        for pkg in missing:
+            print(f"  src/repro/{pkg}")
+        return 1
+    print(f"docs cover all {len(pkgs)} src/repro packages")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
