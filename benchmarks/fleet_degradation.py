@@ -1,0 +1,102 @@
+"""Fleet degradation — TPOT vs failed-worker fraction and link skew.
+
+Replays one synthetic Mixtral-8x7B routing trace (recall 0.97, the
+measured SEP ballpark) through the timing model over a
+``repro.fleet.FleetSchedule`` while a ``FaultInjector`` kills a growing
+fraction of the 8-worker fleet a third of the way in, then over
+heterogeneous fleets whose links are progressively skewed (half the
+workers on slower PCIe).  Every point shares the identical
+expert-activation sequence, so the numbers isolate the fleet effect:
+
+  * ``kill*`` rows: decode tok/s + the degraded-mode TPOT split
+    (healthy steps vs steps with dead workers, ``degradation_x``);
+  * ``skew*`` rows: tok/s with half the fleet at 24/12/6/3 GB/s links;
+  * ``throttle`` row: a mid-run 4x bandwidth throttle on half the fleet.
+
+Artifact: benchmarks/artifacts/fleet_degradation.json.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.configs import get_config
+from repro.core import RTX3090_EDGE, simulate_odmoe, synthetic_trace
+from repro.fleet import (FaultEvent, FaultInjector, FleetSchedule,
+                         WorkerProfile, outage)
+
+from .common import row, save_artifact, timed
+
+N_WORKERS, GROUP = 8, 2
+KILL_COUNTS = (0, 1, 2, 4)
+SKEW_GBPS = (24.0, 12.0, 6.0, 3.0)
+
+
+def _trace(cfg, n_tokens: int):
+    return synthetic_trace(cfg, n_tokens, recall=0.97)
+
+
+def kill_point(cfg, trace, n_dead: int) -> dict:
+    sched = FleetSchedule(N_WORKERS, GROUP)
+    kill_at = max(1, len(trace.records) // 3)
+    events = [ev for w in range(n_dead) for ev in outage(w, kill_at)]
+    t = simulate_odmoe(cfg, trace, sched, RTX3090_EDGE,
+                       faults=FaultInjector(events))
+    rep = t.degraded_report(N_WORKERS)
+    # a fully-healthy run has no degraded steps; keep the artifact
+    # strict-JSON (no NaN)
+    rep = {k: (0.0 if isinstance(v, float) and np.isnan(v) else v)
+           for k, v in rep.items()}
+    rep.update(tokens_per_s=t.tokens_per_s, n_dead=n_dead,
+               io_stall_s=float(sum(t.io_stall_s)))
+    return rep
+
+
+def skew_point(cfg, trace, slow_gbps: float) -> dict:
+    profiles = tuple(
+        WorkerProfile(w, link_gbps=(RTX3090_EDGE.pcie_gbps
+                                    if w % 2 == 0 else slow_gbps))
+        for w in range(N_WORKERS))
+    sched = FleetSchedule(N_WORKERS, GROUP, profiles=profiles)
+    t = simulate_odmoe(cfg, trace, sched, RTX3090_EDGE)
+    return {"tokens_per_s": t.tokens_per_s, "slow_gbps": slow_gbps,
+            "io_stall_s": float(sum(t.io_stall_s))}
+
+
+def throttle_point(cfg, trace) -> dict:
+    sched = FleetSchedule(N_WORKERS, GROUP)
+    at = max(1, len(trace.records) // 3)
+    events = [FaultEvent(at, w, "throttle", factor=0.25)
+              for w in range(0, N_WORKERS, 2)]
+    t = simulate_odmoe(cfg, trace, sched, RTX3090_EDGE,
+                       faults=FaultInjector(events))
+    return {"tokens_per_s": t.tokens_per_s,
+            "io_stall_s": float(sum(t.io_stall_s))}
+
+
+def run(fast: bool = True):
+    cfg = get_config("mixtral-8x7b")
+    trace = _trace(cfg, 48 if fast else 192)
+    rows, table = [], {}
+    for n_dead in KILL_COUNTS:
+        rep, us = timed(kill_point, cfg, trace, n_dead)
+        table[f"kill{n_dead}"] = rep
+        rows.append(row(f"fleet/kill{n_dead}/tok_s", us,
+                        round(rep["tokens_per_s"], 3)))
+        rows.append(row(f"fleet/kill{n_dead}/tpot_degraded_ms", 0.0,
+                        round(rep["tpot_degraded_s"] * 1e3, 2)))
+    for gbps in SKEW_GBPS:
+        rep, us = timed(skew_point, cfg, trace, gbps)
+        table[f"skew{gbps:g}"] = rep
+        rows.append(row(f"fleet/skew{gbps:g}/tok_s", us,
+                        round(rep["tokens_per_s"], 3)))
+    rep, us = timed(throttle_point, cfg, trace)
+    table["throttle"] = rep
+    rows.append(row("fleet/throttle/tok_s", us,
+                    round(rep["tokens_per_s"], 3)))
+    save_artifact("fleet_degradation.json", table)
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

@@ -15,8 +15,9 @@ import time
 import jax
 
 from . import (fig3_recall, fig6_periods_recall, fig7_prefill,
-               fig8_ablation, fig9_periods_speed, roofline,
-               serving_throughput, table1_predictors, table2_speed)
+               fig8_ablation, fig9_periods_speed, fleet_degradation,
+               roofline, serving_throughput, table1_predictors,
+               table2_speed)
 
 MODULES = {
     "fig3": fig3_recall,
@@ -28,6 +29,7 @@ MODULES = {
     "table2": table2_speed,
     "roofline": roofline,
     "serving": serving_throughput,
+    "fleet": fleet_degradation,
 }
 
 

@@ -1,0 +1,104 @@
+"""Chaos demo: a heterogeneous worker fleet serving live traffic while
+scripted faults kill, recover and throttle workers mid-decode — and
+every request still decodes bit-identical to its solo dense reference.
+
+    PYTHONPATH=src python examples/fleet_chaos.py [--requests 6]
+                                                  [--kill-step 2]
+
+Shows the fault script as it fires, the per-step liveness timeline, the
+reloads that surviving workers absorbed for stranded experts, and the
+healthy- vs degraded-fleet TPOT split from the timing model.
+"""
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.core import ODMoEEngine
+from repro.fleet import FaultEvent, FaultInjector, WorkerProfile, outage
+from repro.models import greedy_generate, init_params
+from repro.serve import BatchComposer, ServingLoop, make_traffic
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--requests", type=int, default=6)
+    ap.add_argument("--arrival-rate", type=float, default=100.0,
+                    help="req/s of modeled time (<=0: all at t=0)")
+    ap.add_argument("--max-batch", type=int, default=3)
+    ap.add_argument("--tokens", type=int, default=8)
+    ap.add_argument("--kill-step", type=int, default=2)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_config("mixtral-8x7b").reduced(num_layers=6, d_model=128,
+                                             num_experts=8, d_expert=256)
+    params = init_params(cfg, jax.random.PRNGKey(args.seed))
+    reqs = make_traffic(cfg, args.requests, args.arrival_rate,
+                        max_new=args.tokens, seed=args.seed)
+
+    # uneven links (half the fleet on slow PCIe) + one two-slot worker
+    profiles = tuple(
+        WorkerProfile(w, link_gbps=(24.0 if w % 2 == 0 else 8.0),
+                      capacity=(2 if w == 0 else 1)) for w in range(8))
+    # the chaos script: one worker dies mid-step holding its predicted
+    # expert (stranded-load window), one dies and later recovers, one
+    # gets its link throttled 4x
+    faults = FaultInjector(
+        [FaultEvent(args.kill_step, worker=3, kind="kill", moe_index=1)]
+        + outage(5, args.kill_step + 1, args.kill_step + 4)
+        + [FaultEvent(args.kill_step + 2, worker=6, kind="throttle",
+                      factor=0.25)])
+
+    eng = ODMoEEngine(cfg, params, predictor="sep", shadow_scheme="int8",
+                      profiles=profiles, faults=faults)
+    loop = ServingLoop(eng, max_batch=args.max_batch,
+                       composer=BatchComposer(args.max_batch, "overlap"))
+    res = loop.run(reqs)
+
+    print(f"{cfg.name}: E={cfg.num_experts} top-{cfg.top_k}, "
+          f"{len(profiles)} heterogeneous workers, "
+          f"{args.requests} requests @ {args.arrival_rate}/s\n")
+    print("fault script (as fired):")
+    for ev in faults.applied:
+        scope = (f"mid-step @ MoE layer {ev.moe_index}"
+                 if ev.moe_index is not None else "step start")
+        extra = f" x{ev.factor}" if ev.kind == "throttle" else ""
+        print(f"  step {ev.step:>2}  worker {ev.worker}  "
+              f"{ev.kind}{extra}  ({scope})")
+
+    print("\nliveness timeline (step: alive workers, batch):")
+    for s in res.steps:
+        print(f"  {s.step:>3}  alive={s.alive_workers}  "
+              f"B={len(s.request_ids)}  {s.request_ids}")
+
+    reloads = [e for e in eng.slots.events if not e.predicted]
+    print(f"\nreloads absorbed by survivors: {len(reloads)} "
+          f"(workers {sorted({e.worker for e in reloads})})")
+    st = eng.slots.stats
+    print(f"slots: {st['failures']} failures, {st['recoveries']} "
+          f"recoveries, {st['failure_drops']} experts lost to dead "
+          f"workers, {st['reloads']} reloads total")
+
+    print(f"\n{'rid':>4}{'tokens':>8}{'exact':>7}")
+    for rid, st_ in res.states.items():
+        ref = np.asarray(greedy_generate(
+            cfg, params,
+            {"tokens": jnp.asarray(st_.request.prompt)[None, :]},
+            st_.request.max_new_tokens))[0]
+        exact = bool(np.array_equal(ref, res.outputs[rid]))
+        print(f"{rid:>4}{len(st_.generated):>8}{str(exact):>7}")
+        assert exact, f"request {rid} diverged under chaos"
+
+    rep = res.degraded_report()
+    print(f"\ndegraded-mode TPOT: healthy {rep['tpot_healthy_s']*1e3:.2f} ms"
+          f" vs degraded {rep['tpot_degraded_s']*1e3:.2f} ms over "
+          f"{rep['degraded_steps']}/{rep['steps']} steps "
+          f"(min alive {rep['min_alive_workers']}/8, "
+          f"x{rep['degradation_x']:.2f})")
+
+
+if __name__ == "__main__":
+    main()

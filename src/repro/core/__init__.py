@@ -11,8 +11,9 @@ from .predictor import (FrequencyPredictor, GateExtrapolator,
 from .schedule import GroupSchedule
 from .store import ExpertStore, LoadEvent, WorkerSlots
 from .timing import (RTX3090_EDGE, TPU_V5E, DecodeClock, HardwareProfile,
-                     ServingTimings, poisson_arrivals, simulate_cached,
-                     simulate_cpu, simulate_odmoe, simulate_offload_cache,
+                     ODMoETimings, ServingTimings, degraded_tpot_report,
+                     poisson_arrivals, simulate_cached, simulate_cpu,
+                     simulate_odmoe, simulate_offload_cache,
                      simulate_prefill_cached, simulate_prefill_odmoe,
                      synthetic_trace)
 
@@ -23,7 +24,8 @@ __all__ = [
     "SEPShadow", "concat_shadow_states", "moe_layer_indices",
     "slice_shadow_state", "GroupSchedule", "ExpertStore", "LoadEvent",
     "WorkerSlots", "RTX3090_EDGE", "TPU_V5E", "DecodeClock",
-    "HardwareProfile", "ServingTimings", "poisson_arrivals",
+    "HardwareProfile", "ODMoETimings", "ServingTimings",
+    "degraded_tpot_report", "poisson_arrivals",
     "simulate_cached", "simulate_cpu", "simulate_odmoe",
     "simulate_offload_cache", "simulate_prefill_cached",
     "simulate_prefill_odmoe", "synthetic_trace",

@@ -64,6 +64,7 @@ class LayerRecord:
     reloads: int
     assignments: List[Tuple[int, int]]   # (expert, worker)
     waves: Optional[List[List[Tuple[int, int]]]] = None  # per-wave subsets
+    touched: Tuple[int, ...] = ()        # every worker that took a load
 
 
 @dataclass
@@ -128,19 +129,35 @@ class ODMoEEngine:
     def __init__(self, cfg: ModelConfig, params, *, n_workers: int = 8,
                  group_size: int = 0, predictor: str = "sep",
                  shadow_scheme: str = "int8", lookahead: int = 4,
-                 physical_loading: bool = True, seed: int = 0):
+                 physical_loading: bool = True, seed: int = 0,
+                 profiles=None, faults=None):
         if cfg.is_encoder_decoder:
             raise ValueError("engine drives decoder-only models")
         self.cfg = cfg
         self.params = params
         self.moe_layers = moe_layer_indices(cfg)
         g = group_size or max(cfg.top_k, 1)
-        if n_workers % g:
+        if profiles is not None:
+            profiles = tuple(profiles)
+            n_workers = len(profiles)
+            if n_workers % g:
+                raise ValueError("len(profiles) must be divisible by the "
+                                 "group size")
+        elif n_workers % g:
             n_workers = g * max(1, n_workers // g)
-        self.sched = GroupSchedule(n_workers, g)
+        if profiles is not None or faults is not None:
+            # lazy: repro.fleet imports repro.core.schedule
+            from repro.fleet import FleetSchedule, uniform_profiles
+            self.sched = FleetSchedule(
+                n_workers, g, profiles=profiles or uniform_profiles(n_workers))
+        else:
+            self.sched = GroupSchedule(n_workers, g)
+        self.faults = faults
         self.store = ExpertStore(cfg, params)
         self.slots = WorkerSlots(self.store, n_workers,
-                                 physical=physical_loading)
+                                 physical=physical_loading,
+                                 profiles=getattr(self.sched, "profiles",
+                                                  None))
         self.predictor_kind = predictor
         self.shadow: Optional[SEPShadow] = None
         self.fly: Optional[GateExtrapolator] = None
@@ -230,8 +247,15 @@ class ODMoEEngine:
         for THIS iteration (rows in batch order).  Rows are arithmetically
         independent, so the serving loop may change batch membership
         freely between calls.  Appends per-layer records to ``rec``.
+
+        Scripted faults fire here: step-scoped events before anything
+        computes, layer-scoped ones inside ``_serve_and_compute`` (the
+        stranded-predicted-load window).  A worker death costs at most
+        the reloads for what it held — never the tokens.
         """
         cfg = self.cfg
+        if self.faults is not None:
+            self.faults.apply(step_idx, self.sched.state, self.slots)
         x = embed(token[:, None], self.params["embed"])
         pending: Dict[int, np.ndarray] = dict(preds)
         moe_i = -1
@@ -265,8 +289,11 @@ class ODMoEEngine:
                 self.freq.observe(li, true)
             x = x + y[:, None].astype(x.dtype)
             # prompt eviction — cacheless rule.  Every worker that took a
-            # load this layer (group + spill) drops its expert.
-            used = {w for _, w in lr.assignments}
+            # load this layer (predicted or reload, group or spill) drops
+            # its experts, so a mispredicted never-used resident cannot
+            # linger to fake a later hit.
+            used = set(lr.touched)
+            used.update(w for _, w in lr.assignments)
             used.update(self.sched.workers_of_group(lr.group))
             for w in sorted(used):
                 self.slots.evict(w)
@@ -288,19 +315,26 @@ class ODMoEEngine:
         bit-identical however the batch was composed.
         """
         group = self.sched.group_of(moe_i)
-        workers = self.sched.workers_of_group(group)
-        spill = self.sched.spill_workers(group)
+        touched: set = set()
         # 1) predicted experts were loaded ahead of time.  A composed
         # batch can predict more unique experts than the group holds;
-        # those spread onto the other groups' idle workers (the whole
-        # fleet serves the batch).  Predictions beyond the fleet size
-        # cannot be held anywhere and fall through to the reload path.
+        # those spread onto the other groups' idle workers and onto
+        # spare slots of multi-slot workers (the whole fleet serves the
+        # batch).  Predictions beyond the fleet's slot count cannot be
+        # held anywhere and fall through to the reload path.
         if pred is not None:
             pred_experts = list(dict.fromkeys(int(e) for e in pred.reshape(-1)))
-            targets = workers + spill
-            for e, w in zip(pred_experts, targets):
+            for e, w in zip(pred_experts, self.sched.load_targets(group)):
                 self.slots.load(step_idx, layer, e, w, predicted=True)
+                touched.add(w)
+        # mid-step faults: a worker dying HERE strands the predicted
+        # experts it just loaded — the gate pass below reloads them on a
+        # surviving worker (the paper's degraded-but-correct fallback)
+        if self.faults is not None:
+            self.faults.apply_layer(step_idx, moe_i, self.sched.state,
+                                    self.slots)
         # 2) gate result is ground truth: reload anything missing
+        order = self.sched.serving_order(group)    # alive workers only
         needed = list(dict.fromkeys(int(e) for e in true.reshape(-1)))
         reloads = 0
         assignments: List[Tuple[int, int]] = []
@@ -308,24 +342,33 @@ class ODMoEEngine:
         contrib: Dict[Tuple[int, int], jax.Array] = {}
         remaining = needed
         while remaining:
-            # workers already serving a *correct* prediction are claimed
+            # workers already serving a *correct* prediction are claimed;
+            # a multi-slot worker computes one expert per wave
             wave: Dict[int, int] = {}
+            claimed: set = set()
             for e in remaining:
                 w = self.slots.worker_with(layer, e)
-                if w is not None:
+                if w is not None and w not in claimed:
                     wave[e] = w
-            claimed = set(wave.values())
-            free = [w for w in workers + spill if w not in claimed]
+                    claimed.add(w)
+            free = [w for w in order if w not in claimed]
+            if not wave and not free:
+                raise RuntimeError(
+                    f"no alive workers left to serve layer {layer}")
             for e in remaining:
                 if e in wave:
                     continue
+                if self.slots.worker_with(layer, e) is not None:
+                    continue   # resident on a busy multi-slot worker:
+                    #            computes next wave, no reload needed
                 if not free:
                     break                          # overflow -> next wave
                 w = free.pop(0)
                 self.slots.load(step_idx, layer, e, w, predicted=False)
+                touched.add(w)
                 reloads += 1
                 wave[e] = w
-            self._compute_wave(h, true, gates, wave, contrib)
+            self._compute_wave(layer, h, true, gates, wave, contrib)
             done = [(e, wave[e]) for e in remaining if e in wave]
             assignments.extend(done)
             waves.append(done)
@@ -339,10 +382,11 @@ class ODMoEEngine:
         lr = LayerRecord(layer=layer, moe_index=moe_i, group=group,
                          predicted=pred, true=true, correct=correct,
                          reloads=reloads, assignments=assignments,
-                         waves=waves)
+                         waves=waves, touched=tuple(sorted(touched)))
         return lr, y
 
-    def _compute_wave(self, h, true, gates, wave: Dict[int, int], contrib):
+    def _compute_wave(self, layer, h, true, gates, wave: Dict[int, int],
+                      contrib):
         """Expert FFNs for the (row, rank) pairs routed to this wave's
         experts, consuming the physically-loaded slot weights."""
         for bi in range(true.shape[0]):
@@ -352,9 +396,7 @@ class ODMoEEngine:
                 if e not in wave:
                     continue
                 w = wave[e]
-                assert self.slots.resident[w] is not None, \
-                    "expert must be resident"
-                wd = self.slots.slot(w)
+                wd = self.slots.slot(w, layer, e)   # asserts residency
                 out = (jax.nn.silu(hb @ wd["w_gate"]) * (hb @ wd["w_up"])
                        ) @ wd["w_down"]
                 contrib[(bi, j)] = float(gates[bi, j]) * out
@@ -374,12 +416,12 @@ class ODMoEEngine:
             factor = {"fp16": 0.5, "int8": 0.25, "nf4": 0.125}.get(
                 self.shadow.scheme, 1.0)
             shadow = int(total * factor)
+        fleet_bytes = sum(self.slots.capacity) * self.store.expert_bytes
         return {
             "main_node_bytes": main,
-            "per_worker_bytes": self.store.expert_bytes,
+            "per_worker_bytes": self.slots.device_bytes_per_worker(),
             "n_workers": self.sched.n_workers,
             "shadow_node_bytes": shadow,
-            "total_bytes": main + shadow +
-            self.sched.n_workers * self.store.expert_bytes,
+            "total_bytes": main + shadow + fleet_bytes,
             "fully_cached_bytes": total,
         }

@@ -52,6 +52,25 @@ class GroupSchedule:
             order.extend(self.workers_of_group((group + step) % self.n_groups))
         return order
 
+    # ---------------------------------------------------- fleet extension
+    # Hooks the engine and timing clock schedule through.  The base
+    # schedule assumes every worker alive with one slot;
+    # ``repro.fleet.FleetSchedule`` overrides these with liveness-,
+    # link-speed- and capacity-aware orders.
+    def active_workers_of_group(self, group: int) -> List[int]:
+        """Workers of ``group`` currently able to serve (base: all)."""
+        return self.workers_of_group(group)
+
+    def serving_order(self, group: int) -> List[int]:
+        """Worker preference order for this group's layer: the group
+        itself, then spill."""
+        return self.workers_of_group(group) + self.spill_workers(group)
+
+    def load_targets(self, group: int) -> List[int]:
+        """Slot preference order for predicted loads (base: one slot per
+        worker, so identical to ``serving_order``)."""
+        return self.serving_order(group)
+
     # --------------------------------------------------------------- Eq. 1
     def t_maxload(self, t_main: float, t_worker: float) -> float:
         """Maximum expert-load duration with no compute stall (Eq. 1).

@@ -2,19 +2,37 @@
 
 ``ExpertStore`` holds every expert's FFN weights in host (numpy) memory —
 the paper's CPU-DRAM tier.  ``WorkerSlots`` models the distributed worker
-fleet: each worker owns exactly ONE device-resident expert slot (the
-paper's <1 GB GPU footprint) plus bookkeeping of what is resident and
-what is in flight.  ``load`` physically copies host weights into the slot
-(``jax.device_put``), so engine compute genuinely consumes slot contents;
-eviction is an overwrite — there is no cache.
+fleet: each worker owns a small number of device-resident expert slots
+(the paper's <1 GB GPU footprint; exactly one by default, more when a
+``repro.fleet.WorkerProfile`` grants a larger memory budget) plus
+bookkeeping of what is resident, what is in flight, and which workers
+are currently alive.  ``load`` physically copies host weights into a
+slot (``jax.device_put``), so engine compute genuinely consumes slot
+contents; eviction is removal or overwrite — there is no cache.  A
+``fail``-ed worker loses its residents (the device is gone), which
+forces reload-on-miss for anything it held; ``recover`` brings it back
+empty.
 
 All loads/evictions/hits/reloads are appended to an event log that the
 discrete-event timing model replays with real hardware constants.
+
+Stats semantics (pinned by tests/test_fleet.py):
+
+  * ``evictions`` counts every resident expert displaced on a live
+    worker — whether by ``load``'s capacity-overwrite path or by an
+    explicit ``evict`` (the cacheless rule).  Both paths are the same
+    event: a slot lost its occupant.
+  * experts dropped because their worker *died* count under
+    ``failure_drops``, never ``evictions`` — losing a device is not a
+    scheduling decision.
+  * ``hits`` count only loads that found their expert already resident;
+    the engine evicts every worker it touched after each layer, so a
+    mispredicted never-used resident cannot linger to fake a later hit.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
 import numpy as np
@@ -34,6 +52,7 @@ class LoadEvent:
     predicted: bool         # True: issued from SEP prediction; False: reload
     bytes: int
     requests: Tuple[int, ...] = ()   # serving: request ids sharing this load
+    profile: Optional[object] = None  # fleet: the worker's WorkerProfile
 
 
 class ExpertStore:
@@ -62,19 +81,46 @@ class ExpertStore:
 
 
 class WorkerSlots:
-    """``n_workers`` single-expert device slots with load/evict accounting."""
+    """``n_workers`` device expert-slot sets with load/evict/failure
+    accounting.  ``profiles`` (``repro.fleet.WorkerProfile``s) give
+    per-worker slot capacity and tag load events; omitted, every worker
+    has the paper's single slot."""
 
     def __init__(self, store: ExpertStore, n_workers: int,
-                 physical: bool = True):
+                 physical: bool = True,
+                 profiles: Optional[Sequence] = None):
         self.store = store
         self.n_workers = n_workers
         self.physical = physical  # False: bookkeep only (no device copies)
-        self.resident: List[Optional[Tuple[int, int]]] = [None] * n_workers
+        self.profiles = list(profiles) if profiles else None
+        if self.profiles is not None and len(self.profiles) != n_workers:
+            raise ValueError("one profile per worker required")
+        self.capacity: List[int] = (
+            [p.capacity for p in self.profiles] if self.profiles
+            else [1] * n_workers)
+        self.alive: List[bool] = [True] * n_workers
+        # occupied slots per worker, oldest first (capacity overwrite
+        # evicts FIFO); data keyed by (layer, expert)
+        self._occupied: List[List[Tuple[int, int]]] = [
+            [] for _ in range(n_workers)]
+        self._slot_data: List[Dict[Tuple[int, int], dict]] = [
+            {} for _ in range(n_workers)]
         self.events: List[LoadEvent] = []
         self.stats = {"loads": 0, "predicted_loads": 0, "reloads": 0,
-                      "hits": 0, "evictions": 0}
-        self._slot_data: List[Optional[dict]] = [None] * n_workers
+                      "hits": 0, "evictions": 0, "failures": 0,
+                      "recoveries": 0, "failure_drops": 0}
         self._request_context: Tuple[int, ...] = ()
+
+    @property
+    def resident(self) -> List[Optional[object]]:
+        """Per-worker residency view: ``None`` when empty, the single
+        ``(layer, expert)`` when one expert is resident, else a tuple of
+        them (capacity > 1)."""
+        out: List[Optional[object]] = []
+        for occ in self._occupied:
+            out.append(None if not occ
+                       else occ[0] if len(occ) == 1 else tuple(occ))
+        return out
 
     def set_request_context(self, request_ids) -> None:
         """Tag subsequent load events with the composed batch's request
@@ -85,43 +131,73 @@ class WorkerSlots:
     # ------------------------------------------------------------- actions
     def load(self, token: int, layer: int, expert: int, worker: int,
              predicted: bool) -> None:
-        """Copy (layer, expert) host weights into ``worker``'s slot."""
-        if self.resident[worker] == (layer, expert):
+        """Copy (layer, expert) host weights into a slot on ``worker``.
+        A full worker overwrites its oldest resident (counted as an
+        eviction)."""
+        if not self.alive[worker]:
+            raise RuntimeError(f"load onto dead worker {worker}")
+        key = (layer, expert)
+        if key in self._slot_data[worker]:
             self.stats["hits"] += 1
             return
-        if self.resident[worker] is not None:
+        if len(self._occupied[worker]) >= self.capacity[worker]:
+            victim = self._occupied[worker].pop(0)
+            del self._slot_data[worker][victim]
             self.stats["evictions"] += 1
         host = self.store.get_host(layer, expert)
-        if self.physical:
-            self._slot_data[worker] = {k: jax.device_put(v)
-                                       for k, v in host.items()}
-        else:
-            self._slot_data[worker] = host
-        self.resident[worker] = (layer, expert)
+        self._slot_data[worker][key] = (
+            {k: jax.device_put(v) for k, v in host.items()}
+            if self.physical else host)
+        self._occupied[worker].append(key)
         self.stats["loads"] += 1
         self.stats["predicted_loads" if predicted else "reloads"] += 1
-        self.events.append(LoadEvent(token, layer, expert, worker, predicted,
-                                     self.store.expert_bytes,
-                                     self._request_context))
+        self.events.append(LoadEvent(
+            token, layer, expert, worker, predicted,
+            self.store.expert_bytes, self._request_context,
+            self.profiles[worker] if self.profiles else None))
 
-    def slot(self, worker: int) -> dict:
-        assert self._slot_data[worker] is not None, "empty slot used"
-        return self._slot_data[worker]
+    def slot(self, worker: int, layer: int, expert: int) -> dict:
+        assert self.alive[worker], "dead worker used"
+        data = self._slot_data[worker].get((layer, expert))
+        assert data is not None, "expert must be resident"
+        return data
 
     def worker_with(self, layer: int, expert: int) -> Optional[int]:
-        for w, r in enumerate(self.resident):
-            if r == (layer, expert):
+        key = (layer, expert)
+        for w in range(self.n_workers):
+            if self.alive[w] and key in self._slot_data[w]:
                 return w
         return None
 
     def evict(self, worker: int) -> None:
-        """Prompt eviction after the expert computation (cacheless rule)."""
-        if self.resident[worker] is not None:
-            self.stats["evictions"] += 1
-        self.resident[worker] = None
-        self._slot_data[worker] = None
+        """Prompt eviction after the expert computation (cacheless rule):
+        drop everything resident on ``worker``."""
+        self.stats["evictions"] += len(self._occupied[worker])
+        self._occupied[worker] = []
+        self._slot_data[worker] = {}
+
+    # ------------------------------------------------------------ failures
+    def fail(self, worker: int) -> None:
+        """The worker's device is gone: mark dead and lose its residents
+        (``failure_drops``, not evictions) — anything it held must be
+        reloaded elsewhere on miss."""
+        if not self.alive[worker]:
+            return
+        self.alive[worker] = False
+        self.stats["failures"] += 1
+        self.stats["failure_drops"] += len(self._occupied[worker])
+        self._occupied[worker] = []
+        self._slot_data[worker] = {}
+
+    def recover(self, worker: int) -> None:
+        """The worker rejoins with empty slots."""
+        if self.alive[worker]:
+            return
+        self.alive[worker] = True
+        self.stats["recoveries"] += 1
 
     # -------------------------------------------------------------- memory
     def device_bytes_per_worker(self) -> int:
-        """Peak slot bytes — the paper's '<1 GB per worker' quantity."""
-        return self.store.expert_bytes
+        """Peak slot bytes — the paper's '<1 GB per worker' quantity
+        (scaled by the largest slot capacity in the fleet)."""
+        return self.store.expert_bytes * max(self.capacity)

@@ -92,14 +92,43 @@ def embedding_payload(cfg: ModelConfig, wb: int = 4) -> float:
 
 
 # --------------------------------------------------------------- OD-MoE
+def degraded_tpot_report(per_token_s: List[float], alive_workers: List[int],
+                         n_workers: int) -> Dict[str, float]:
+    """Split per-token decode time into healthy-fleet vs degraded-fleet
+    steps (any worker dead = degraded) — the chaos-run TPOT view."""
+    healthy = [d for d, a in zip(per_token_s, alive_workers)
+               if a >= n_workers]
+    degraded = [d for d, a in zip(per_token_s, alive_workers)
+                if a < n_workers]
+    mean = lambda xs: float(np.mean(xs)) if xs else float("nan")  # noqa: E731
+    return {
+        "steps": len(per_token_s),
+        "degraded_steps": len(degraded),
+        "min_alive_workers": (min(alive_workers) if alive_workers
+                              else n_workers),
+        "tpot_s": mean(per_token_s),
+        "tpot_healthy_s": mean(healthy),
+        "tpot_degraded_s": mean(degraded),
+        "degradation_x": (mean(degraded) / mean(healthy)
+                          if healthy and degraded else float("nan")),
+    }
+
+
 @dataclass
 class ODMoETimings:
     per_token_s: List[float]
     io_stall_s: List[float]
+    # per-step alive-worker counts when the replay ran over a
+    # FleetSchedule with faults; None for the always-healthy paper fleet
+    alive_workers: Optional[List[int]] = None
 
     @property
     def tokens_per_s(self) -> float:
         return 1.0 / float(np.mean(self.per_token_s))
+
+    def degraded_report(self, n_workers: int) -> Dict[str, float]:
+        alive = self.alive_workers or [n_workers] * len(self.per_token_s)
+        return degraded_tpot_report(self.per_token_s, alive, n_workers)
 
 
 class DecodeClock:
@@ -137,6 +166,10 @@ class DecodeClock:
         self.t_worker = profile.t_stream(lb["expert"]) + profile.t_lan(emb)
         self.t_load = profile.t_load(lb["expert"])
         self.t_head = profile.t_stream(lb["embed"])
+        # fleet awareness (repro.fleet.FleetSchedule): per-worker link
+        # bandwidths + shared liveness/throttle state
+        self._expert_bytes = lb["expert"]
+        self._fleet_state = getattr(sched, "state", None)
         # shadow: runs the whole (quantized) model on its own node
         qf = {"fp16": 0.5, "int8": 0.25, "nf4": 0.125}.get(shadow_scheme, 1.0)
         shadow_active = cfg.active_param_count() * wb * qf
@@ -144,6 +177,21 @@ class DecodeClock:
         self.align_payload = kv_bytes_per_token(cfg, wb)
         self.worker_free: Dict[int, float] = defaultdict(float)
         self.now = 0.0
+
+    def t_load_for(self, worker: int) -> float:
+        """Per-link expert-load duration: delegates to the fleet
+        schedule's link semantics (profiled bandwidth x throttle, with
+        this hardware profile's PCIe as the unpinned default); base
+        schedules price every link at ``t_load``."""
+        t_load_s = getattr(self.sched, "t_load_s", None)
+        if t_load_s is None:
+            return self.t_load
+        return t_load_s(worker, self._expert_bytes,
+                        default_gbps=self.profile.pcie_gbps)
+
+    def alive_workers(self) -> int:
+        return (self._fleet_state.n_alive if self._fleet_state is not None
+                else self.sched.n_workers)
 
     def advance_to(self, t: float) -> None:
         """Idle until ``t`` (waiting for the next arrival)."""
@@ -200,10 +248,14 @@ class DecodeClock:
             lr = layer_rec.get(li)
             t += self.t_router                 # gate runs on main node
             g = sched.group_of(moe_i)
-            workers = sched.workers_of_group(g)
+            # alive group workers; a dead worker's timeline freezes
+            workers = sched.active_workers_of_group(g)
             # composed batches overflow the group onto the rest of the
-            # fleet, same order as the engine's spill assignment
-            targets = workers + sched.spill_workers(g)
+            # fleet (and onto multi-slot workers' spare capacity), same
+            # order as the engine's spill assignment
+            targets = sched.load_targets(g)
+            if not targets:                    # whole fleet dead
+                raise RuntimeError("no alive workers in the fleet")
             # predicted loads: issued as early as prediction + worker allow
             load_done = 0.0
             if lr is not None and lr.predicted is not None:
@@ -213,8 +265,8 @@ class DecodeClock:
                     w = targets[j % len(targets)]
                     ls = max(pred_avail(li, t - self.t_router),
                              worker_free[w])
-                    worker_free[w] = ls + self.t_load
-                    load_done = max(load_done, ls + self.t_load)
+                    worker_free[w] = ls + self.t_load_for(w)
+                    load_done = max(load_done, worker_free[w])
             else:
                 # no prefetch at all: load after the gate result
                 n_true = (len({int(e) for e in lr.true.reshape(-1)})
@@ -223,16 +275,17 @@ class DecodeClock:
                 for j in range(n_loads):
                     w = targets[j % len(targets)]
                     ls = max(t, worker_free[w])
-                    worker_free[w] = ls + self.t_load
-                    load_done = max(load_done, ls + self.t_load)
-            # mispredictions: reload after gate result, queued round-robin
-            # over the same fleet order the engine assigns
+                    worker_free[w] = ls + self.t_load_for(w)
+                    load_done = max(load_done, worker_free[w])
+            # mispredictions (and faults' stranded experts): reload after
+            # gate result, queued round-robin over the same fleet order
+            # the engine assigns
             if lr is not None and lr.predicted is not None and lr.reloads:
                 for i in range(lr.reloads):
                     w = targets[i % len(targets)]
                     ls = max(t, worker_free[w])
-                    worker_free[w] = ls + self.t_load
-                    load_done = max(load_done, ls + self.t_load)
+                    worker_free[w] = ls + self.t_load_for(w)
+                    load_done = max(load_done, worker_free[w])
             ready = t + profile.t_lan(self.emb)  # embedding reaches workers
             ec_start = max(ready, load_done)
             stall += max(0.0, ec_start - ready)
@@ -247,16 +300,34 @@ class DecodeClock:
 def simulate_odmoe(cfg: ModelConfig, trace: Trace, sched: GroupSchedule,
                    profile: HardwareProfile,
                    shadow_scheme: str = "int8",
-                   predictor: str = "sep") -> ODMoETimings:
+                   predictor: str = "sep",
+                   faults=None) -> ODMoETimings:
     """Replay an engine trace through the Fig. 2 pipeline (see
-    ``DecodeClock`` for the event mechanics)."""
+    ``DecodeClock`` for the event mechanics).  ``faults`` (a
+    ``repro.fleet.FaultInjector``; requires ``sched`` to be a
+    ``FleetSchedule``) fires each record's due events before its step,
+    so kills/throttles degrade the replayed wall clock.  The replay
+    starts from scratch: the injector and the schedule's fleet state
+    are reset first, so the engine's own run (which consumed the same
+    script and killed the same workers) can be replayed directly."""
     clock = DecodeClock(cfg, sched, profile, shadow_scheme, predictor)
-    per_token, stalls = [], []
-    for rec in trace.records:
-        d, s = clock.step(rec)
-        per_token.append(d)
-        stalls.append(s)
-    return ODMoETimings(per_token, stalls)
+    if faults is not None:
+        faults.reset()
+        sched.state.reset()
+    per_token, stalls, alive = [], [], []
+    try:
+        for rec in trace.records:
+            if faults is not None:
+                faults.apply_step_all(rec.index, sched.state)
+            d, s = clock.step(rec)
+            per_token.append(d)
+            stalls.append(s)
+            alive.append(clock.alive_workers())
+    finally:
+        if faults is not None:
+            sched.state.reset()    # don't leak the script's end state
+            #                        into later replays of this schedule
+    return ODMoETimings(per_token, stalls, alive)
 
 
 # ---------------------------------------------------------------- serving

@@ -1,0 +1,14 @@
+"""Heterogeneous fault-tolerant worker fleet: per-worker capability
+profiles, scripted fault injection (kill/recover/throttle at chosen
+decode steps), and a liveness- and link-aware extension of the paper's
+group schedule.  See docs/ARCHITECTURE.md for the failure-injection
+walkthrough."""
+from .faults import FaultEvent, FaultInjector, outage
+from .profile import (DEFAULT_LINK_GBPS, FleetState, WorkerProfile,
+                      uniform_profiles)
+from .schedule import FleetSchedule
+
+__all__ = [
+    "DEFAULT_LINK_GBPS", "FaultEvent", "FaultInjector", "FleetSchedule",
+    "FleetState", "WorkerProfile", "outage", "uniform_profiles",
+]

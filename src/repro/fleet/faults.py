@@ -1,0 +1,118 @@
+"""Scripted fault injection: kill, recover, or throttle workers at
+chosen decode steps (the HOBBIT degraded-service regime, reproduced as
+chaos scenarios over the cacheless engine).
+
+Events are deterministic and engine-visible: a *kill* marks the worker
+dead in the shared ``FleetState`` and drops its resident experts from
+``WorkerSlots`` (the device is gone, so any in-flight predicted expert
+is stranded and must reload elsewhere — the "at most one stalled
+reload" path); *recover* brings it back empty; *throttle* rescales its
+link bandwidth, which only the timing model feels.
+
+Two hook points mirror where failures bite in Fig. 2's pipeline:
+
+  * step-scoped events (``moe_index is None``) apply before the decode
+    iteration starts — the worker is simply absent from scheduling;
+  * layer-scoped events apply **mid-step**, after the predicted experts
+    for that MoE layer were physically loaded but before the gate
+    result claims them — the stranded-load window where a death costs a
+    visible reload on a surviving worker.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import List, Optional, Sequence
+
+from .profile import FleetState
+
+KINDS = ("kill", "recover", "throttle")
+
+
+@dataclass(frozen=True)
+class FaultEvent:
+    """One scripted fault.  ``step`` compares against the engine's
+    decode-step counter (``generate``: token index ``n >= 1``; serving:
+    global composed-step index ``>= 0``)."""
+    step: int
+    worker: int
+    kind: str                        # "kill" | "recover" | "throttle"
+    factor: float = 1.0              # throttle: link-bandwidth multiplier
+    moe_index: Optional[int] = None  # None: step start; else mid-step,
+    #                                  after that MoE layer's predicted loads
+
+    def __post_init__(self):
+        if self.kind not in KINDS:
+            raise ValueError(f"unknown fault kind {self.kind!r}")
+        if self.kind == "throttle" and self.factor <= 0:
+            raise ValueError("throttle factor must be positive")
+
+
+def outage(worker: int, start_step: int, recover_step: Optional[int] = None,
+           moe_index: Optional[int] = None) -> List[FaultEvent]:
+    """kill at ``start_step`` (optionally mid-layer), recover at
+    ``recover_step`` (None: stays dead)."""
+    events = [FaultEvent(start_step, worker, "kill", moe_index=moe_index)]
+    if recover_step is not None:
+        if recover_step <= start_step:
+            raise ValueError("recover_step must follow start_step")
+        events.append(FaultEvent(recover_step, worker, "recover"))
+    return events
+
+
+class FaultInjector:
+    """Applies scripted ``FaultEvent``s exactly once, in script order.
+
+    The engine calls ``apply`` at each decode-step start and
+    ``apply_layer`` inside each MoE layer; trace-replay callers
+    (``simulate_odmoe``) that have no layer hook call
+    ``apply_step_all``.  ``applied`` keeps the fired events (with the
+    step they fired at) for assertions and chaos-run reports.
+    """
+
+    def __init__(self, events: Sequence[FaultEvent]):
+        self.events: List[FaultEvent] = list(events)
+        self._done = [False] * len(self.events)
+        self.applied: List[FaultEvent] = []
+
+    def reset(self) -> None:
+        self._done = [False] * len(self.events)
+        self.applied = []
+
+    # ------------------------------------------------------------ firing
+    def _fire(self, i: int, state: FleetState, slots=None) -> None:
+        ev = self.events[i]
+        self._done[i] = True
+        self.applied.append(ev)
+        if ev.kind == "kill":
+            state.kill(ev.worker)
+            if slots is not None:
+                slots.fail(ev.worker)
+        elif ev.kind == "recover":
+            state.recover(ev.worker)
+            if slots is not None:
+                slots.recover(ev.worker)
+        else:  # throttle
+            state.throttle(ev.worker, ev.factor)
+
+    def apply(self, step: int, state: FleetState, slots=None) -> None:
+        """Step-start hook: fire pending step-scoped events due by
+        ``step`` (``<=`` so no event is lost if steps are skipped)."""
+        for i, ev in enumerate(self.events):
+            if not self._done[i] and ev.moe_index is None and ev.step <= step:
+                self._fire(i, state, slots)
+
+    def apply_layer(self, step: int, moe_index: int, state: FleetState,
+                    slots=None) -> None:
+        """Mid-step hook: fire events scoped to this (step, MoE layer)."""
+        for i, ev in enumerate(self.events):
+            if (not self._done[i] and ev.moe_index == moe_index
+                    and ev.step <= step):
+                self._fire(i, state, slots)
+
+    def apply_step_all(self, step: int, state: FleetState,
+                       slots=None) -> None:
+        """Trace-replay hook: fire everything due by ``step``, layer-
+        scoped or not (replays have no per-layer callback)."""
+        for i, ev in enumerate(self.events):
+            if not self._done[i] and ev.step <= step:
+                self._fire(i, state, slots)

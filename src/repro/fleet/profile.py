@@ -1,0 +1,87 @@
+"""Per-worker capability profiles + mutable fleet liveness state.
+
+The paper's testbed is ten identical always-alive workers; real edge
+fleets are neither.  A ``WorkerProfile`` describes one worker's
+deviation from that ideal: its expert-loading link bandwidth (the
+SlimCaching heterogeneity axis), and how many device expert slots it
+can hold at once (multi-expert memory budgets).  ``FleetState`` is the
+mutable runtime side — which workers are currently alive and how far
+each link is throttled — shared by reference between the schedule, the
+engine and the timing clock so one fault event is visible everywhere.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import List, Optional, Sequence, Tuple
+
+# Default expert-load link speed when a profile does not pin one —
+# matches ``RTX3090_EDGE.pcie_gbps`` so a default fleet times exactly
+# like the homogeneous paper testbed.
+DEFAULT_LINK_GBPS = 24.0
+
+
+@dataclass(frozen=True)
+class WorkerProfile:
+    """Static capabilities of one worker.
+
+    ``link_gbps`` is the worker's expert-loading bandwidth in GB/s;
+    ``None`` inherits the hardware profile's PCIe bandwidth at timing
+    time (and ``DEFAULT_LINK_GBPS`` for schedule ordering).
+    ``capacity`` is the number of device-resident expert slots the
+    worker's memory budget allows (>= 1).
+    """
+    worker: int
+    link_gbps: Optional[float] = None
+    capacity: int = 1
+
+    def __post_init__(self):
+        if self.worker < 0:
+            raise ValueError("worker index must be >= 0")
+        if self.capacity < 1:
+            raise ValueError("capacity must be >= 1")
+        if self.link_gbps is not None and self.link_gbps <= 0:
+            raise ValueError("link_gbps must be positive")
+
+    def link_or_default(self, default_gbps: float = DEFAULT_LINK_GBPS
+                        ) -> float:
+        return self.link_gbps if self.link_gbps is not None else default_gbps
+
+
+def uniform_profiles(n_workers: int, link_gbps: Optional[float] = None,
+                     capacity: int = 1) -> Tuple[WorkerProfile, ...]:
+    """The paper's homogeneous fleet as explicit profiles."""
+    return tuple(WorkerProfile(w, link_gbps, capacity)
+                 for w in range(n_workers))
+
+
+@dataclass
+class FleetState:
+    """Mutable liveness/throttle state, shared by schedule + engine +
+    clock.  ``link_scale[w]`` multiplies worker ``w``'s link bandwidth
+    (1.0 = nominal; a throttle fault lowers it)."""
+    alive: List[bool]
+    link_scale: List[float]
+
+    @classmethod
+    def fresh(cls, n_workers: int) -> "FleetState":
+        return cls([True] * n_workers, [1.0] * n_workers)
+
+    def reset(self) -> None:
+        """Back to all-alive, unthrottled (trace replays start here)."""
+        self.alive = [True] * len(self.alive)
+        self.link_scale = [1.0] * len(self.link_scale)
+
+    @property
+    def n_alive(self) -> int:
+        return sum(self.alive)
+
+    def kill(self, worker: int) -> None:
+        self.alive[worker] = False
+
+    def recover(self, worker: int) -> None:
+        self.alive[worker] = True
+
+    def throttle(self, worker: int, factor: float) -> None:
+        if factor <= 0:
+            raise ValueError("throttle factor must be positive")
+        self.link_scale[worker] = factor

@@ -1,0 +1,119 @@
+"""Liveness- and link-aware worker scheduling over heterogeneous fleets.
+
+``FleetSchedule`` keeps ``GroupSchedule``'s group structure (paper
+§3.1: the i-th MoE layer is served by group ``i mod G``) and its
+Eq. (1) ``t_maxload`` analysis, but makes every ordering decision
+fleet-aware:
+
+  * dead workers are skipped everywhere (assignment, spill, serving
+    order) — the rebalancing that lets decode survive node loss;
+  * within a group, faster links come first (stable on ties, so a
+    homogeneous all-alive fleet orders exactly like ``GroupSchedule``);
+  * ``load_targets`` expands the serving order by per-worker slot
+    capacity (breadth-first), so multi-slot workers absorb extra
+    predicted experts before the schedule spills further;
+  * Eq. (1) is preserved *per worker*: the ``t_maxload`` budget is a
+    group property, but whether a given worker's link meets it is
+    per-link (``io_bottlenecked_worker``) — a throttled or slow worker
+    can be I/O-bound while its group mates are not.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import List, Optional, Sequence, Tuple
+
+from repro.core.schedule import GroupSchedule
+
+from .profile import (DEFAULT_LINK_GBPS, FleetState, WorkerProfile,
+                      uniform_profiles)
+
+
+@dataclass(frozen=True)
+class FleetSchedule(GroupSchedule):
+    profiles: Tuple[WorkerProfile, ...] = ()
+    state: Optional[FleetState] = field(default=None, compare=False,
+                                        repr=False)
+
+    def __post_init__(self):
+        GroupSchedule.__post_init__(self)
+        if not self.profiles:
+            object.__setattr__(self, "profiles",
+                               uniform_profiles(self.n_workers))
+        if len(self.profiles) != self.n_workers:
+            raise ValueError("one profile per worker required")
+        if [p.worker for p in self.profiles] != list(range(self.n_workers)):
+            raise ValueError("profiles must be ordered by worker index")
+        if self.state is None:
+            object.__setattr__(self, "state",
+                               FleetState.fresh(self.n_workers))
+
+    # ---------------------------------------------------------- liveness
+    def alive(self, worker: int) -> bool:
+        return self.state.alive[worker]
+
+    def link_gbps_of(self, worker: int,
+                     default_gbps: float = DEFAULT_LINK_GBPS) -> float:
+        """Effective link bandwidth: profile (or default) x throttle."""
+        return (self.profiles[worker].link_or_default(default_gbps)
+                * self.state.link_scale[worker])
+
+    def _fast_first(self, workers: Sequence[int]) -> List[int]:
+        # stable: equal-speed workers keep index order, so a uniform
+        # all-alive fleet reproduces GroupSchedule ordering exactly
+        return sorted(workers, key=lambda w: -self.link_gbps_of(w))
+
+    # ---------------------------------------------------------- ordering
+    def active_workers_of_group(self, group: int) -> List[int]:
+        return self._fast_first(
+            w for w in self.workers_of_group(group) if self.alive(w))
+
+    def spill_workers(self, group: int) -> List[int]:
+        """Overflow order: other groups' *alive* workers, nearest group
+        first, fast links first within each group."""
+        order: List[int] = []
+        for step in range(1, self.n_groups):
+            order.extend(self.active_workers_of_group(
+                (group + step) % self.n_groups))
+        return order
+
+    def serving_order(self, group: int) -> List[int]:
+        return self.active_workers_of_group(group) + self.spill_workers(group)
+
+    def load_targets(self, group: int) -> List[int]:
+        """Serving order expanded by slot capacity, breadth-first: every
+        alive worker takes one expert before any takes a second."""
+        order = self.serving_order(group)
+        out: List[int] = []
+        depth = 0
+        while True:
+            round_ws = [w for w in order
+                        if self.profiles[w].capacity > depth]
+            if not round_ws:
+                return out
+            out.extend(round_ws)
+            depth += 1
+
+    def assign(self, moe_index: int, experts: Sequence[int]
+               ) -> List[Tuple[int, int]]:
+        """(expert -> worker) over the alive serving order.  Unlike the
+        base schedule, overflow beyond the group spills onto other
+        groups' alive workers before any worker is reused."""
+        order = self.serving_order(self.group_of(moe_index))
+        if not order:
+            raise RuntimeError("no alive workers in the fleet")
+        return [(e, order[j % len(order)]) for j, e in enumerate(experts)]
+
+    # ------------------------------------------------------ Eq. 1, per-link
+    def t_load_s(self, worker: int, expert_bytes: int,
+                 default_gbps: float = DEFAULT_LINK_GBPS) -> float:
+        """Expert-load duration on this worker's (throttled) link."""
+        return expert_bytes / (self.link_gbps_of(worker, default_gbps) * 1e9)
+
+    def io_bottlenecked_worker(self, worker: int, expert_bytes: int,
+                               t_main: float, t_worker: float,
+                               default_gbps: float = DEFAULT_LINK_GBPS
+                               ) -> bool:
+        """Per-worker Eq. (1) check: does THIS link blow the group's
+        ``t_maxload`` budget?"""
+        return self.t_load_s(worker, expert_bytes, default_gbps) \
+            > self.t_maxload(t_main, t_worker)

@@ -22,6 +22,13 @@ The bit-exactness invariant (tested in tests/test_serving.py): every
 request's token stream is bit-identical to running it alone through
 ``greedy_generate``, whatever batches it rode in — composition is pure
 scheduling, never arithmetic.
+
+Serving survives fleet faults (tests/test_fleet.py): when the engine
+carries a ``repro.fleet.FaultInjector``, worker kills/throttles fire
+inside each composed ``decode_batch``; the loop keeps serving on the
+surviving workers, records per-step liveness in
+``StepRecord.alive_workers``, and ``ServeResult.degraded_report()``
+splits TPOT into healthy- vs degraded-fleet steps.
 """
 from __future__ import annotations
 
@@ -34,7 +41,8 @@ import numpy as np
 from repro.core import (AlignmentPolicy, DecodeClock, LayerRecord,
                         ODMoEEngine, RTX3090_EDGE, ServingTimings,
                         TokenRecord, Trace, concat_cache_lists,
-                        slice_cache_list, simulate_prefill_odmoe)
+                        degraded_tpot_report, slice_cache_list,
+                        simulate_prefill_odmoe)
 from repro.core.predictor import recall_counts
 from repro.core.timing import HardwareProfile
 from .composer import BatchComposer
@@ -50,6 +58,7 @@ class StepRecord:
     start_s: float
     duration_s: float
     stall_s: float
+    alive_workers: int = -1      # fleet liveness after this step's faults
 
 
 @dataclass
@@ -59,12 +68,22 @@ class ServeResult:
     trace: Trace                         # composed-step trace (loads etc.)
     steps: List[StepRecord] = field(default_factory=list)
     states: Dict[int, RequestState] = field(default_factory=dict)
+    n_workers: int = 0
 
     @property
     def mean_batch(self) -> float:
         if not self.steps:
             return 0.0
         return float(np.mean([len(s.request_ids) for s in self.steps]))
+
+    def degraded_report(self) -> Dict[str, float]:
+        """Healthy- vs degraded-fleet TPOT over the composed steps (see
+        ``repro.core.timing.degraded_tpot_report``)."""
+        return degraded_tpot_report(
+            [s.duration_s for s in self.steps],
+            [s.alive_workers if s.alive_workers >= 0 else self.n_workers
+             for s in self.steps],
+            self.n_workers)
 
 
 class ServingLoop:
@@ -126,7 +145,8 @@ class ServingLoop:
         eng = self.engine
         if not requests:
             return ServeResult(outputs={}, timings=ServingTimings(
-                [], [], [], []), trace=Trace())
+                [], [], [], []), trace=Trace(),
+                n_workers=eng.sched.n_workers)
         cache_len = self.max_seq_len or (
             max(len(r.prompt) + r.max_new_tokens for r in requests) + 2)
         queue = RequestQueue(requests)
@@ -160,7 +180,7 @@ class ServingLoop:
                     state.finish_s = clock.now
                     queue.retire(state)
             step += 1
-        return self._result(queue, trace, steps)
+        return self._result(queue, trace, steps, eng.sched.n_workers)
 
     # ------------------------------------------------------ composed step
     def _decode_composed(self, batch: List[RequestState],
@@ -178,7 +198,9 @@ class ServingLoop:
                 preds[li] = np.concatenate([p[li] for p in per_req])
             at = any(s.pending[2] for s in batch)
             ak = any(s.pending[3] for s in batch)
-        rec = TokenRecord(index=step + 1, aligned_token=at, aligned_kv=ak)
+        # index == the engine step counter (also what fault events and
+        # trace replays compare against), exactly as in generate()
+        rec = TokenRecord(index=step, aligned_token=at, aligned_kv=ak)
         eng.slots.set_request_context([s.rid for s in batch])
         start = clock.now
         new_token, caches, pos = eng.decode_batch(
@@ -189,7 +211,8 @@ class ServingLoop:
         steps.append(StepRecord(step=step,
                                 request_ids=[s.rid for s in batch],
                                 record=rec, start_s=start,
-                                duration_s=duration, stall_s=stall))
+                                duration_s=duration, stall_s=stall,
+                                alive_workers=clock.alive_workers()))
         for i, state in enumerate(batch):
             state.token = new_token[i:i + 1]
             state.cache_list = slice_cache_list(caches, i)
@@ -227,7 +250,7 @@ class ServingLoop:
     # ------------------------------------------------------------ result
     @staticmethod
     def _result(queue: RequestQueue, trace: Trace,
-                steps: List[StepRecord]) -> ServeResult:
+                steps: List[StepRecord], n_workers: int) -> ServeResult:
         states = dict(sorted(queue.finished.items()))
         timings = ServingTimings(
             arrival_s=[s.request.arrival_s for s in states.values()],
@@ -237,4 +260,4 @@ class ServingLoop:
         outputs = {rid: np.asarray(s.generated, np.int32)
                    for rid, s in states.items()}
         return ServeResult(outputs=outputs, timings=timings, trace=trace,
-                           steps=steps, states=states)
+                           steps=steps, states=states, n_workers=n_workers)

@@ -15,6 +15,30 @@ except ModuleNotFoundError:             # container has none; use the shim
 
 jax.config.update("jax_platform_name", "cpu")
 
+# Heavy cases of *computed* parametrizations (arch registries), marked
+# here because their id lists are generated.  Literal parametrizations
+# and whole modules carry explicit ``pytest.mark.slow`` instead.
+_SLOW_NODES = (
+    "test_archs_smoke.py::test_smoke_train_step[jamba-v0.1-52b]",
+    "test_archs_smoke.py::test_smoke_decode_step[jamba-v0.1-52b]",
+    "test_archs_smoke.py::test_smoke_train_step[llama3-8b]",
+    "test_archs_smoke.py::test_smoke_decode_step[llama3-8b]",
+    "test_archs_smoke.py::test_smoke_train_step[mamba2-2.7b]",
+    "test_archs_smoke.py::test_smoke_train_step[chatglm3-6b]",
+    "test_archs_smoke.py::test_smoke_train_step[qwen3-moe-30b-a3b]",
+    "test_archs_smoke.py::test_smoke_train_step[internvl2-26b]",
+    "test_archs_smoke.py::test_smoke_train_step[seamless-m4t-large-v2]",
+    "test_archs_smoke.py::test_smoke_decode_step[seamless-m4t-large-v2]",
+    "test_models.py::test_decode_matches_teacher_forcing[hybrid]",
+    "test_models.py::test_decode_matches_teacher_forcing[audio-encdec]",
+)
+
+
+def pytest_collection_modifyitems(config, items):
+    for item in items:
+        if item.nodeid.endswith(_SLOW_NODES):
+            item.add_marker(pytest.mark.slow)
+
 
 @pytest.fixture(autouse=True, scope="module")
 def _release_jit_code():

@@ -21,8 +21,12 @@ def setup():
     return cfg, params, batch, ref
 
 
+# sep-int8 stays in the fast tier as the representative SEP exactness
+# check; the other shadow schemes ride the slow tier
 @pytest.mark.parametrize("predictor,scheme", [
-    ("sep", "fp16"), ("sep", "int8"), ("sep", "nf4"),
+    pytest.param("sep", "fp16", marks=pytest.mark.slow),
+    ("sep", "int8"),
+    pytest.param("sep", "nf4", marks=pytest.mark.slow),
     ("nextgate", None), ("multigate", None), ("freq", None),
     ("random", None), ("none", None)])
 def test_engine_exactness(setup, predictor, scheme):
@@ -35,6 +39,7 @@ def test_engine_exactness(setup, predictor, scheme):
     assert np.array_equal(np.asarray(toks), ref), predictor
 
 
+@pytest.mark.slow
 def test_sep_recall_ordering(setup):
     """fp16 shadow >= int8 shadow recall (paper Fig. 3 ordering)."""
     cfg, params, batch, _ = setup
@@ -48,6 +53,7 @@ def test_sep_recall_ordering(setup):
     assert recalls["fp16"] > 0.95
 
 
+@pytest.mark.slow
 def test_alignment_improves_recall(setup):
     """Aligned shadow must beat the unaligned one over enough tokens."""
     cfg, params, batch, _ = setup

@@ -1,0 +1,376 @@
+"""Heterogeneous fault-tolerant fleet: chaos kills stay bit-exact, the
+schedule skips dead workers and prefers fast links, slots gain capacity
+and a fail/recover path, and the timing model reports degraded TPOT.
+
+Also pins the ``WorkerSlots.stats`` accounting semantics (see the
+store.py docstring): displacement on a live worker — ``load``'s
+capacity-overwrite path or explicit ``evict`` — bumps ``evictions``;
+experts lost to a dead worker bump ``failure_drops`` only.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import tiny_moe
+from repro.configs import get_config
+from repro.core import (RTX3090_EDGE, ExpertStore, GroupSchedule,
+                        ODMoEEngine, WorkerSlots, simulate_odmoe,
+                        synthetic_trace)
+from repro.fleet import (DEFAULT_LINK_GBPS, FaultEvent, FaultInjector,
+                         FleetSchedule, FleetState, WorkerProfile, outage,
+                         uniform_profiles)
+from repro.models import greedy_generate, init_params
+from repro.serve import ServingLoop
+
+N_TOK = 8
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = tiny_moe(num_layers=4)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (1, 12),
+                                          0, cfg.vocab_size)}
+    ref = np.asarray(greedy_generate(cfg, params, batch, N_TOK))
+    return cfg, params, batch, ref
+
+
+# --------------------------------------------------------------- chaos
+def test_chaos_kill_mid_decode_bitexact(setup):
+    """THE fleet invariant: a worker dying mid-decode — after its
+    predicted expert was physically loaded, before the gate claimed
+    it — costs a visible reload on a survivor and a degraded TPOT,
+    never a token."""
+    cfg, params, batch, ref = setup
+    kill = FaultEvent(step=3, worker=1, kind="kill", moe_index=0)
+    eng = ODMoEEngine(cfg, params, n_workers=8, predictor="sep",
+                      shadow_scheme="fp16", faults=FaultInjector([kill]))
+    toks, trace = eng.generate(batch, N_TOK)
+    # tokens bit-identical to the dense reference despite the death
+    assert np.array_equal(np.asarray(toks), ref)
+    assert not eng.sched.state.alive[1] and not eng.slots.alive[1]
+    # the stranded expert's reload is visible in the event log, on a
+    # surviving worker (top-k is distinct, worker 1 held one of the two
+    # predicted experts of MoE layer 0, so >= 1 reload is guaranteed)
+    reloads = [e for e in eng.slots.events
+               if e.token == 3 and not e.predicted]
+    assert reloads and all(e.worker != 1 for e in reloads)
+    # at most one stalled reload for the single stranded expert
+    assert sum(lr.reloads for tr in trace.records for lr in tr.layers
+               if tr.index == 3) <= 2
+    # worker 1's only step-3 load is the stranded prediction for MoE
+    # layer 0 (issued before it died); it takes nothing afterwards
+    w1 = [e for e in eng.slots.events if e.worker == 1 and e.token == 3]
+    assert [(e.layer, e.predicted) for e in w1] == [(0, True)]
+    assert all(e.worker != 1 for e in eng.slots.events if e.token > 3)
+    assert eng.slots.stats["failures"] == 1
+    # degraded TPOT reported by the timing model over the same trace
+    t = simulate_odmoe(cfg, trace, FleetSchedule(8, 2), RTX3090_EDGE,
+                       shadow_scheme="fp16",
+                       faults=FaultInjector([kill]))
+    rep = t.degraded_report(8)
+    assert rep["degraded_steps"] > 0
+    assert rep["min_alive_workers"] == 7
+    assert rep["tpot_degraded_s"] > 0
+    assert min(t.alive_workers) == 7 and t.alive_workers[0] == 8
+
+
+@pytest.mark.slow
+def test_serving_through_failures(setup):
+    """Serving keeps composing batches while workers die and recover;
+    every request stays bit-identical to its solo reference and the
+    liveness timeline + degraded report expose the outage."""
+    cfg, params, _, _ = setup
+    rng = np.random.default_rng(3)
+    from repro.serve import Request
+    reqs = [Request(rid=i,
+                    prompt=rng.integers(0, cfg.vocab_size,
+                                        int(rng.integers(5, 12))
+                                        ).astype(np.int32),
+                    max_new_tokens=int(rng.integers(3, 8)),
+                    arrival_s=a)
+            for i, a in enumerate([0.0, 0.0, 0.0, 0.02])]
+    faults = FaultInjector(outage(2, 2, 6) + outage(6, 3))
+    eng = ODMoEEngine(cfg, params, n_workers=8, predictor="sep",
+                      shadow_scheme="fp16", faults=faults)
+    res = ServingLoop(eng, max_batch=3).run(reqs)
+    for r in reqs:
+        solo = np.asarray(greedy_generate(
+            cfg, params, {"tokens": jnp.asarray(r.prompt)[None, :]},
+            r.max_new_tokens))[0]
+        assert np.array_equal(solo, res.outputs[r.rid]), r.rid
+    alive = [s.alive_workers for s in res.steps]
+    assert min(alive) == 6                       # both outages overlapped
+    assert alive[-1] == 7                        # worker 2 recovered
+    rep = res.degraded_report()
+    assert rep["degraded_steps"] >= 1
+    assert rep["steps"] == len(res.steps)
+    # load events carry the worker profile (uniform fleet here)
+    tagged = [e for e in eng.slots.events if e.profile is not None]
+    assert tagged and tagged[0].profile.capacity == 1
+
+
+def test_whole_fleet_dead_raises(setup):
+    cfg, params, batch, _ = setup
+    faults = FaultInjector([FaultEvent(1, w, "kill") for w in range(2)])
+    eng = ODMoEEngine(cfg, params, n_workers=2, group_size=2,
+                      predictor="none", faults=faults)
+    with pytest.raises(RuntimeError, match="no alive workers"):
+        eng.generate(batch, 4)
+
+
+def test_heterogeneous_capacity_engine_exact(setup):
+    """Skewed links + multi-slot workers change scheduling only."""
+    cfg, params, batch, ref = setup
+    profiles = tuple(
+        WorkerProfile(w, link_gbps=(24.0 if w % 2 == 0 else 6.0),
+                      capacity=(2 if w < 4 else 1)) for w in range(8))
+    eng = ODMoEEngine(cfg, params, predictor="multigate",
+                      profiles=profiles)
+    toks, _ = eng.generate(batch, N_TOK)
+    assert np.array_equal(np.asarray(toks), ref)
+    assert all(r is None for r in eng.slots.resident)   # cacheless rule
+    assert eng.memory_report()["per_worker_bytes"] == \
+        2 * eng.store.expert_bytes
+
+
+def test_multislot_resident_waits_next_wave_no_reload(setup):
+    """An expert correctly predicted into a multi-slot worker's second
+    slot is computed in a later wave — never re-loaded as a fake reload
+    while its worker is busy."""
+    cfg, params, _, _ = setup
+    profiles = (WorkerProfile(0, capacity=2), WorkerProfile(1))
+    eng = ODMoEEngine(cfg, params, predictor="none", group_size=2,
+                      profiles=profiles)
+    layer = eng.moe_layers[0]
+    h = jnp.ones((1, cfg.d_model), jnp.float32)
+    gates = np.array([[0.5, 0.5]], np.float32)
+    # predictions fill w0, w1, then w0's second slot (breadth-first);
+    # truth routes to w0's two residents -> two waves, zero reloads
+    pred = np.array([[0, 1, 2]])
+    true = np.array([[0, 2]])
+    lr, _ = eng._serve_and_compute(1, layer, 0, pred, true, h, gates)
+    assert lr.reloads == 0
+    assert eng.slots.stats["reloads"] == 0
+    assert lr.waves == [[(0, 0)], [(2, 0)]]
+    assert sorted(lr.assignments) == [(0, 0), (2, 0)]
+
+
+# ------------------------------------------------------------ schedule
+def test_fleet_schedule_skips_dead_prefers_fast():
+    profiles = tuple(WorkerProfile(w, link_gbps=(32.0 if w in (1, 5)
+                                                 else 16.0))
+                     for w in range(8))
+    s = FleetSchedule(8, 2, profiles=profiles)
+    # fast link first within the group, stable on ties
+    assert s.active_workers_of_group(0) == [1, 0]
+    assert s.spill_workers(0) == [2, 3, 5, 4, 6, 7]
+    s.state.kill(1)
+    assert s.active_workers_of_group(0) == [0]
+    assert s.serving_order(0) == [0, 2, 3, 5, 4, 6, 7]
+    # assign spills past the group before reusing a worker
+    a = s.assign(0, [9, 4, 7])
+    assert [w for _, w in a] == [0, 2, 3]
+    # duplicate experts each get their own worker slot
+    a = s.assign(0, [5, 5])
+    assert [w for _, w in a] == [0, 2]
+    s.state.recover(1)
+    assert s.active_workers_of_group(0) == [1, 0]
+
+
+def test_uniform_fleet_orders_like_group_schedule():
+    base, fleet = GroupSchedule(8, 2), FleetSchedule(8, 2)
+    for g in range(base.n_groups):
+        assert fleet.active_workers_of_group(g) == base.workers_of_group(g)
+        assert fleet.spill_workers(g) == base.spill_workers(g)
+        assert fleet.serving_order(g) == base.serving_order(g)
+        assert fleet.load_targets(g) == base.load_targets(g)
+    assert fleet.t_maxload(1.0, 2.0) == base.t_maxload(1.0, 2.0)
+
+
+def test_load_targets_capacity_breadth_first():
+    profiles = (WorkerProfile(0, capacity=3), WorkerProfile(1),
+                WorkerProfile(2, capacity=2), WorkerProfile(3))
+    s = FleetSchedule(4, 2, profiles=profiles)
+    # round 1: every alive worker once; later rounds: spare slots only
+    assert s.load_targets(0) == [0, 1, 2, 3, 0, 2, 0]
+
+
+def test_eq1_per_worker_links():
+    """Eq. (1) budget is per group; whether a link meets it is per
+    worker — throttling flips the verdict for that worker alone."""
+    profiles = tuple(WorkerProfile(w, link_gbps=(24.0 if w < 4 else 2.0))
+                     for w in range(8))
+    s = FleetSchedule(8, 2, profiles=profiles)
+    eb = int(100e6)
+    tm, tw = 2e-3, 1e-3
+    tmax = s.t_maxload(tm, tw)                 # 4*2ms + 3*1ms = 11 ms
+    assert s.t_load_s(0, eb) == pytest.approx(eb / 24e9)
+    assert not s.io_bottlenecked_worker(0, eb, tm, tw)   # ~4.2 ms
+    assert s.io_bottlenecked_worker(5, eb, tm, tw)       # ~50 ms
+    s.state.throttle(0, 0.25)                  # 24 -> 6 GB/s: ~16.7 ms
+    assert s.io_bottlenecked_worker(0, eb, tm, tw)
+    assert s.t_load_s(0, eb) > tmax
+
+
+def test_fleet_schedule_validation():
+    with pytest.raises(ValueError):
+        FleetSchedule(8, 2, profiles=uniform_profiles(4))
+    with pytest.raises(ValueError):
+        FleetSchedule(2, 2, profiles=(WorkerProfile(1), WorkerProfile(0)))
+    with pytest.raises(ValueError):
+        WorkerProfile(0, capacity=0)
+    with pytest.raises(ValueError):
+        WorkerProfile(0, link_gbps=-1.0)
+
+
+# ------------------------------------------------------------- timing
+def test_fleet_timing_kills_and_skew_slow_decode():
+    """Replayed wall clock degrades with dead workers, slow links and
+    throttles — same routing trace throughout."""
+    cfg = get_config("mixtral-8x7b")
+    tr = synthetic_trace(cfg, 48, recall=0.97)
+    healthy = simulate_odmoe(cfg, tr, FleetSchedule(8, 2), RTX3090_EDGE)
+    faults = FaultInjector(outage(0, 16) + outage(4, 16))
+    chaos = simulate_odmoe(cfg, tr, FleetSchedule(8, 2), RTX3090_EDGE,
+                           faults=FaultInjector(faults.events))
+    assert chaos.tokens_per_s < healthy.tokens_per_s
+    rep = chaos.degraded_report(8)
+    assert rep["degraded_steps"] == 48 - 15
+    assert rep["degradation_x"] > 1.0
+    skew = tuple(WorkerProfile(w, link_gbps=(24.0 if w % 2 == 0 else 6.0))
+                 for w in range(8))
+    skewed = simulate_odmoe(cfg, tr, FleetSchedule(8, 2, profiles=skew),
+                            RTX3090_EDGE)
+    assert skewed.tokens_per_s < healthy.tokens_per_s
+    throttle = FaultInjector([FaultEvent(1, w, "throttle", factor=0.25)
+                              for w in range(8)])
+    throttled = simulate_odmoe(cfg, tr, FleetSchedule(8, 2), RTX3090_EDGE,
+                               faults=throttle)
+    assert throttled.tokens_per_s < healthy.tokens_per_s
+
+
+def test_replay_does_not_leak_fleet_state():
+    """A faulted replay resets the schedule's fleet state afterwards,
+    so chaos-then-baseline comparisons on ONE schedule are honest."""
+    cfg = get_config("mixtral-8x7b")
+    tr = synthetic_trace(cfg, 32, recall=0.97)
+    sched = FleetSchedule(8, 2)
+    chaos = simulate_odmoe(cfg, tr, sched, RTX3090_EDGE,
+                           faults=FaultInjector(outage(0, 8) + outage(4, 8)))
+    assert min(chaos.alive_workers) == 6
+    assert sched.state.alive == [True] * 8      # state restored
+    again = simulate_odmoe(cfg, tr, sched, RTX3090_EDGE)
+    assert min(again.alive_workers) == 8
+    fresh = simulate_odmoe(cfg, tr, FleetSchedule(8, 2), RTX3090_EDGE)
+    assert again.tokens_per_s == pytest.approx(fresh.tokens_per_s)
+
+
+def test_decode_clock_per_link_durations():
+    from repro.core import DecodeClock
+    cfg = get_config("mixtral-8x7b")
+    profiles = tuple(WorkerProfile(w, link_gbps=(24.0 if w == 0 else 6.0))
+                     for w in range(8))
+    sched = FleetSchedule(8, 2, profiles=profiles)
+    clock = DecodeClock(cfg, sched, RTX3090_EDGE)
+    assert clock.t_load_for(0) == pytest.approx(clock.t_load)
+    assert clock.t_load_for(1) == pytest.approx(4 * clock.t_load)
+    sched.state.throttle(0, 0.5)
+    assert clock.t_load_for(0) == pytest.approx(2 * clock.t_load)
+    sched.state.kill(3)
+    assert clock.alive_workers() == 7
+
+
+# ------------------------------------------------------- fault scripts
+def test_fault_injector_semantics():
+    st = FleetState.fresh(4)
+    inj = FaultInjector([FaultEvent(2, 0, "kill"),
+                         FaultEvent(2, 1, "kill", moe_index=1),
+                         FaultEvent(4, 0, "recover"),
+                         FaultEvent(3, 2, "throttle", factor=0.5)])
+    inj.apply(1, st)
+    assert st.alive == [True] * 4
+    inj.apply(2, st)                    # step-scoped only
+    assert st.alive == [False, True, True, True]
+    inj.apply_layer(2, 0, st)           # wrong layer: nothing
+    assert st.alive[1]
+    inj.apply_layer(2, 1, st)
+    assert not st.alive[1]
+    inj.apply(5, st)                    # catches up recover + throttle
+    assert st.alive[0] and st.link_scale[2] == 0.5
+    assert [e.kind for e in inj.applied] == \
+        ["kill", "kill", "recover", "throttle"]
+    inj.apply(9, st)                    # everything fires exactly once
+    assert len(inj.applied) == 4
+    inj.reset()
+    assert inj.applied == []
+    with pytest.raises(ValueError):
+        FaultEvent(0, 0, "explode")
+    with pytest.raises(ValueError):
+        FaultEvent(0, 0, "throttle", factor=0.0)
+    with pytest.raises(ValueError):
+        outage(0, 5, 5)
+
+
+# ------------------------------------------------------ slots + stats
+def _slots(cfg, params, profiles=None, n=4):
+    store = ExpertStore(cfg, params)
+    return WorkerSlots(store, n, physical=False, profiles=profiles)
+
+
+@pytest.fixture(scope="module")
+def tiny_store(setup):
+    cfg, params, _, _ = setup
+    return cfg, params
+
+
+def test_capacity_slots_and_failures(tiny_store):
+    cfg, params = tiny_store
+    profiles = (WorkerProfile(0, capacity=2), WorkerProfile(1),
+                WorkerProfile(2), WorkerProfile(3))
+    s = _slots(cfg, params, profiles)
+    s.load(0, 0, 0, worker=0, predicted=True)
+    s.load(0, 0, 1, worker=0, predicted=True)     # second slot, no evict
+    assert s.resident[0] == ((0, 0), (0, 1))
+    assert s.stats["evictions"] == 0
+    assert s.worker_with(0, 1) == 0
+    s.load(0, 0, 2, worker=0, predicted=False)    # full: FIFO overwrite
+    assert s.resident[0] == ((0, 1), (0, 2))
+    assert s.stats["evictions"] == 1
+    assert s.slot(0, 0, 2) is not None
+    # failure drops residents without counting evictions
+    s.fail(0)
+    assert s.resident[0] is None and not s.alive[0]
+    assert s.stats["failure_drops"] == 2 and s.stats["evictions"] == 1
+    assert s.worker_with(0, 1) is None            # forced reload-on-miss
+    with pytest.raises(RuntimeError):
+        s.load(1, 0, 3, worker=0, predicted=False)
+    s.recover(0)
+    s.load(1, 0, 3, worker=0, predicted=False)    # rejoins empty
+    assert s.resident[0] == (0, 3)
+    assert s.stats["recoveries"] == 1
+
+
+def test_stats_accounting_pinned(tiny_store):
+    """Regression over a scripted load/evict/overwrite/fail sequence —
+    the semantics the store docstring promises."""
+    cfg, params = tiny_store
+    s = _slots(cfg, params)                       # 4 workers, capacity 1
+    s.load(0, 0, 0, worker=0, predicted=True)     # predicted load
+    s.load(0, 0, 0, worker=0, predicted=True)     # resident: hit
+    s.load(0, 0, 1, worker=1, predicted=False)    # reload
+    s.load(0, 0, 2, worker=0, predicted=False)    # overwrite -> eviction
+    s.evict(0)                                    # explicit -> eviction
+    s.evict(0)                                    # empty: no double count
+    s.fail(1)                                     # drop -> failure_drops
+    s.fail(1)                                     # dead: no double count
+    s.recover(1)
+    assert s.stats == {"loads": 3, "predicted_loads": 1, "reloads": 2,
+                       "hits": 1, "evictions": 2, "failures": 1,
+                       "recoveries": 1, "failure_drops": 1}
+    assert s.stats["predicted_loads"] + s.stats["reloads"] == \
+        s.stats["loads"]
+    # event log saw exactly the physical loads, in order
+    assert [(e.expert, e.worker, e.predicted) for e in s.events] == \
+        [(0, 0, True), (1, 1, False), (2, 0, False)]

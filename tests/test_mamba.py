@@ -33,6 +33,7 @@ def test_seq_equals_recurrence(key):
                                np.asarray(st_dec["conv"]), atol=1e-5)
 
 
+@pytest.mark.slow
 @settings(deadline=None, max_examples=8)
 @given(chunk=st.sampled_from([2, 3, 5, 8, 16]), t=st.integers(6, 20))
 def test_chunk_size_invariance(chunk, t):

@@ -14,6 +14,7 @@ def mesh():
     return jax.make_mesh((1, 1), ("data", "model"))
 
 
+@pytest.mark.slow
 def test_a2a_matches_dense(mesh, key):
     cfg = tiny_moe(num_experts=4, top_k=2)
     params = init_moe(key, cfg)
@@ -28,6 +29,7 @@ def test_a2a_matches_dense(mesh, key):
         float(aux_ref["load_balance_loss"]), rel=1e-5)
 
 
+@pytest.mark.slow
 def test_a2a_matches_scatter_under_capacity_pressure(mesh, key):
     """Same capacity semantics: both drop over-capacity pairs."""
     cfg = tiny_moe(num_experts=4, top_k=2)
@@ -54,6 +56,7 @@ def test_a2a_indivisible_tokens_fall_back(mesh, key):
                                atol=1e-4, rtol=1e-4)
 
 
+@pytest.mark.slow
 def test_a2a_with_padded_experts(mesh, key):
     import dataclasses
     cfg = dataclasses.replace(tiny_moe(num_experts=3, top_k=2),

@@ -1,0 +1,100 @@
+"""Predictor + recall units against tiny hand-computed cases: Eq. (2)/(3)
+recall accounting (including duplicate-expert edges) and the
+GateExtrapolator / FrequencyPredictor / RandomPredictor baselines."""
+import numpy as np
+import pytest
+
+from conftest import tiny_moe
+from repro.core import LayerRecord, TokenRecord, Trace
+from repro.core.predictor import (FrequencyPredictor, GateExtrapolator,
+                                  RandomPredictor, recall_counts)
+
+
+# ------------------------------------------------------- recall (Eq. 2/3)
+def test_recall_counts_hand_cases():
+    # row 0: {1,2} ∩ {2,3} = {2};  row 1: {3,4} ∩ {4} = {4}
+    assert recall_counts(np.array([[1, 2], [3, 4]]),
+                         np.array([[2, 3], [4, 4]])) == 2
+    # duplicate predictions collapse (set semantics): one correct, not two
+    assert recall_counts(np.array([[2, 2]]), np.array([[2, 3]])) == 1
+    assert recall_counts(np.array([[0, 1]]), np.array([[2, 3]])) == 0
+    assert recall_counts(np.array([[0, 1]]), np.array([[1, 0]])) == 2
+
+
+def _layer(layer, pred, true, correct):
+    return LayerRecord(layer=layer, moe_index=layer, group=0,
+                       predicted=np.asarray(pred), true=np.asarray(true),
+                       correct=correct, reloads=0, assignments=[])
+
+
+def test_trace_recall_eq2_eq3_hand_case():
+    """recall(n) = c(n)/(k·L); overall recall pools across tokens."""
+    trace = Trace()
+    t1 = TokenRecord(index=1, aligned_token=True, aligned_kv=True)
+    t1.layers = [_layer(0, [[0, 1]], [[0, 1]], 2),    # 2/2
+                 _layer(1, [[2, 3]], [[3, 4]], 1)]    # 1/2
+    t2 = TokenRecord(index=2, aligned_token=True, aligned_kv=True)
+    t2.layers = [_layer(0, [[5, 6]], [[0, 1]], 0),    # 0/2
+                 _layer(1, [[2, 3]], [[2, 3]], 2)]    # 2/2
+    trace.records = [t1, t2]
+    assert trace.recall_per_token() == [pytest.approx(3 / 4),
+                                        pytest.approx(2 / 4)]
+    assert trace.recall() == pytest.approx(5 / 8)
+
+
+# -------------------------------------------------------- gate extrapolation
+def test_gate_extrapolator_hand_case():
+    """nextgate/multigate apply FUTURE routers to the current router
+    input; with one-hot routers the prediction is readable by eye."""
+    cfg = tiny_moe(num_experts=3, top_k=1, d_model=4)
+    d, E = 4, 3
+    w1 = np.zeros((d, E), np.float32)
+    w1[0, 2] = 1.0                      # h[0] > 0 -> expert 2
+    w2 = np.zeros((d, E), np.float32)
+    w2[0, 0] = 1.0                      # h[0] > 0 -> expert 0
+    routers = {0: np.zeros((d, E), np.float32), 1: w1, 2: w2}
+    h = np.array([[3.0, 0.0, 0.0, 0.0]], np.float32)
+    ge = GateExtrapolator(cfg, routers, lookahead=2)
+    preds = ge.predict_from(0, h)
+    assert sorted(preds) == [1, 2]
+    assert preds[1].tolist() == [[2]]
+    assert preds[2].tolist() == [[0]]
+    # lookahead clips at the model's last MoE layer
+    assert list(GateExtrapolator(cfg, routers, 1).predict_from(0, h)) == [1]
+    assert GateExtrapolator(cfg, routers, 2).predict_from(2, h) == {}
+    # k > 1 returns the top-k of the extrapolated gate, batch-shaped
+    cfg2 = tiny_moe(num_experts=3, top_k=2, d_model=4)
+    p = GateExtrapolator(cfg2, routers, 1).predict_from(0, h)[1]
+    assert p.shape == (1, 2) and p[0, 0] == 2
+
+
+# ----------------------------------------------------------- frequency
+def test_frequency_predictor_hand_case():
+    cfg = tiny_moe(num_experts=4, top_k=2)
+    fp = FrequencyPredictor(cfg)
+    fp.observe(0, np.array([[0, 1]]))
+    fp.observe(0, np.array([[1, 2]]))
+    pred = fp.predict(0, batch=3)
+    assert pred.shape == (3, 2)
+    assert pred[0, 0] == 1                     # counts: {1: 2, 0: 1, 2: 1}
+    assert pred[0, 1] in (0, 2)                # tie between 0 and 2
+    assert all((pred[b] == pred[0]).all() for b in range(3))   # tiled
+    # duplicate experts in one observation count each occurrence
+    fp.observe(1, np.array([[3, 3]]))
+    assert fp.counts[1][3] == 2
+    # unobserved layer predicts deterministically (all-zero counts)
+    assert fp.predict(2, batch=1).shape == (1, 2)
+
+
+# -------------------------------------------------------------- random
+def test_random_predictor_shape_and_determinism():
+    cfg = tiny_moe(num_experts=8, top_k=2)
+    a = RandomPredictor(cfg, seed=5)
+    p1 = a.predict(0, batch=4)
+    assert p1.shape == (4, 2)
+    assert ((0 <= p1) & (p1 < 8)).all()
+    assert all(len(set(row)) == len(row) for row in p1.tolist())  # no dup
+    b = RandomPredictor(cfg, seed=5)
+    assert np.array_equal(b.predict(0, batch=4), p1)   # seeded replay
+    c = RandomPredictor(cfg, seed=6)
+    assert not np.array_equal(c.predict(0, batch=4), p1)

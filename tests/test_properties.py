@@ -1,0 +1,100 @@
+"""Property-based round-trip contracts for batch-composition state
+(via tests/_hypothesis_shim.py when hypothesis is absent).
+
+The serving loop joins per-request decode state along the batch axis
+for every composed iteration and splits it back afterwards; these
+properties pin the contract that join/split is lossless — bit-exact
+per-request recovery for random batch sizes, cache lengths and slice
+orders — for both the main-model cache lists
+(``concat_cache_lists``/``slice_cache_list``) and the SEP shadow states
+(``concat_shadow_states``/``slice_shadow_state``).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from conftest import tiny_moe
+from repro.core import (ODMoEEngine, concat_cache_lists,
+                        concat_shadow_states, slice_cache_list,
+                        slice_shadow_state)
+from repro.models import init_params
+
+CFG = tiny_moe(num_layers=3)
+CACHE_LENS = (9, 13)
+
+# module-level lazy state: the hypothesis shim exposes property tests
+# with a zero-arg signature, so pytest fixtures cannot inject here
+_ENGINE = None
+_POOLS = {}
+
+
+def _engine():
+    global _ENGINE
+    if _ENGINE is None:
+        params = init_params(CFG, jax.random.PRNGKey(0))
+        _ENGINE = ODMoEEngine(CFG, params, predictor="sep",
+                              shadow_scheme="int8",
+                              physical_loading=False)
+    return _ENGINE
+
+
+def _pool(cache_len: int):
+    """Three prefilled request states (varying prompt lengths) sharing
+    ``cache_len`` — the precondition the serving loop guarantees."""
+    if cache_len not in _POOLS:
+        eng = _engine()
+        rng = np.random.default_rng(cache_len)
+        entries = []
+        for plen in (4, 6, 6):
+            batch = {"tokens": jnp.asarray(
+                rng.integers(0, CFG.vocab_size, (1, plen)))}
+            token, cache_list, pos = eng.prefill_request(batch, cache_len)
+            shadow = eng.shadow.prefill_state(batch, cache_len)
+            entries.append((token, cache_list, pos, shadow))
+        _POOLS[cache_len] = entries
+    return _POOLS[cache_len]
+
+
+def _leaves_equal(a, b) -> bool:
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    return len(la) == len(lb) and all(
+        x.shape == y.shape and np.array_equal(np.asarray(x), np.asarray(y))
+        for x, y in zip(la, lb))
+
+
+@settings(deadline=None, max_examples=12)
+@given(seed=st.integers(0, 10**9), cache_len=st.sampled_from(CACHE_LENS),
+       n=st.integers(1, 3))
+def test_cache_list_concat_slice_roundtrip(seed, cache_len, n):
+    """Every request's per-layer caches come back bit-exact from a
+    composed batch, whatever the batch size, cache length, pick
+    multiplicity, or slice order."""
+    rng = np.random.default_rng(seed)
+    pool = _pool(cache_len)
+    picks = [pool[int(rng.integers(0, len(pool)))] for _ in range(n)]
+    joined = concat_cache_lists([list(p[1]) for p in picks])
+    assert len(joined) == CFG.num_layers
+    for i in rng.permutation(n):
+        back = slice_cache_list(joined, int(i))
+        assert _leaves_equal(back, picks[i][1])
+
+
+@settings(deadline=None, max_examples=12)
+@given(seed=st.integers(0, 10**9), cache_len=st.sampled_from(CACHE_LENS),
+       n=st.integers(1, 3))
+def test_shadow_state_concat_slice_roundtrip(seed, cache_len, n):
+    """Same contract for the SEP shadow state pytrees."""
+    rng = np.random.default_rng(seed)
+    pool = _pool(cache_len)
+    picks = [pool[int(rng.integers(0, len(pool)))] for _ in range(n)]
+    joined = concat_shadow_states([p[3] for p in picks])
+    assert joined["pos"].shape == (n,)
+    assert joined["token"].shape == (n,)
+    for i in rng.permutation(n):
+        back = slice_shadow_state(joined, int(i))
+        assert np.array_equal(np.asarray(back["token"]),
+                              np.asarray(picks[i][3]["token"]))
+        assert np.array_equal(np.asarray(back["pos"]),
+                              np.asarray(picks[i][3]["pos"]))
+        assert _leaves_equal(back["caches"], picks[i][3]["caches"])

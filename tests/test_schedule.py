@@ -25,6 +25,18 @@ def test_assignment_one_to_one():
     # k > group size wraps round-robin
     a = s.assign(0, [1, 2, 3])
     assert [w for _, w in a] == [0, 1, 0]
+    # duplicate routed experts are positional: each occurrence gets the
+    # next worker (the engine dedups before loading; assign does not)
+    assert s.assign(0, [5, 5]) == [(5, 0), (5, 1)]
+
+
+def test_serving_order_and_load_targets_base():
+    """Base schedule: serving order = own group then spill; one slot
+    per worker, so load targets coincide."""
+    s = GroupSchedule(8, 2)
+    assert s.serving_order(1) == [2, 3, 4, 5, 6, 7, 0, 1]
+    assert s.load_targets(1) == s.serving_order(1)
+    assert s.active_workers_of_group(1) == [2, 3]
 
 
 @settings(deadline=None, max_examples=30)

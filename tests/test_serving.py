@@ -13,6 +13,10 @@ from repro.models import greedy_generate, init_params
 from repro.serve import (BatchComposer, Request, RequestQueue, RequestState,
                          ServingLoop)
 
+# real multi-request engine runs cost minutes of 1-core compute; the
+# queue/composer/round-trip units below stay in the fast tier
+slow = pytest.mark.slow
+
 CFG = tiny_moe(num_layers=4)
 
 
@@ -39,6 +43,7 @@ def solo_reference(cfg, params, req):
 
 
 # ------------------------------------------------------------ bit-exactness
+@slow
 def test_join_leave_bitexact(model):
     """Requests joining and retiring mid-stream produce tokens
     bit-identical to decoding each alone — composition is scheduling,
@@ -60,6 +65,7 @@ def test_join_leave_bitexact(model):
     assert any(len(m) > 1 for m in memberships)
 
 
+@slow
 def test_fifo_and_overlap_same_tokens(model):
     """Composition policy changes scheduling only: fifo and overlap
     serve identical per-request token streams."""
@@ -77,6 +83,7 @@ def test_fifo_and_overlap_same_tokens(model):
 
 
 # ------------------------------------------------------- slot invariant
+@slow
 def test_one_slot_per_worker_under_composition(model):
     """A composed batch can route more unique experts than the fleet
     holds; waves must keep every worker serving exactly one expert at a
@@ -108,6 +115,7 @@ def test_one_slot_per_worker_under_composition(model):
     assert all(r is None for r in eng.slots.resident)
 
 
+@slow
 def test_load_events_carry_request_context(model):
     """Serving loads are tagged with the composed batch; overlapping
     demand amortizes loads across requests."""
@@ -122,6 +130,7 @@ def test_load_events_carry_request_context(model):
 
 
 # ------------------------------------------------------------ timing model
+@slow
 def test_throughput_monotone_in_arrival_rate(model):
     """Higher arrival rate (same work) must not lower aggregate
     throughput: tighter arrivals mean more co-scheduling and less idle,
@@ -140,6 +149,7 @@ def test_throughput_monotone_in_arrival_rate(model):
     assert thru[1] <= thru[2] * 1.001
 
 
+@slow
 def test_ttft_tpot_sane(model):
     cfg, params = model
     reqs = make_requests(cfg, 3, [0.0, 0.001, 0.002], seed=2)

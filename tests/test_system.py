@@ -16,6 +16,9 @@ from repro.core import (AlignmentPolicy, ODMoEEngine, RTX3090_EDGE,
                         simulate_cached, simulate_odmoe)
 from repro.models import greedy_generate, init_params
 
+# end-to-end pipeline runs: the heaviest single tests -> slow tier
+pytestmark = pytest.mark.slow
+
 
 @pytest.fixture(scope="module")
 def system():

@@ -1,4 +1,5 @@
 """Discrete-event timing model: orderings the paper establishes."""
+import numpy as np
 import pytest
 
 from repro.configs import get_config
@@ -32,6 +33,40 @@ def test_recall_monotonicity():
         tr = synthetic_trace(CFG, 96, recall=r)
         speeds.append(simulate_odmoe(CFG, tr, SCHED, PROF).tokens_per_s)
     assert speeds[0] < speeds[1] < speeds[2]
+
+
+def test_eq1_matches_formula_across_group_shapes():
+    """t_maxload is exactly G·t^M + (G−1)·t^W for every fleet shape."""
+    for nw, g in [(4, 2), (8, 2), (8, 4), (16, 4), (8, 8), (12, 3)]:
+        s = GroupSchedule(nw, g)
+        G = nw // g
+        for tm, tw in [(0.5, 0.25), (2.0, 3.0), (1e-3, 7e-3)]:
+            assert s.t_maxload(tm, tw) == pytest.approx(G * tm +
+                                                        (G - 1) * tw)
+
+
+def test_io_bottleneck_flips_exactly_at_boundary():
+    """§3.1 check is strict: a load exactly filling the budget is still
+    hidden; one ulp more stalls compute."""
+    s = GroupSchedule(8, 2)
+    tm, tw = 0.3, 0.7
+    tmax = s.t_maxload(tm, tw)
+    assert not s.io_bottlenecked(tmax, tm, tw)
+    assert s.io_bottlenecked(np.nextafter(tmax, np.inf), tm, tw)
+    assert not s.io_bottlenecked(np.nextafter(tmax, -np.inf), tm, tw)
+
+
+def test_decode_time_monotone_nonincreasing_in_recall():
+    """Shared-seed synthetic traces couple the misprediction masks, so
+    raising recall can only remove reloads — decode time must be
+    monotone non-increasing along the grid."""
+    times = []
+    for r in (0.0, 0.25, 0.5, 0.75, 0.9, 1.0):
+        tr = synthetic_trace(CFG, 48, recall=r, seed=7)
+        times.append(float(np.mean(
+            simulate_odmoe(CFG, tr, SCHED, PROF).per_token_s)))
+    for faster, slower in zip(times[1:], times):
+        assert faster <= slower * (1 + 1e-9)
 
 
 def test_prefetch_beats_no_prefetch():

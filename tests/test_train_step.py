@@ -1,5 +1,6 @@
 """train_step: microbatch-accumulation equivalence + loss decrease."""
 import jax
+import pytest
 import jax.numpy as jnp
 import numpy as np
 
@@ -9,6 +10,7 @@ from repro.optim import AdamWConfig, init_opt_state
 from repro.launch.steps import make_train_step
 
 
+@pytest.mark.slow
 def test_microbatching_matches_full_batch(key):
     cfg = tiny_dense(num_layers=2)
     params = init_params(cfg, key)
@@ -28,6 +30,7 @@ def test_microbatching_matches_full_batch(key):
                                    atol=1e-5, rtol=1e-4)
 
 
+@pytest.mark.slow
 def test_remat_matches_no_remat(key):
     cfg = tiny_moe(num_layers=2)
     params = init_params(cfg, key)
