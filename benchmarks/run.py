@@ -17,7 +17,7 @@ import jax
 from . import (fig3_recall, fig6_periods_recall, fig7_prefill,
                fig8_ablation, fig9_periods_speed, fleet_degradation,
                roofline, serving_throughput, table1_predictors,
-               table2_speed)
+               table2_speed, transport_precision)
 
 MODULES = {
     "fig3": fig3_recall,
@@ -30,6 +30,7 @@ MODULES = {
     "roofline": roofline,
     "serving": serving_throughput,
     "fleet": fleet_degradation,
+    "transport": transport_precision,
 }
 
 

@@ -1,0 +1,123 @@
+"""Transport precision — the TPOT-vs-precision/memory frontier.
+
+Two parts, mirroring DESIGN.md §9's honesty split:
+
+  * REAL engine decode on the shared bench model under each transport
+    policy (fp32 / fp16 / int8 / nf4 / confidence-tiered), verifying
+    the tentpole invariant — tokens bit-identical to
+    ``greedy_generate(..., transport=policy)`` — and measuring the
+    packed wire bytes that actually moved.
+  * MODELED decode on the full-size Mixtral-8x7B config: the same
+    routing trace replayed through ``simulate_odmoe`` with each
+    transport policy, so TPOT differences come purely from Eq. (1)
+    pricing expert loads by packed bytes.
+
+Pinned here (and in tests/test_transport.py): int8 transport's modeled
+TPOT is strictly below fp32 on the Mixtral config, and its per-expert
+packed payload is <= 26% of fp32.
+
+    PYTHONPATH=src python -m benchmarks.transport_precision [--smoke]
+
+``--smoke`` (the CI fast job) runs ONE decode step through the real
+engine plus a short modeled sweep.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.configs import get_config
+from repro.core import (GroupSchedule, ODMoEEngine, RTX3090_EDGE,
+                        simulate_odmoe, synthetic_trace)
+from repro.models import greedy_generate, init_params
+from repro.quant import TieredPolicy, UniformPolicy, transport_expert_bytes
+
+from .common import bench_model, bench_prompts, row, save_artifact, timed
+
+SCHEMES = ("fp32", "fp16", "int8", "nf4")
+
+
+# ------------------------------------------------------------- real engine
+def engine_point(cfg, params, policy, tokens: int) -> dict:
+    """One real decode under ``policy``; exactness is asserted against
+    the reference under the SAME policy."""
+    prompt = bench_prompts(cfg, q=1)[0]
+    eng = ODMoEEngine(cfg, params, n_workers=8, predictor="freq",
+                      transport=policy)
+    toks, trace = eng.generate(prompt, tokens)
+    ref = np.asarray(greedy_generate(cfg, params, prompt, tokens,
+                                     transport=policy))
+    if not np.array_equal(np.asarray(toks), ref):
+        raise AssertionError(
+            f"decode diverged from reference under {policy.describe()}")
+    loads = eng.slots.stats["loads"]
+    return {
+        "policy": policy.describe(),
+        "loads": loads,
+        "bytes_moved": int(eng.slots.bytes_moved),
+        "fp32_bytes": int(loads * eng.store.expert_bytes),
+        "reduction_x": (loads * eng.store.expert_bytes
+                        / max(eng.slots.bytes_moved, 1)),
+    }
+
+
+# ---------------------------------------------------------------- modeled
+def modeled_point(full, trace, scheme_or_policy) -> dict:
+    t = simulate_odmoe(full, trace, GroupSchedule(8, 2), RTX3090_EDGE,
+                       transport=scheme_or_policy)
+    return {"tpot_ms": float(np.mean(t.per_token_s)) * 1e3,
+            "tokens_per_s": t.tokens_per_s,
+            "io_stall_ms": float(np.mean(t.io_stall_s)) * 1e3}
+
+
+def run(fast: bool = True, smoke: bool = False):
+    cfg, params = bench_model()
+    tokens = 2 if smoke else (4 if fast else 10)
+    n_trace = 8 if smoke else (48 if fast else 128)
+    rows, table = [], {"engine": {}, "modeled": {}}
+
+    # --- real engine: uniform schemes + calibrated tiered policy
+    policies = [UniformPolicy(s) for s in
+                (SCHEMES if not smoke else ("fp32", "int8"))]
+    cal_eng = ODMoEEngine(cfg, params, n_workers=8, predictor="freq")
+    _, cal_trace = cal_eng.generate(bench_prompts(cfg, q=1)[0], tokens)
+    policies.append(TieredPolicy.from_trace(cal_trace, low_fraction=0.5,
+                                            num_experts=cfg.num_experts))
+    for pol in policies:
+        rep, us = timed(engine_point, cfg, params, pol, tokens)
+        table["engine"][rep["policy"]] = rep
+        rows.append(row(f"transport/engine/{rep['policy']}/reduction_x",
+                        us, round(rep["reduction_x"], 3)))
+
+    # --- modeled frontier on full Mixtral-8x7B
+    full = get_config("mixtral-8x7b")
+    tr = synthetic_trace(full, n_trace, recall=0.97)
+    fp32_bytes = transport_expert_bytes(full, "fp32")
+    for s in SCHEMES:
+        rep = modeled_point(full, tr, s)
+        rep["expert_bytes_frac"] = transport_expert_bytes(full, s) / fp32_bytes
+        table["modeled"][s] = rep
+        rows.append(row(f"transport/modeled/{s}/tpot_ms", 0.0,
+                        round(rep["tpot_ms"], 2)))
+        rows.append(row(f"transport/modeled/{s}/bytes_frac", 0.0,
+                        round(rep["expert_bytes_frac"], 4)))
+    # acceptance pins: int8 strictly faster than fp32, payload <= 26%
+    assert (table["modeled"]["int8"]["tpot_ms"]
+            < table["modeled"]["fp32"]["tpot_ms"]), \
+        "int8 transport must beat fp32 modeled TPOT"
+    assert table["modeled"]["int8"]["expert_bytes_frac"] <= 0.26, \
+        "int8 packed expert payload must be <= 26% of fp32"
+
+    if not smoke:
+        save_artifact("transport_precision.json", table)
+    return rows
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI fast job: 1 decode step + short modeled sweep")
+    ap.add_argument("--full", action="store_true")
+    args = ap.parse_args()
+    for r in run(fast=not args.full, smoke=args.smoke):
+        print(r)

@@ -46,6 +46,8 @@ from repro.models.config import MOE_FF, NO_FF, ModelConfig
 from repro.models.layers import apply_norm, embed
 from repro.models.moe import route
 from repro.models.transformer import layer_params, logits_from_hidden
+from repro.quant.transport import resolve_policy, transport_params
+
 from .align import AlignmentPolicy
 from .predictor import (FrequencyPredictor, GateExtrapolator, RandomPredictor,
                         SEPShadow, moe_layer_indices, recall_counts)
@@ -65,6 +67,8 @@ class LayerRecord:
     assignments: List[Tuple[int, int]]   # (expert, worker)
     waves: Optional[List[List[Tuple[int, int]]]] = None  # per-wave subsets
     touched: Tuple[int, ...] = ()        # every worker that took a load
+    gates: Optional[np.ndarray] = None   # (B,k) gate weights (confidence
+    #                                      signal for TieredPolicy calib)
 
 
 @dataclass
@@ -130,11 +134,18 @@ class ODMoEEngine:
                  group_size: int = 0, predictor: str = "sep",
                  shadow_scheme: str = "int8", lookahead: int = 4,
                  physical_loading: bool = True, seed: int = 0,
-                 profiles=None, faults=None):
+                 profiles=None, faults=None, transport=None):
         if cfg.is_encoder_decoder:
             raise ValueError("engine drives decoder-only models")
         self.cfg = cfg
-        self.params = params
+        # ``transport`` (PrecisionPolicy / scheme name / None=fp32) fixes
+        # each expert's on-demand wire precision.  The engine computes
+        # with ``transport_params`` — the same round-tripped weights a
+        # worker reconstructs on arrival — so decode stays bit-identical
+        # to ``greedy_generate(..., transport=...)`` under the SAME
+        # policy: precision is part of the model contract, loads only
+        # move fewer bytes.
+        self.transport = resolve_policy(transport)
         self.moe_layers = moe_layer_indices(cfg)
         g = group_size or max(cfg.top_k, 1)
         if profiles is not None:
@@ -153,7 +164,14 @@ class ODMoEEngine:
         else:
             self.sched = GroupSchedule(n_workers, g)
         self.faults = faults
-        self.store = ExpertStore(cfg, params)
+        # the store packs the ORIGINAL weights once; the engine's own
+        # compute params unpack those same cached shards, so slot
+        # contents and main-node expert weights are bit-identical by
+        # construction (and the quantize pass runs once, not twice)
+        self.store = ExpertStore(cfg, params, policy=self.transport)
+        self.params = (params if self.transport.trivial
+                       else transport_params(cfg, params, self.transport,
+                                             packed=self.store.get_packed))
         self.slots = WorkerSlots(self.store, n_workers,
                                  physical=physical_loading,
                                  profiles=getattr(self.sched, "profiles",
@@ -382,7 +400,8 @@ class ODMoEEngine:
         lr = LayerRecord(layer=layer, moe_index=moe_i, group=group,
                          predicted=pred, true=true, correct=correct,
                          reloads=reloads, assignments=assignments,
-                         waves=waves, touched=tuple(sorted(touched)))
+                         waves=waves, touched=tuple(sorted(touched)),
+                         gates=gates)
         return lr, y
 
     def _compute_wave(self, layer, h, true, gates, wave: Dict[int, int],
@@ -417,6 +436,9 @@ class ODMoEEngine:
                 self.shadow.scheme, 1.0)
             shadow = int(total * factor)
         fleet_bytes = sum(self.slots.capacity) * self.store.expert_bytes
+        transport_max = max(
+            (self.store.packed_bytes(li, e) for li in self.moe_layers
+             for e in range(self.cfg.num_experts)), default=0)
         return {
             "main_node_bytes": main,
             "per_worker_bytes": self.slots.device_bytes_per_worker(),
@@ -424,4 +446,7 @@ class ODMoEEngine:
             "shadow_node_bytes": shadow,
             "total_bytes": main + shadow + fleet_bytes,
             "fully_cached_bytes": total,
+            # largest per-expert wire payload under the transport policy
+            # (== expert_bytes for fp32); slots still hold full width
+            "expert_transport_bytes": transport_max,
         }

@@ -28,6 +28,10 @@ Stats semantics (pinned by tests/test_fleet.py):
   * ``hits`` count only loads that found their expert already resident;
     the engine evicts every worker it touched after each layer, so a
     mispredicted never-used resident cannot linger to fake a later hit.
+  * ``bytes_moved`` (pinned by tests/test_transport.py) counts the
+    *packed* transport payload of every physical load — what actually
+    crossed the link under the store's ``PrecisionPolicy``.  Hits and
+    failures move nothing.
 """
 from __future__ import annotations
 
@@ -39,8 +43,8 @@ import numpy as np
 
 from repro.models.config import MOE_FF, ModelConfig
 from repro.models.transformer import layer_params
-
-EXPERT_WEIGHT_NAMES = ("w_gate", "w_up", "w_down")
+from repro.quant.transport import (EXPERT_WEIGHT_NAMES, PackedWeight,
+                                   resolve_policy)
 
 
 @dataclass
@@ -50,29 +54,74 @@ class LoadEvent:
     expert: int
     worker: int
     predicted: bool         # True: issued from SEP prediction; False: reload
-    bytes: int
+    bytes: int              # packed transport payload that crossed the link
     requests: Tuple[int, ...] = ()   # serving: request ids sharing this load
     profile: Optional[object] = None  # fleet: the worker's WorkerProfile
+    scheme: str = "fp32"    # transport precision this load shipped at
 
 
 class ExpertStore:
-    """Per-(layer, expert) host copies of the expert FFN weights."""
+    """Per-(layer, expert) host copies of the expert FFN weights, plus
+    the pre-packed transport shards the worker links actually move.
 
-    def __init__(self, cfg: ModelConfig, params):
+    ``policy`` (a ``repro.quant.PrecisionPolicy``, scheme name, or
+    ``None`` = fp32) fixes each expert's transport precision.  Shards
+    are packed ONCE here — a load ships the cached packed bytes, never
+    re-quantizes, and never copies the full FP32 tensors when a cheaper
+    wire format exists (the fp32 shard aliases the host arrays, so the
+    default path stays zero-copy too).
+    """
+
+    def __init__(self, cfg: ModelConfig, params, policy=None):
         self.cfg = cfg
+        self.policy = resolve_policy(policy)
         self.moe_layers: List[int] = [
             i for i, (_, ff) in enumerate(cfg.layer_kinds()) if ff == MOE_FF]
         self._host: Dict[Tuple[int, int], Dict[str, np.ndarray]] = {}
+        self._packed: Dict[Tuple[int, int], Dict[str, PackedWeight]] = {}
         for li in self.moe_layers:
             lp = layer_params(cfg, params, li)["ff"]
             for e in range(cfg.num_experts):
-                self._host[(li, e)] = {
-                    n: np.asarray(lp[n][e]) for n in EXPERT_WEIGHT_NAMES}
+                host = {n: np.asarray(lp[n][e]) for n in EXPERT_WEIGHT_NAMES}
+                self._host[(li, e)] = host
+                codec = self.policy.codec_for(li, e)
+                self._packed[(li, e)] = {
+                    n: codec.pack(host[n]) for n in EXPERT_WEIGHT_NAMES}
         sample = next(iter(self._host.values())) if self._host else {}
         self.expert_bytes = int(sum(a.nbytes for a in sample.values()))
 
     def get_host(self, layer: int, expert: int) -> Dict[str, np.ndarray]:
         return self._host[(layer, expert)]
+
+    def get_packed(self, layer: int, expert: int) -> Dict[str, PackedWeight]:
+        """The cached wire-format shard (packed once at construction)."""
+        return self._packed[(layer, expert)]
+
+    def scheme_of(self, layer: int, expert: int) -> str:
+        return self.policy.scheme_for(layer, expert)
+
+    def packed_bytes(self, layer: int, expert: int) -> int:
+        """Exact transport payload of one expert under the policy."""
+        return sum(pw.nbytes
+                   for pw in self._packed[(layer, expert)].values())
+
+    def unpack_shard(self, layer: int, expert: int,
+                     device: bool = True) -> Dict[str, jax.Array]:
+        """Dequantize-on-arrival: reconstruct full-width weights from
+        the packed shard.  ``device=True`` ships the packed parts to the
+        device first (that transfer is the modeled link payload) and
+        dequantizes there."""
+        codec = self.policy.codec_for(layer, expert)
+        if codec.scheme == "fp32" and not device:
+            # bookkeeping-only fp32 loads alias the host copies outright
+            # (the pre-codec zero-cost path)
+            return self._host[(layer, expert)]
+        out = {}
+        for name, pw in self._packed[(layer, expert)].items():
+            parts = (tuple(jax.device_put(p) for p in pw.parts)
+                     if device else None)
+            out[name] = codec.unpack(pw, parts)
+        return out
 
     def router_weights(self, params):
         """Routers live on the main node (non-expert parameters)."""
@@ -109,6 +158,10 @@ class WorkerSlots:
         self.stats = {"loads": 0, "predicted_loads": 0, "reloads": 0,
                       "hits": 0, "evictions": 0, "failures": 0,
                       "recoveries": 0, "failure_drops": 0}
+        # packed link bytes actually moved (pinned by test_transport):
+        # kept beside ``stats`` so the scripted stats regression stays
+        # byte-for-byte while transport accounting grows independently
+        self.bytes_moved: int = 0
         self._request_context: Tuple[int, ...] = ()
 
     @property
@@ -131,7 +184,9 @@ class WorkerSlots:
     # ------------------------------------------------------------- actions
     def load(self, token: int, layer: int, expert: int, worker: int,
              predicted: bool) -> None:
-        """Copy (layer, expert) host weights into a slot on ``worker``.
+        """Ship (layer, expert)'s *packed* shard into a slot on
+        ``worker`` and dequantize on arrival, so compute consumes the
+        transported precision while only packed bytes cross the link.
         A full worker overwrites its oldest resident (counted as an
         eviction)."""
         if not self.alive[worker]:
@@ -144,17 +199,18 @@ class WorkerSlots:
             victim = self._occupied[worker].pop(0)
             del self._slot_data[worker][victim]
             self.stats["evictions"] += 1
-        host = self.store.get_host(layer, expert)
-        self._slot_data[worker][key] = (
-            {k: jax.device_put(v) for k, v in host.items()}
-            if self.physical else host)
+        self._slot_data[worker][key] = self.store.unpack_shard(
+            layer, expert, device=self.physical)
         self._occupied[worker].append(key)
         self.stats["loads"] += 1
         self.stats["predicted_loads" if predicted else "reloads"] += 1
+        nbytes = self.store.packed_bytes(layer, expert)
+        self.bytes_moved += nbytes
         self.events.append(LoadEvent(
             token, layer, expert, worker, predicted,
-            self.store.expert_bytes, self._request_context,
-            self.profiles[worker] if self.profiles else None))
+            nbytes, self._request_context,
+            self.profiles[worker] if self.profiles else None,
+            self.store.scheme_of(layer, expert)))
 
     def slot(self, worker: int, layer: int, expert: int) -> dict:
         assert self.alive[worker], "dead worker used"

@@ -27,6 +27,8 @@ from typing import Dict, List, Optional
 import numpy as np
 
 from repro.models.config import ATTN, MOE_FF, DENSE_FF, ModelConfig
+from repro.quant.transport import resolve_policy, transport_expert_bytes
+
 from .align import AlignmentPolicy, kv_bytes_per_token
 from .engine import Trace
 from .schedule import GroupSchedule
@@ -149,7 +151,7 @@ class DecodeClock:
 
     def __init__(self, cfg: ModelConfig, sched: GroupSchedule,
                  profile: HardwareProfile, shadow_scheme: str = "int8",
-                 predictor: str = "sep"):
+                 predictor: str = "sep", transport=None):
         self.sched = sched
         self.profile = profile
         self.predictor = predictor
@@ -158,17 +160,26 @@ class DecodeClock:
         self.kinds = cfg.layer_kinds()
         emb = embedding_payload(cfg, wb)
         self.emb = emb
+        # transport precision: expert loads are priced by PACKED bytes
+        # (the codec wire format), while worker compute still streams
+        # full-width weights — dequantize-on-arrival restores them
+        self.transport = resolve_policy(transport)
+        self._cfg = cfg
+        self._wb = wb
+        self._scheme_bytes_cache: Dict[str, float] = {"fp32": lb["expert"]}
+        default_packed = (lb["expert"] if self.transport.trivial else
+                          self._scheme_bytes(self.transport.default_scheme))
         # stage durations
         self.t_main_attn = profile.t_stream(lb["attn"]) + 2 * profile.t_lan(emb)
         self.t_main_mamba = profile.t_stream(lb["mamba"])
         self.t_main_dense_ff = profile.t_stream(lb["dense_ff"])
         self.t_router = profile.t_stream(lb["router"])
         self.t_worker = profile.t_stream(lb["expert"]) + profile.t_lan(emb)
-        self.t_load = profile.t_load(lb["expert"])
+        self.t_load = profile.t_load(default_packed)
         self.t_head = profile.t_stream(lb["embed"])
         # fleet awareness (repro.fleet.FleetSchedule): per-worker link
         # bandwidths + shared liveness/throttle state
-        self._expert_bytes = lb["expert"]
+        self._expert_bytes = default_packed
         self._fleet_state = getattr(sched, "state", None)
         # shadow: runs the whole (quantized) model on its own node
         qf = {"fp16": 0.5, "int8": 0.25, "nf4": 0.125}.get(shadow_scheme, 1.0)
@@ -178,15 +189,35 @@ class DecodeClock:
         self.worker_free: Dict[int, float] = defaultdict(float)
         self.now = 0.0
 
-    def t_load_for(self, worker: int) -> float:
-        """Per-link expert-load duration: delegates to the fleet
-        schedule's link semantics (profiled bandwidth x throttle, with
-        this hardware profile's PCIe as the unpinned default); base
-        schedules price every link at ``t_load``."""
+    def _scheme_bytes(self, scheme: str) -> float:
+        """Packed bytes of one expert at ``scheme`` (cached; matches
+        ``TransportCodec.pack`` exactly — pinned by tests)."""
+        if scheme not in self._scheme_bytes_cache:
+            self._scheme_bytes_cache[scheme] = transport_expert_bytes(
+                self._cfg, scheme, self._wb)
+        return self._scheme_bytes_cache[scheme]
+
+    def _bytes_for(self, layer: int, expert) -> float:
+        """Wire payload of loading ``expert`` at ``layer`` under the
+        transport policy (default payload when the expert identity is
+        unknown, e.g. the timing model's group-padding loads)."""
+        if self.transport.trivial or expert is None:
+            return self._expert_bytes
+        return self._scheme_bytes(self.transport.scheme_for(layer,
+                                                            int(expert)))
+
+    def t_load_for(self, worker: int, nbytes: Optional[float] = None
+                   ) -> float:
+        """Per-link expert-load duration for ``nbytes`` of packed
+        payload (default: one expert at the policy's default scheme):
+        delegates to the fleet schedule's link semantics (profiled
+        bandwidth x throttle, with this hardware profile's PCIe as the
+        unpinned default); base schedules price every link at PCIe."""
+        nbytes = self._expert_bytes if nbytes is None else nbytes
         t_load_s = getattr(self.sched, "t_load_s", None)
         if t_load_s is None:
-            return self.t_load
-        return t_load_s(worker, self._expert_bytes,
+            return self.profile.t_load(nbytes)
+        return t_load_s(worker, nbytes,
                         default_gbps=self.profile.pcie_gbps)
 
     def alive_workers(self) -> int:
@@ -256,35 +287,56 @@ class DecodeClock:
             targets = sched.load_targets(g)
             if not targets:                    # whole fleet dead
                 raise RuntimeError("no alive workers in the fleet")
-            # predicted loads: issued as early as prediction + worker allow
+            # predicted loads: issued as early as prediction + worker
+            # allow; each priced by ITS expert's packed transport bytes
+            # (group-padding loads beyond the known experts price at the
+            # policy's default scheme)
             load_done = 0.0
             if lr is not None and lr.predicted is not None:
-                n_pred = len({int(e) for e in lr.predicted.reshape(-1)})
-                n_loads = max(len(workers), min(n_pred, len(targets)))
+                pred_u = list(dict.fromkeys(
+                    int(e) for e in lr.predicted.reshape(-1)))
+                n_loads = max(len(workers), min(len(pred_u), len(targets)))
                 for j in range(n_loads):
                     w = targets[j % len(targets)]
+                    e = pred_u[j] if j < len(pred_u) else None
                     ls = max(pred_avail(li, t - self.t_router),
                              worker_free[w])
-                    worker_free[w] = ls + self.t_load_for(w)
+                    worker_free[w] = ls + self.t_load_for(
+                        w, self._bytes_for(li, e))
                     load_done = max(load_done, worker_free[w])
             else:
                 # no prefetch at all: load after the gate result
-                n_true = (len({int(e) for e in lr.true.reshape(-1)})
-                          if lr is not None else len(workers))
-                n_loads = max(len(workers), min(n_true, len(targets)))
+                true_u = ([int(e) for e in
+                           dict.fromkeys(lr.true.reshape(-1).tolist())]
+                          if lr is not None else [])
+                n_loads = max(len(workers),
+                              min(len(true_u) or len(workers),
+                                  len(targets)))
                 for j in range(n_loads):
                     w = targets[j % len(targets)]
+                    e = true_u[j] if j < len(true_u) else None
                     ls = max(t, worker_free[w])
-                    worker_free[w] = ls + self.t_load_for(w)
+                    worker_free[w] = ls + self.t_load_for(
+                        w, self._bytes_for(li, e))
                     load_done = max(load_done, worker_free[w])
             # mispredictions (and faults' stranded experts): reload after
             # gate result, queued round-robin over the same fleet order
-            # the engine assigns
+            # the engine assigns; priced per reloaded expert — missed
+            # experts first, then correctly-predicted ones (reloads
+            # beyond the missed set are fault-stranded predictions, and
+            # they re-ship at THEIR scheme, not the policy default)
             if lr is not None and lr.predicted is not None and lr.reloads:
+                pred_set = {int(e) for e in lr.predicted.reshape(-1)}
+                true_set = [int(e) for e in
+                            dict.fromkeys(lr.true.reshape(-1).tolist())]
+                pool = ([e for e in true_set if e not in pred_set]
+                        + [e for e in true_set if e in pred_set])
                 for i in range(lr.reloads):
                     w = targets[i % len(targets)]
+                    e = pool[i] if i < len(pool) else None
                     ls = max(t, worker_free[w])
-                    worker_free[w] = ls + self.t_load_for(w)
+                    worker_free[w] = ls + self.t_load_for(
+                        w, self._bytes_for(li, e))
                     load_done = max(load_done, worker_free[w])
             ready = t + profile.t_lan(self.emb)  # embedding reaches workers
             ec_start = max(ready, load_done)
@@ -301,7 +353,7 @@ def simulate_odmoe(cfg: ModelConfig, trace: Trace, sched: GroupSchedule,
                    profile: HardwareProfile,
                    shadow_scheme: str = "int8",
                    predictor: str = "sep",
-                   faults=None) -> ODMoETimings:
+                   faults=None, transport=None) -> ODMoETimings:
     """Replay an engine trace through the Fig. 2 pipeline (see
     ``DecodeClock`` for the event mechanics).  ``faults`` (a
     ``repro.fleet.FaultInjector``; requires ``sched`` to be a
@@ -309,8 +361,11 @@ def simulate_odmoe(cfg: ModelConfig, trace: Trace, sched: GroupSchedule,
     so kills/throttles degrade the replayed wall clock.  The replay
     starts from scratch: the injector and the schedule's fleet state
     are reset first, so the engine's own run (which consumed the same
-    script and killed the same workers) can be replayed directly."""
-    clock = DecodeClock(cfg, sched, profile, shadow_scheme, predictor)
+    script and killed the same workers) can be replayed directly.
+    ``transport`` (PrecisionPolicy / scheme / None) prices every expert
+    load by its packed wire bytes — the codec's modeled speedup."""
+    clock = DecodeClock(cfg, sched, profile, shadow_scheme, predictor,
+                        transport=transport)
     if faults is not None:
         faults.reset()
         sched.state.reset()

@@ -26,9 +26,12 @@ class WorkerProfile:
 
     ``link_gbps`` is the worker's expert-loading bandwidth in GB/s;
     ``None`` inherits the hardware profile's PCIe bandwidth at timing
-    time (and ``DEFAULT_LINK_GBPS`` for schedule ordering).
-    ``capacity`` is the number of device-resident expert slots the
-    worker's memory budget allows (>= 1).
+    time (and ``DEFAULT_LINK_GBPS`` for schedule ordering).  The link
+    prices whatever payload actually crosses it — full fp32 expert
+    weights or a ``repro.quant`` transport codec's packed bytes — via
+    ``FleetSchedule.t_load_s``.  ``capacity`` is the number of
+    device-resident expert slots the worker's memory budget allows
+    (>= 1).
     """
     worker: int
     link_gbps: Optional[float] = None

@@ -104,16 +104,25 @@ class FleetSchedule(GroupSchedule):
         return [(e, order[j % len(order)]) for j, e in enumerate(experts)]
 
     # ------------------------------------------------------ Eq. 1, per-link
-    def t_load_s(self, worker: int, expert_bytes: int,
+    def t_load_s(self, worker: int, expert_bytes: float,
                  default_gbps: float = DEFAULT_LINK_GBPS) -> float:
-        """Expert-load duration on this worker's (throttled) link."""
-        return expert_bytes / (self.link_gbps_of(worker, default_gbps) * 1e9)
+        """Expert-load duration on this worker's (throttled) link.
+        ``expert_bytes`` is whatever actually crosses the link — full
+        fp32 weights or a transport codec's packed payload — so Eq. (1)
+        prices mixed-precision transport with no further changes.
+        ``link_gbps_of`` is the single effective-bandwidth path, shared
+        with load ordering (``_fast_first``) so pricing can never
+        desynchronize from scheduling."""
+        return expert_bytes / (self.link_gbps_of(worker, default_gbps)
+                               * 1e9)
 
-    def io_bottlenecked_worker(self, worker: int, expert_bytes: int,
+    def io_bottlenecked_worker(self, worker: int, expert_bytes: float,
                                t_main: float, t_worker: float,
                                default_gbps: float = DEFAULT_LINK_GBPS
                                ) -> bool:
         """Per-worker Eq. (1) check: does THIS link blow the group's
-        ``t_maxload`` budget?"""
+        ``t_maxload`` budget?  A codec that shrinks ``expert_bytes``
+        moves the boundary — links that are I/O-bound at fp32 can be
+        compute-bound at int8 (re-pinned in tests/test_transport.py)."""
         return self.t_load_s(worker, expert_bytes, default_gbps) \
             > self.t_maxload(t_main, t_worker)

@@ -31,6 +31,7 @@ from repro.configs import get_config
 from repro.core import (AlignmentPolicy, ODMoEEngine, RTX3090_EDGE,
                         simulate_cached, simulate_odmoe)
 from repro.models import greedy_generate, init_params
+from repro.quant import TieredPolicy, UniformPolicy
 from repro.serve import BatchComposer, ServingLoop, make_traffic
 
 
@@ -49,6 +50,13 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--token-period", type=int, default=1)
     ap.add_argument("--kv-period", type=int, default=1)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--transport-precision", default="fp32",
+                    choices=["fp32", "fp16", "int8", "nf4", "tiered"],
+                    help="on-demand expert wire precision (HOBBIT-style "
+                         "mixed-precision transport); 'tiered' calibrates "
+                         "a confidence-tiered fp16+int8 policy from a "
+                         "short decode and verifies against the reference "
+                         "under the same policy")
     # ----------------------------------------------- serving mode flags
     ap.add_argument("--requests", type=int, default=0,
                     help="serve N requests through continuous batching "
@@ -64,9 +72,49 @@ def build_parser() -> argparse.ArgumentParser:
     return ap
 
 
+def build_transport(cfg, params, args):
+    """Resolve --transport-precision into a PrecisionPolicy.  'tiered'
+    runs a short full-precision calibration decode and tiers experts by
+    mean gate weight (HOBBIT: low confidence -> cheap wire format)."""
+    if args.transport_precision == "tiered":
+        key = jax.random.PRNGKey(args.seed + 1)
+        batch = {"tokens": jax.random.randint(key, (1, args.prompt_len), 0,
+                                              cfg.vocab_size)}
+        eng = ODMoEEngine(cfg, params, n_workers=args.workers,
+                          predictor="none")
+        _, trace = eng.generate(batch, max(8, args.tokens // 2))
+        pol = TieredPolicy.from_trace(trace, low_fraction=0.5,
+                                      num_experts=cfg.num_experts)
+        print(f"  transport: calibrated {pol.describe()}")
+        return pol
+    return UniformPolicy(args.transport_precision)
+
+
+def print_transport_stats(eng) -> None:
+    """Codec accounting from the load-event log: what crossed the links
+    vs the fp32 deployment payload for the same loads."""
+    ev = eng.slots.events
+    if not ev:
+        return
+    by_scheme = {}
+    for e in ev:
+        n, b = by_scheme.get(e.scheme, (0, 0))
+        by_scheme[e.scheme] = (n + 1, b + e.bytes)
+    fp32_equiv = len(ev) * eng.store.expert_bytes
+    moved = eng.slots.bytes_moved
+    print(f"  transport [{eng.transport.describe()}]: "
+          f"{moved / 1e6:.2f} MB moved vs {fp32_equiv / 1e6:.2f} MB fp32 "
+          f"({fp32_equiv / max(moved, 1):.2f}x reduction)")
+    print("  loads by scheme: " + ", ".join(
+        f"{s}={n} ({b / 1e6:.2f} MB)"
+        for s, (n, b) in sorted(by_scheme.items())))
+
+
 def serve_traffic(cfg, params, args) -> None:
+    transport = build_transport(cfg, params, args)
     eng = ODMoEEngine(cfg, params, n_workers=args.workers,
-                      predictor=args.predictor, shadow_scheme=args.shadow)
+                      predictor=args.predictor, shadow_scheme=args.shadow,
+                      transport=transport)
     policy = AlignmentPolicy(args.token_period, args.kv_period)
     reqs = make_traffic(cfg, args.requests, args.arrival_rate,
                         prompt_len=args.prompt_len, max_new=args.tokens,
@@ -76,13 +124,15 @@ def serve_traffic(cfg, params, args) -> None:
                        policy=policy)
     res = loop.run(reqs)
     # ---- bit-exactness: every request == its solo reference decode
+    # under the SAME transport policy
     exact = True
     for r in reqs:
         ref = np.asarray(greedy_generate(
             cfg, params, {"tokens": jnp.asarray(r.prompt)[None, :]},
-            r.max_new_tokens))[0]
+            r.max_new_tokens, transport=transport))[0]
         exact &= bool(np.array_equal(ref, res.outputs[r.rid]))
-    print(f"  per-request tokens == solo reference: {exact}")
+    print(f"  per-request tokens == solo reference "
+          f"(same transport policy): {exact}")
     assert exact, "serving output diverged from single-request reference"
     # ---- latency / throughput report (modeled edge profile)
     rep = res.timings.report()
@@ -102,29 +152,45 @@ def serve_traffic(cfg, params, args) -> None:
               f"{np.mean(served):.2f}  multi-request loads: "
               f"{sum(1 for s in served if s > 1)}/{len(served)}")
     print(f"  load stats: {eng.slots.stats}")
+    print_transport_stats(eng)
+    # per-request wire bytes: each load's packed payload credited to
+    # every request riding it (amortized codec accounting)
+    per_req = {r.rid: 0 for r in reqs}
+    for e in ev:
+        for rid in e.requests:
+            if rid in per_req:
+                per_req[rid] += e.bytes
+    if any(per_req.values()):
+        vals = list(per_req.values())
+        print(f"  wire bytes/request: mean {np.mean(vals) / 1e6:.2f} MB  "
+              f"max {max(vals) / 1e6:.2f} MB")
 
 
 def serve_single(cfg, params, args) -> None:
     key = jax.random.PRNGKey(args.seed)
     batch = {"tokens": jax.random.randint(key, (1, args.prompt_len), 0,
                                           cfg.vocab_size)}
+    transport = build_transport(cfg, params, args)
     eng = ODMoEEngine(cfg, params, n_workers=args.workers,
-                      predictor=args.predictor, shadow_scheme=args.shadow)
+                      predictor=args.predictor, shadow_scheme=args.shadow,
+                      transport=transport)
     policy = AlignmentPolicy(args.token_period, args.kv_period)
     toks, trace = eng.generate(batch, args.tokens, policy)
-    ref = greedy_generate(cfg, params, batch, args.tokens)
+    ref = greedy_generate(cfg, params, batch, args.tokens,
+                          transport=transport)
     exact = bool(np.array_equal(np.asarray(toks), np.asarray(ref)))
-    print(f"  tokens == dense reference: {exact}")
+    print(f"  tokens == dense reference (same transport policy): {exact}")
     assert exact, "engine output diverged from reference"
     print(f"  recall (Eq.3): {trace.recall():.4f}   "
           f"reload fraction: {trace.reload_fraction():.4f}")
     print(f"  loads: {eng.slots.stats}")
+    print_transport_stats(eng)
     mem = eng.memory_report()
     print("  memory: " + ", ".join(
         f"{k}={v/1e6:.2f}MB" for k, v in mem.items() if k.endswith("bytes")))
     t = simulate_odmoe(cfg, trace, eng.sched, RTX3090_EDGE,
                        shadow_scheme=args.shadow,
-                       predictor=args.predictor)
+                       predictor=args.predictor, transport=transport)
     print(f"  modeled decode speed ({RTX3090_EDGE.name}): "
           f"{t.tokens_per_s:.2f} tok/s "
           f"(fully-cached reference {simulate_cached(cfg, RTX3090_EDGE):.2f})")
@@ -144,7 +210,7 @@ def main():
     print(f"[serve] {cfg.name}: E={cfg.num_experts} top{cfg.top_k}, "
           f"{args.workers} workers, predictor={args.predictor}"
           + (f"/{args.shadow}" if args.predictor == "sep" else "")
-          + f" — {mode}")
+          + f", transport={args.transport_precision} — {mode}")
     if args.requests:
         serve_traffic(cfg, params, args)
     else:

@@ -131,8 +131,20 @@ def decode_step(cfg: ModelConfig, params, token, state, *,
 
 
 def greedy_generate(cfg: ModelConfig, params, batch, num_tokens: int,
-                    max_cache_len: int = 0, moe_method: str = "dense"):
-    """Reference autoregressive generation (prefill + decode loop)."""
+                    max_cache_len: int = 0, moe_method: str = "dense",
+                    transport=None):
+    """Reference autoregressive generation (prefill + decode loop).
+
+    ``transport`` (a ``repro.quant`` ``PrecisionPolicy`` or scheme
+    name) makes this the reference for mixed-precision expert
+    transport: expert weights are round-tripped through the SAME codec
+    the OD-MoE store ships over worker links, so every engine decode
+    path must match this output token-bit-exactly *under the same
+    transport policy*.
+    """
+    if transport is not None:
+        from repro.quant.transport import transport_params
+        params = transport_params(cfg, params, transport)
     max_cache_len = max_cache_len or (batch["tokens"].shape[1] + num_tokens)
     logits, state = prefill(cfg, params, batch, max_cache_len,
                             moe_method=moe_method)

@@ -69,6 +69,24 @@ def dequantize_nf4(codes, scales, shape):
     return vals.reshape(-1)[:n].reshape(shape)
 
 
+def pack_nf4_codes(codes):
+    """Bit-pack NF4 codes (values 0..15) two per byte, high nibble
+    first.  ``codes`` is the (n_blocks, 64) uint8 array from
+    ``quantize_nf4``; the flat length is always even (64-blocks), so the
+    packing is exact and lossless."""
+    flat = codes.reshape(-1).astype(jnp.uint8)
+    return (flat[0::2] << 4) | (flat[1::2] & 0xF)
+
+
+def unpack_nf4_codes(packed, n_blocks: int):
+    """Inverse of ``pack_nf4_codes``: (n_pairs,) uint8 -> (n_blocks, 64)
+    codes.  Lossless, so transport bit-packing never changes numerics."""
+    hi = (packed >> 4) & 0xF
+    lo = packed & 0xF
+    flat = jnp.stack([hi, lo], axis=1).reshape(-1)
+    return flat.reshape(n_blocks, NF4_BLOCK)
+
+
 # ------------------------------------------------------------- dispatch
 def quantize(w, scheme: str):
     if scheme == "fp16":

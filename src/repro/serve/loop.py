@@ -21,7 +21,12 @@ checks bit-exactness.
 The bit-exactness invariant (tested in tests/test_serving.py): every
 request's token stream is bit-identical to running it alone through
 ``greedy_generate``, whatever batches it rode in — composition is pure
-scheduling, never arithmetic.
+scheduling, never arithmetic.  Under a mixed-precision transport policy
+(``ODMoEEngine(transport=...)``) the same holds against
+``greedy_generate(..., transport=...)``: the loop passes the engine's
+policy to the ``DecodeClock`` so composed-step durations price expert
+loads by packed wire bytes, and every load event carries its scheme and
+payload for per-request codec accounting.
 
 Serving survives fleet faults (tests/test_fleet.py): when the engine
 carries a ``repro.fleet.FaultInjector``, worker kills/throttles fire
@@ -153,7 +158,8 @@ class ServingLoop:
         clock = DecodeClock(eng.cfg, eng.sched, self.profile,
                             shadow_scheme=(eng.shadow.scheme
                                            if eng.shadow else "int8"),
-                            predictor=eng.predictor_kind)
+                            predictor=eng.predictor_kind,
+                            transport=getattr(eng, "transport", None))
         trace = Trace()
         steps: List[StepRecord] = []
         step = 0
@@ -244,7 +250,8 @@ class ServingLoop:
                 predicted=pred_i, true=true_i,
                 correct=(recall_counts(pred_i, true_i)
                          if pred_i is not None else 0),
-                reloads=0, assignments=[]))
+                reloads=0, assignments=[],
+                gates=None if lr.gates is None else lr.gates[i:i + 1]))
         return out
 
     # ------------------------------------------------------------ result

@@ -49,6 +49,28 @@ def test_int8_matmul_sweep(m, k, n, bm, bn, bk, xdtype):
                                atol=5e-2, rtol=1e-2)
 
 
+@pytest.mark.slow
+@pytest.mark.parametrize("direction", ["up", "down"])
+def test_int8_matmul_mixtral_expert_shapes(direction):
+    """Kernel parity on the ACTUAL Mixtral-8x7B expert FFN shapes —
+    (d_model, d_expert) for w_gate/w_up, (d_expert, d_model) for
+    w_down — the matrices int8 expert transport ships and the shadow
+    GEMM consumes.  Interpret mode on CPU (~seconds per direction)."""
+    from repro.configs import get_config
+    full = get_config("mixtral-8x7b")
+    d, f = full.d_model, full.d_expert_resolved           # 4096, 14336
+    k, n = (d, f) if direction == "up" else (f, d)
+    ks = jax.random.split(jax.random.PRNGKey(7), 3)
+    x = jax.random.normal(ks[0], (4, k), jnp.float32)
+    wq = jax.random.randint(ks[1], (k, n), -127, 128, jnp.int8)
+    sc = jax.random.uniform(ks[2], (n,), jnp.float32, 1e-3, 1e-2)
+    out = int8_matmul_kernel(x, wq, sc, block_m=4, block_n=512,
+                             block_k=1024, interpret=True)
+    ref = int8_matmul_ref(x, wq, sc)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=5e-2, rtol=1e-2)
+
+
 @pytest.mark.parametrize("b,kh,g,hd,w,bw,filled", [
     (1, 1, 2, 8, 64, 64, 64),
     (2, 2, 4, 64, 200, 64, 150),   # partial final block + empty slots

@@ -1,0 +1,336 @@
+"""Mixed-precision expert transport: codec round-trip properties,
+packed-byte accounting exactness, store bytes-moved pinning, per-link
+timing scaling, the re-pinned Eq. (1) I/O boundary, and the tentpole
+invariant — every decode path (engine, composed serving, fleet faults)
+token-bit-identical to ``greedy_generate`` *under the same transport
+policy*.
+
+Property tests run through tests/_hypothesis_shim.py (zero-arg
+signatures — no pytest fixtures; module-level lazy state instead).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from conftest import tiny_moe
+from repro.configs import get_config
+from repro.core import (ExpertStore, GroupSchedule, DecodeClock,
+                        ODMoEEngine, RTX3090_EDGE, WorkerSlots,
+                        simulate_odmoe, synthetic_trace)
+from repro.fleet import FaultEvent, FaultInjector, FleetSchedule, \
+    WorkerProfile
+from repro.models import greedy_generate, init_params
+from repro.quant import (SCHEMES, TieredPolicy, TransportCodec,
+                         UniformPolicy, resolve_policy,
+                         transport_expert_bytes)
+from repro.quant.quantize import (NF4_BLOCK, dequantize_nf4, quantize_int8,
+                                  quantize_nf4)
+from repro.serve import Request, ServingLoop
+
+CFG = tiny_moe(num_layers=4)
+N_TOK = 6
+
+# module-level lazy state (shim property tests cannot take fixtures)
+_MODEL = None
+
+
+def _model():
+    global _MODEL
+    if _MODEL is None:
+        params = init_params(CFG, jax.random.PRNGKey(0))
+        batch = {"tokens": jax.random.randint(
+            jax.random.PRNGKey(1), (1, 12), 0, CFG.vocab_size)}
+        _MODEL = (params, batch)
+    return _MODEL
+
+
+# ------------------------------------------------------ codec properties
+@settings(deadline=None, max_examples=15)
+@given(seed=st.integers(0, 10**6), rows=st.integers(1, 48),
+       cols=st.integers(1, 48))
+def test_int8_scale_bounded_by_absmax(seed, rows, cols):
+    """Per-channel int8 scale is <= absmax/127 (+ the 1e-8 floor), and
+    the round trip errs by at most half a step per channel."""
+    w = np.random.default_rng(seed).standard_normal(
+        (rows, cols)).astype(np.float32)
+    q, scale = quantize_int8(jnp.asarray(w))
+    absmax = np.abs(w).max(axis=0)
+    s = np.asarray(scale).reshape(-1)
+    assert np.all(s <= np.maximum(absmax, 1e-8) / 127.0 + 1e-12)
+    back = np.asarray(q).astype(np.float32) * np.asarray(scale)
+    assert np.all(np.abs(back - w) <= s[None, :] * 0.5 + 1e-6)
+
+
+@settings(deadline=None, max_examples=15)
+@given(seed=st.integers(0, 10**6), n=st.integers(1, 400))
+def test_nf4_blockwise_never_amplifies(seed, n):
+    """NF4 levels live in [-1, 1], so a dequantized block's absmax can
+    never exceed the block's original absmax scale."""
+    w = np.random.default_rng(seed).standard_normal(n).astype(np.float32)
+    codes, scales = quantize_nf4(jnp.asarray(w))
+    back = np.asarray(dequantize_nf4(codes, scales, (n,)))
+    padded = np.pad(w, (0, (-n) % NF4_BLOCK)).reshape(-1, NF4_BLOCK)
+    absmax = np.maximum(np.abs(padded).max(axis=1), 1e-8)
+    back_blocks = np.pad(back, (0, (-n) % NF4_BLOCK)).reshape(-1, NF4_BLOCK)
+    assert np.all(np.abs(back_blocks).max(axis=1) <= absmax + 1e-6)
+
+
+@settings(deadline=None, max_examples=20)
+@given(seed=st.integers(0, 10**6), rows=st.integers(1, 80),
+       cols=st.integers(1, 80), scheme=st.sampled_from(SCHEMES))
+def test_packed_bytes_accounting_exact(seed, rows, cols, scheme):
+    """The closed-form ``packed_nbytes`` equals the actual packed
+    payload byte-for-byte, for every codec and shape — what lets the
+    timing model price full-size configs no store ever materializes."""
+    w = np.random.default_rng(seed).standard_normal(
+        (rows, cols)).astype(np.float32)
+    codec = TransportCodec(scheme)
+    pw = codec.pack(w)
+    assert pw.nbytes == codec.packed_nbytes(w.shape, elem_bytes=4)
+    back = np.asarray(codec.round_trip(w))
+    assert back.shape == w.shape and back.dtype == w.dtype
+    if scheme == "fp32":                     # identity wire format
+        assert np.array_equal(back, w)
+
+
+def test_transport_expert_bytes_matches_store():
+    """Analytic per-expert bytes == the store's actual packed shards,
+    for every scheme on a real model."""
+    params, _ = _model()
+    for scheme in SCHEMES:
+        store = ExpertStore(CFG, params, policy=scheme)
+        li = store.moe_layers[0]
+        assert store.packed_bytes(li, 0) == \
+            transport_expert_bytes(CFG, scheme, weight_bytes=4), scheme
+
+
+# ----------------------------------------------- store: bytes-moved pinning
+def test_bytes_moved_pinned():
+    """Scripted load/hit/evict/fail sequence under int8 transport —
+    packed shards are cached once at construction, only physical loads
+    move bytes, and they move exactly the packed payload (mirrors
+    test_fleet.py::test_stats_accounting_pinned)."""
+    params, _ = _model()
+    store = ExpertStore(CFG, params, policy="int8")
+    li = store.moe_layers[0]
+    # packed once at construction: repeated gets return the same shard
+    assert store.get_packed(li, 0) is store.get_packed(li, 0)
+    b = store.packed_bytes(li, 0)
+    # ~25% codes + per-channel scale overhead (the <=26% acceptance
+    # bound is pinned on Mixtral shapes in the frontier test below)
+    assert 0 < b <= 0.27 * store.expert_bytes
+    s = WorkerSlots(store, 4, physical=False)
+    s.load(0, li, 0, worker=0, predicted=True)      # moves b
+    s.load(0, li, 0, worker=0, predicted=True)      # hit: moves nothing
+    s.load(0, li, 1, worker=1, predicted=False)     # moves b
+    s.evict(0)                                      # moves nothing
+    s.fail(1)                                       # moves nothing
+    s.load(0, li, 2, worker=2, predicted=False)     # moves b
+    assert s.bytes_moved == 3 * b
+    assert [(e.scheme, e.bytes) for e in s.events] == [("int8", b)] * 3
+    # fp32 store: event bytes equal the classic full payload
+    store32 = ExpertStore(CFG, params)
+    s32 = WorkerSlots(store32, 2, physical=False)
+    s32.load(0, li, 0, worker=0, predicted=True)
+    assert s32.bytes_moved == store32.expert_bytes
+    assert s32.events[0].scheme == "fp32"
+
+
+# --------------------------------------------------------- timing scaling
+def test_t_load_scales_exactly_with_packed_bytes():
+    """Per-link t_load under a codec == fp32 t_load x packed-byte
+    ratio, on healthy, heterogeneous and throttled links alike."""
+    full = get_config("mixtral-8x7b")
+    profs = tuple(WorkerProfile(w, link_gbps=(48.0 if w == 1 else None))
+                  for w in range(8))
+    sched = FleetSchedule(8, 2, profiles=profs)
+    sched.state.throttle(2, 0.25)
+    try:
+        base = DecodeClock(full, sched, RTX3090_EDGE)
+        fp32_bytes = transport_expert_bytes(full, "fp32")
+        for scheme in ("fp16", "int8", "nf4"):
+            clock = DecodeClock(full, sched, RTX3090_EDGE,
+                                transport=scheme)
+            ratio = transport_expert_bytes(full, scheme) / fp32_bytes
+            for w in range(8):
+                assert clock.t_load_for(w) == pytest.approx(
+                    base.t_load_for(w) * ratio, rel=1e-12), (scheme, w)
+    finally:
+        sched.state.reset()
+    # base (non-fleet) schedules price the same way
+    g = GroupSchedule(8, 2)
+    c32 = DecodeClock(full, g, RTX3090_EDGE)
+    c8 = DecodeClock(full, g, RTX3090_EDGE, transport="int8")
+    ratio = transport_expert_bytes(full, "int8") / fp32_bytes
+    assert c8.t_load == pytest.approx(c32.t_load * ratio, rel=1e-12)
+
+
+def test_io_boundary_repinned_for_int8():
+    """Eq. (1) per-link: a link I/O-bound shipping fp32 experts becomes
+    compute-bound shipping int8 — and the boundary stays strict (exact
+    budget hidden, one ulp more stalls)."""
+    full = get_config("mixtral-8x7b")
+    sched = FleetSchedule(8, 2)
+    b32 = transport_expert_bytes(full, "fp32")
+    b8 = transport_expert_bytes(full, "int8")
+    # pick a budget between the int8 and fp32 load times on the default
+    # 24 GB/s link: fp32 blows it, int8 hides under it
+    t8, t32 = b8 / 24e9, b32 / 24e9
+    tm = (t8 + t32) / 2 / 4          # t_maxload = 4*tm + 3*tw, tw=0
+    assert sched.io_bottlenecked_worker(0, b32, tm, 0.0)
+    assert not sched.io_bottlenecked_worker(0, b8, tm, 0.0)
+    # strictness at the exact boundary, in bytes
+    budget_bytes = sched.t_maxload(tm, 0.0) * 24e9
+    assert not sched.io_bottlenecked_worker(0, budget_bytes, tm, 0.0)
+    assert sched.io_bottlenecked_worker(
+        0, np.nextafter(budget_bytes, np.inf), tm, 0.0)
+
+
+def test_modeled_tpot_frontier_mixtral():
+    """Acceptance pin: on the Mixtral config, int8 transport's modeled
+    TPOT is strictly below fp32, per-expert packed bytes <= 26% of
+    fp32, and TPOT is monotone non-increasing as payload shrinks."""
+    full = get_config("mixtral-8x7b")
+    tr = synthetic_trace(full, 32, recall=0.97)
+    sched = GroupSchedule(8, 2)
+    tpot, frac = {}, {}
+    fp32_bytes = transport_expert_bytes(full, "fp32")
+    for s in SCHEMES:
+        t = simulate_odmoe(full, tr, sched, RTX3090_EDGE, transport=s)
+        tpot[s] = float(np.mean(t.per_token_s))
+        frac[s] = transport_expert_bytes(full, s) / fp32_bytes
+    assert tpot["int8"] < tpot["fp32"]
+    assert frac["int8"] <= 0.26
+    order = sorted(SCHEMES, key=lambda s: -frac[s])   # fp32 ... nf4
+    for heavier, lighter in zip(order, order[1:]):
+        assert tpot[lighter] <= tpot[heavier] * (1 + 1e-9)
+
+
+# --------------------------------------------------- the tentpole invariant
+@pytest.mark.parametrize("scheme", [
+    "int8",
+    pytest.param("fp16", marks=pytest.mark.slow),
+    pytest.param("nf4", marks=pytest.mark.slow)])
+def test_engine_bitexact_under_transport(scheme):
+    """Engine decode with quantized expert transport == the dense
+    reference under the SAME policy, with strictly fewer wire bytes."""
+    params, batch = _model()
+    policy = UniformPolicy(scheme)
+    ref = np.asarray(greedy_generate(CFG, params, batch, N_TOK,
+                                     transport=policy))
+    eng = ODMoEEngine(CFG, params, n_workers=8, predictor="sep",
+                      shadow_scheme="int8", transport=policy)
+    toks, _ = eng.generate(batch, N_TOK)
+    assert np.array_equal(np.asarray(toks), ref), scheme
+    assert eng.slots.bytes_moved < \
+        eng.slots.stats["loads"] * eng.store.expert_bytes
+    assert all(e.scheme == scheme for e in eng.slots.events)
+
+
+def test_tiered_policy_calibrates_and_stays_bitexact():
+    """HOBBIT-style tiering from a calibration trace: both tiers are
+    populated, and decode stays bit-identical to the reference under
+    the same tiered policy."""
+    params, batch = _model()
+    cal = ODMoEEngine(CFG, params, n_workers=8, predictor="freq")
+    _, cal_trace = cal.generate(batch, N_TOK)
+    assert cal_trace.records[0].layers[0].gates is not None
+    policy = TieredPolicy.from_trace(cal_trace, low_fraction=0.5,
+                                     num_experts=CFG.num_experts)
+    assert policy.low_experts                       # low tier non-empty
+    schemes = {policy.scheme_for(li, e)
+               for li in cal.moe_layers for e in range(CFG.num_experts)}
+    assert schemes == {"fp16", "int8"}              # both tiers in use
+    ref = np.asarray(greedy_generate(CFG, params, batch, N_TOK,
+                                     transport=policy))
+    eng = ODMoEEngine(CFG, params, n_workers=8, predictor="freq",
+                      transport=policy)
+    toks, _ = eng.generate(batch, N_TOK)
+    assert np.array_equal(np.asarray(toks), ref)
+    # mixed schemes actually crossed the wire
+    assert {e.scheme for e in eng.slots.events} == {"fp16", "int8"}
+
+
+def test_tiered_unseen_experts_ship_low():
+    """The from_trace contract: low-gate seen experts and ALL experts
+    the calibration never routed to (up to the config's num_experts)
+    ship at the low tier."""
+    from repro.core import LayerRecord, TokenRecord, Trace
+    tr = Trace()
+    rec = TokenRecord(index=1, aligned_token=True, aligned_kv=True)
+    rec.layers.append(LayerRecord(
+        layer=0, moe_index=0, group=0, predicted=None,
+        true=np.array([[0, 1]]), correct=0, reloads=0, assignments=[],
+        gates=np.array([[0.9, 0.1]])))
+    tr.records.append(rec)
+    pol = TieredPolicy.from_trace(tr, low_fraction=0.5, num_experts=8)
+    assert pol.scheme_for(0, 0) == "fp16"    # highest confidence seen
+    assert pol.scheme_for(0, 1) == "int8"    # bottom half of seen
+    assert all(pol.scheme_for(0, e) == "int8" for e in range(2, 8))
+
+
+def test_resolve_policy_forms():
+    assert resolve_policy(None).trivial
+    assert resolve_policy("fp32").trivial
+    assert resolve_policy("int8").scheme_for(0, 0) == "int8"
+    p = UniformPolicy("nf4")
+    assert resolve_policy(p) is p
+    with pytest.raises(ValueError):
+        UniformPolicy("int4")
+    with pytest.raises(TypeError):
+        resolve_policy(42)
+
+
+@pytest.mark.slow
+def test_serving_composed_transport_bitexact():
+    """Composed continuous-batching decode under int8 transport: every
+    request == its solo reference under the same policy, and step
+    durations price loads by packed bytes (faster than fp32 serving of
+    the identical traffic)."""
+    params, _ = _model()
+    policy = UniformPolicy("int8")
+    rng = np.random.default_rng(5)
+    reqs = [Request(rid=i,
+                    prompt=rng.integers(0, CFG.vocab_size,
+                                        int(rng.integers(5, 10))
+                                        ).astype(np.int32),
+                    max_new_tokens=int(rng.integers(3, 6)),
+                    arrival_s=a)
+            for i, a in enumerate([0.0, 0.0, 0.01])]
+    durs = {}
+    for pol in (policy, None):
+        eng = ODMoEEngine(CFG, params, n_workers=8, predictor="sep",
+                          shadow_scheme="int8", transport=pol)
+        res = ServingLoop(eng, max_batch=3).run(reqs)
+        durs[pol] = sum(s.duration_s for s in res.steps)
+        for r in reqs:
+            solo = np.asarray(greedy_generate(
+                CFG, params, {"tokens": jnp.asarray(r.prompt)[None, :]},
+                r.max_new_tokens, transport=pol))[0]
+            assert np.array_equal(solo, res.outputs[r.rid]), (r.rid, pol)
+    assert durs[policy] < durs[None]     # codec savings reach serving TPOT
+
+
+@pytest.mark.slow
+def test_fleet_chaos_transport_bitexact():
+    """A worker killed mid-step strands its quantized predicted load;
+    the reload lands on a survivor and tokens stay bit-identical to the
+    reference under the same transport policy."""
+    params, batch = _model()
+    policy = UniformPolicy("int8")
+    ref = np.asarray(greedy_generate(CFG, params, batch, N_TOK,
+                                     transport=policy))
+    kill = FaultEvent(step=3, worker=1, kind="kill", moe_index=0)
+    eng = ODMoEEngine(CFG, params, n_workers=8, predictor="sep",
+                      shadow_scheme="fp16", faults=FaultInjector([kill]),
+                      transport=policy)
+    toks, trace = eng.generate(batch, N_TOK)
+    assert np.array_equal(np.asarray(toks), ref)
+    assert not eng.slots.alive[1]
+    # degraded replay still prices loads at packed bytes
+    t = simulate_odmoe(CFG, trace, FleetSchedule(8, 2), RTX3090_EDGE,
+                       shadow_scheme="fp16",
+                       faults=FaultInjector([kill]), transport=policy)
+    assert t.degraded_report(8)["degraded_steps"] > 0
