@@ -36,8 +36,13 @@ def run(fast: bool = True):
                 (toks, trace), dt = timed(eng.generate, prompt, n_tokens,
                                           policy)
                 us += dt
-                per_tok.append(trace.recall_per_token())
+                # SEP predicts every token; None entries (tokens with no
+                # predictions) would only appear for other predictors —
+                # guard the aggregation anyway (NaN-free means)
+                per_tok.append([r for r in trace.recall_per_token()
+                                if r is not None])
                 overall.append(trace.recall())
+            overall = [r for r in overall if r is not None]
             curve = np.mean(np.array(per_tok), axis=0)
             curves[f"{scheme}_{aligned}"] = curve.tolist()
             rows.append(row(f"fig3/{scheme}/{aligned}",

@@ -47,7 +47,10 @@ def measure_recalls(fast: bool = True):
             us += dt
             recs.append(trace.recall())
         import jax; jax.clear_caches()
-        recalls[name] = float(np.mean(recs))
+        # predictor-less decodes measure no recall (None, case 6): skip
+        # them instead of poisoning the mean (JSON stores null)
+        recs = [r for r in recs if r is not None]
+        recalls[name] = float(np.mean(recs)) if recs else None
         us_total[name] = us / len(prompts)
     return recalls, us_total
 

@@ -16,8 +16,8 @@ import jax
 
 from . import (fig3_recall, fig6_periods_recall, fig7_prefill,
                fig8_ablation, fig9_periods_speed, fleet_degradation,
-               roofline, serving_throughput, table1_predictors,
-               table2_speed, transport_precision)
+               kv_occupancy, roofline, serving_throughput,
+               table1_predictors, table2_speed, transport_precision)
 
 MODULES = {
     "fig3": fig3_recall,
@@ -31,6 +31,7 @@ MODULES = {
     "serving": serving_throughput,
     "fleet": fleet_degradation,
     "transport": transport_precision,
+    "kv_occupancy": kv_occupancy,
 }
 
 

@@ -42,7 +42,8 @@ def main():
         t = simulate_odmoe(cfg, trace, eng.sched, RTX3090_EDGE,
                            shadow_scheme=scheme or "int8", predictor=pred)
         name = pred + (f"-{scheme}" if scheme else "")
-        print(f"{name:<16}{trace.recall():>8.3f}"
+        rec = trace.recall()              # None when nothing is predicted
+        print(f"{name:<16}{'   n/a' if rec is None else f'{rec:>8.3f}'}"
               f"{trace.reload_fraction():>9.3f}{t.tokens_per_s:>8.2f}"
               f"{str(exact):>7}")
         assert exact

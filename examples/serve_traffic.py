@@ -59,9 +59,11 @@ def main():
             {"tokens": jnp.asarray(st.request.prompt)[None, :]},
             st.request.max_new_tokens))[0]
         exact = bool(np.array_equal(ref, res.outputs[rid]))
+        rec = st.trace.recall()    # None for single-token requests
         print(f"{rid:>4}{len(st.request.prompt):>8}"
               f"{len(st.generated):>8}{t.ttft_s[i] * 1e3:>10.2f}"
-              f"{t.tpot_s[i] * 1e3:>10.2f}{st.trace.recall():>8.3f}"
+              f"{t.tpot_s[i] * 1e3:>10.2f}"
+              f"{'   n/a' if rec is None else f'{rec:>8.3f}'}"
               f"{str(exact):>7}")
         assert exact, f"request {rid} diverged from its solo reference"
 

@@ -12,8 +12,8 @@ from .schedule import GroupSchedule
 from .store import ExpertStore, LoadEvent, WorkerSlots
 from .timing import (RTX3090_EDGE, TPU_V5E, DecodeClock, HardwareProfile,
                      ODMoETimings, ServingTimings, degraded_tpot_report,
-                     poisson_arrivals, simulate_cached, simulate_cpu,
-                     simulate_odmoe, simulate_offload_cache,
+                     node_memory_report, poisson_arrivals, simulate_cached,
+                     simulate_cpu, simulate_odmoe, simulate_offload_cache,
                      simulate_prefill_cached, simulate_prefill_odmoe,
                      synthetic_trace)
 
@@ -25,7 +25,7 @@ __all__ = [
     "slice_shadow_state", "GroupSchedule", "ExpertStore", "LoadEvent",
     "WorkerSlots", "RTX3090_EDGE", "TPU_V5E", "DecodeClock",
     "HardwareProfile", "ODMoETimings", "ServingTimings",
-    "degraded_tpot_report", "poisson_arrivals",
+    "degraded_tpot_report", "node_memory_report", "poisson_arrivals",
     "simulate_cached", "simulate_cpu", "simulate_odmoe",
     "simulate_offload_cache", "simulate_prefill_cached",
     "simulate_prefill_odmoe", "synthetic_trace",

@@ -83,22 +83,30 @@ class TokenRecord:
 class Trace:
     records: List[TokenRecord] = field(default_factory=list)
 
-    def recall(self) -> float:
-        """Overall recall, Eq. (3)."""
+    def recall(self) -> Optional[float]:
+        """Overall recall, Eq. (3), over the layers that HAD a
+        prediction.  ``None`` (never NaN) when nothing was predicted —
+        e.g. ``predictor="none"`` decodes — so aggregation sites can
+        skip the value instead of silently poisoning their means."""
         num = den = 0
         for tr in self.records:
             for lr in tr.layers:
+                if lr.predicted is None:
+                    continue
                 num += lr.correct
                 den += lr.true.size
-        return num / den if den else float("nan")
+        return num / den if den else None
 
-    def recall_per_token(self) -> List[float]:
-        """recall(n), Eq. (2)."""
+    def recall_per_token(self) -> List[Optional[float]]:
+        """recall(n), Eq. (2); ``None`` for tokens with no predicted
+        layers (same None-not-NaN contract as :meth:`recall`)."""
         out = []
         for tr in self.records:
-            num = sum(lr.correct for lr in tr.layers)
-            den = sum(lr.true.size for lr in tr.layers)
-            out.append(num / den if den else float("nan"))
+            num = sum(lr.correct for lr in tr.layers
+                      if lr.predicted is not None)
+            den = sum(lr.true.size for lr in tr.layers
+                      if lr.predicted is not None)
+            out.append(num / den if den else None)
         return out
 
     def reload_fraction(self) -> float:
@@ -111,21 +119,31 @@ class Trace:
 
 
 # ------------------------------------------------------- batch membership
-def concat_cache_lists(cache_lists: Sequence[List]) -> List:
-    """Join per-request per-layer cache lists along the batch axis.
+def concat_cache_lists(cache_lists: Sequence) -> object:
+    """Join per-request per-layer caches along the batch axis.
 
-    Every request must have been prefilled with the same
-    ``max_cache_len`` (the serving loop guarantees this) so the KV
-    buffers share a window size.
+    Dense cache lists concatenate their KV buffers (every request was
+    prefilled with the same ``max_cache_len``, so windows agree).
+    Paged handles (``repro.serve.kvpool.PagedRequestCache``) compose
+    into a batch *view* instead: no KV is copied here — each layer is
+    gathered from the pool through the members' page tables when the
+    decode step indexes it, and scattered back on assignment.
     """
+    first = cache_lists[0]
+    if hasattr(first, "compose"):          # paged handles
+        return first.compose(cache_lists)
     if len(cache_lists) == 1:
-        return list(cache_lists[0])
+        return list(first)
     return [jax.tree.map(lambda *xs: jnp.concatenate(xs, axis=0), *per_layer)
             for per_layer in zip(*cache_lists)]
 
 
-def slice_cache_list(cache_list: List, i: int) -> List:
-    """Extract request ``i`` from a composed cache list (batch of 1)."""
+def slice_cache_list(cache_list, i: int):
+    """Extract request ``i`` from a composed cache list (batch of 1).
+    A paged batch returns the member's handle — its pages were already
+    committed by the step's scatter, so slicing copies nothing."""
+    if hasattr(cache_list, "member"):      # paged batch view
+        return cache_list.member(i)
     return [jax.tree.map(lambda a: a[i:i + 1], c) for c in cache_list]
 
 
@@ -212,18 +230,34 @@ class ODMoEEngine:
         return tuple(out)
 
     # ----------------------------------------------------------- requests
-    def prefill_request(self, batch, max_cache_len: int):
+    def prefill_request(self, batch, max_cache_len: int, *,
+                        kv_pool=None, rid: Optional[int] = None):
         """Prefill one request (or fixed batch) on the main node.
 
         Returns ``(first_token (B,), cache_list, pos (B,))`` — the
         per-request decode state the serving loop carries between
         composed iterations.  The first generated token falls out of
         prefill, so a request's TTFT is admission wait + prefill time.
+
+        With ``kv_pool`` (a ``repro.serve.kvpool.KVPool``) the prefilled
+        KV is adopted into pool pages and ``cache_list`` is the paged
+        stand-in instead of dense buffers: the dense prefill output is
+        transient, and the request's steady-state KV charge becomes its
+        page-table allocation against the pool budget.  The caller must
+        have reserved ``pages_for(prompt_len)`` pages (admission
+        control) and supplies the request id the page table is keyed by.
         """
         logits, state = prefill(self.cfg, self.params, batch, max_cache_len,
                                 moe_method="dense")
         token = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-        return token, self._unstack(state["caches"]), state["pos"]
+        cache_list = self._unstack(state["caches"])
+        if kv_pool is not None:
+            if batch["tokens"].shape[0] != 1 or rid is None:
+                raise ValueError("paged prefill adopts one request (B=1) "
+                                 "with its request id")
+            cache_list = kv_pool.adopt(rid, cache_list,
+                                       batch["tokens"].shape[1])
+        return token, cache_list, state["pos"]
 
     # ------------------------------------------------------------ generate
     def generate(self, batch, num_tokens: int,
@@ -261,7 +295,12 @@ class ODMoEEngine:
         """One decode iteration for the (possibly composed) batch.
 
         ``token``/``pos`` are (B,); ``cache_list`` is per-layer with
-        batch axis B; ``preds`` maps layer -> (B,k) predicted experts
+        batch axis B — either dense buffers or a paged batch view
+        (``repro.serve.kvpool``): indexing a layer gathers the members'
+        KV pages into the same dense ``(B, W, ...)`` buffer, and the
+        assignment after ``block_decode`` scatters the written slot
+        back through the page tables, so compute is bit-identical
+        either way.  ``preds`` maps layer -> (B,k) predicted experts
         for THIS iteration (rows in batch order).  Rows are arithmetically
         independent, so the serving loop may change batch membership
         freely between calls.  Appends per-layer records to ``rec``.
@@ -435,7 +474,12 @@ class ODMoEEngine:
             factor = {"fp16": 0.5, "int8": 0.25, "nf4": 0.125}.get(
                 self.shadow.scheme, 1.0)
             shadow = int(total * factor)
-        fleet_bytes = sum(self.slots.capacity) * self.store.expert_bytes
+        # peak, not steady-state: while a non-fp32 shard dequantizes on
+        # arrival the packed wire buffer and the full-width slot are
+        # both live on the worker (see WorkerSlots.transient_packed_bytes)
+        transient = self.slots.transient_packed_bytes()
+        fleet_bytes = (sum(self.slots.capacity) * self.store.expert_bytes
+                       + self.sched.n_workers * transient)
         transport_max = max(
             (self.store.packed_bytes(li, e) for li in self.moe_layers
              for e in range(self.cfg.num_experts)), default=0)

@@ -253,7 +253,29 @@ class WorkerSlots:
         self.stats["recoveries"] += 1
 
     # -------------------------------------------------------------- memory
+    def transient_packed_bytes(self) -> int:
+        """Largest in-flight packed shard during dequantize-on-arrival.
+
+        While a non-fp32 shard unpacks, the packed wire buffer AND the
+        full-width slot tensors are both live on the device; the fp32
+        path aliases the arriving buffer outright, so it double-buffers
+        nothing.  Peak over the policy therefore counts only experts
+        shipped below full width (pinned against
+        ``ExpertStore.packed_bytes`` by tests/test_transport.py).
+        """
+        store = self.store
+        return max(
+            (store.packed_bytes(li, e)
+             for li in store.moe_layers
+             for e in range(store.cfg.num_experts)
+             if store.scheme_of(li, e) != "fp32"),
+            default=0)
+
     def device_bytes_per_worker(self) -> int:
-        """Peak slot bytes — the paper's '<1 GB per worker' quantity
-        (scaled by the largest slot capacity in the fleet)."""
-        return self.store.expert_bytes * max(self.capacity)
+        """Peak device bytes per worker — the paper's '<1 GB per
+        worker' quantity: the resident slots (scaled by the largest
+        slot capacity in the fleet) plus the transient packed buffer
+        live during dequantize-on-arrival.  fp32 transport keeps the
+        historical slots-only value."""
+        return (self.store.expert_bytes * max(self.capacity)
+                + self.transient_packed_bytes())

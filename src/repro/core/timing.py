@@ -97,22 +97,30 @@ def embedding_payload(cfg: ModelConfig, wb: int = 4) -> float:
 def degraded_tpot_report(per_token_s: List[float], alive_workers: List[int],
                          n_workers: int) -> Dict[str, float]:
     """Split per-token decode time into healthy-fleet vs degraded-fleet
-    steps (any worker dead = degraded) — the chaos-run TPOT view."""
+    steps (any worker dead = degraded) — the chaos-run TPOT view.
+
+    Every value is finite (JSON-safe, mean-safe): an empty bucket
+    reports 0.0 for its mean and the all-healthy run is an explicit
+    case — ``healthy_only=True``, ``degradation_x=1.0`` (no degradation
+    was observed, not NaN).  ``degradation_x`` is the degraded/healthy
+    ratio only when both buckets have steps.
+    """
     healthy = [d for d, a in zip(per_token_s, alive_workers)
                if a >= n_workers]
     degraded = [d for d, a in zip(per_token_s, alive_workers)
                 if a < n_workers]
-    mean = lambda xs: float(np.mean(xs)) if xs else float("nan")  # noqa: E731
+    mean = lambda xs: float(np.mean(xs)) if xs else 0.0  # noqa: E731
     return {
         "steps": len(per_token_s),
         "degraded_steps": len(degraded),
+        "healthy_only": not degraded,
         "min_alive_workers": (min(alive_workers) if alive_workers
                               else n_workers),
         "tpot_s": mean(per_token_s),
         "tpot_healthy_s": mean(healthy),
         "tpot_degraded_s": mean(degraded),
         "degradation_x": (mean(degraded) / mean(healthy)
-                          if healthy and degraded else float("nan")),
+                          if healthy and degraded else 1.0),
     }
 
 
@@ -236,6 +244,16 @@ class DecodeClock:
         self.now += seconds
         for w in range(self.sched.n_workers):
             self.worker_free[w] = max(self.worker_free[w], self.now)
+
+    def charge_kv_swap(self, nbytes: float) -> float:
+        """KV-page preemption/resume transfer: the pages cross the main
+        node's host link (PCIe-class, same lane expert loads ride), and
+        decode cannot proceed for the request mix until they land — so
+        the swap serializes on the main-node clock.  Returns the charged
+        duration for the serving loop's stats."""
+        dt = self.profile.t_load(nbytes)
+        self.now += dt
+        return dt
 
     def step(self, rec) -> tuple:
         """Advance through one decode iteration; return (duration, stall).
@@ -441,6 +459,33 @@ class ServingTimings:
             "tpot_mean_s": float(np.mean(tpot)),
             "tpot_p99_s": float(np.percentile(tpot, 99)),
         }
+
+
+# ---------------------------------------------------------- node memory
+def node_memory_report(engine, kv_pool=None,
+                       budget_bytes: Optional[int] = None) -> Dict:
+    """Total per-node device memory under the OD-MoE budget: resident
+    expert slots + the transient packed buffer live during
+    dequantize-on-arrival + the paged KV pool (zero when serving runs
+    dense).  This is the quantity the '<1 GB edge node' claim is about
+    — the dense serving path hid the KV term entirely, and the old slot
+    accounting hid the in-flight packed term.  ``budget_bytes`` adds an
+    explicit pass/fail against a configured budget."""
+    slots = engine.slots
+    slot_bytes = slots.store.expert_bytes * max(slots.capacity)
+    transient = slots.transient_packed_bytes()
+    kv_bytes = kv_pool.pool_bytes() if kv_pool is not None else 0
+    rep = {
+        "expert_slot_bytes": slot_bytes,
+        "transient_packed_bytes": transient,
+        "kv_page_bytes": kv_bytes,
+        "kv_pages": kv_pool.num_pages if kv_pool is not None else 0,
+        "total_bytes": slot_bytes + transient + kv_bytes,
+    }
+    if budget_bytes is not None:
+        rep["budget_bytes"] = int(budget_bytes)
+        rep["within_budget"] = rep["total_bytes"] <= budget_bytes
+    return rep
 
 
 # -------------------------------------------------------------- baselines

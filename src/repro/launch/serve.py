@@ -29,10 +29,11 @@ import numpy as np
 
 from repro.configs import get_config
 from repro.core import (AlignmentPolicy, ODMoEEngine, RTX3090_EDGE,
-                        simulate_cached, simulate_odmoe)
+                        node_memory_report, simulate_cached, simulate_odmoe)
 from repro.models import greedy_generate, init_params
 from repro.quant import TieredPolicy, UniformPolicy
-from repro.serve import BatchComposer, ServingLoop, make_traffic
+from repro.serve import (BatchComposer, KVPool, ServingLoop,
+                         dense_cache_footprint, make_traffic)
 
 
 def build_parser() -> argparse.ArgumentParser:
@@ -69,6 +70,13 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--compose", default="overlap",
                     choices=["overlap", "fifo"],
                     help="batch composition policy")
+    ap.add_argument("--kv-pages", type=int, default=0,
+                    help="serve decode KV out of a paged pool of this "
+                         "many pages instead of dense per-request "
+                         "buffers (0 = dense; budget-aware admission, "
+                         "youngest-first preemption, page-exact resume)")
+    ap.add_argument("--page-tokens", type=int, default=16,
+                    help="KV slots per page (with --kv-pages)")
     return ap
 
 
@@ -119,9 +127,13 @@ def serve_traffic(cfg, params, args) -> None:
     reqs = make_traffic(cfg, args.requests, args.arrival_rate,
                         prompt_len=args.prompt_len, max_new=args.tokens,
                         seed=args.seed)
+    kv_pool = (KVPool(cfg, num_pages=args.kv_pages,
+                      page_tokens=args.page_tokens)
+               if args.kv_pages else None)
     loop = ServingLoop(eng, max_batch=args.max_batch,
-                       composer=BatchComposer(args.max_batch, args.compose),
-                       policy=policy)
+                       composer=BatchComposer(args.max_batch, args.compose,
+                                              kv_pool=kv_pool),
+                       policy=policy, kv_pool=kv_pool)
     res = loop.run(reqs)
     # ---- bit-exactness: every request == its solo reference decode
     # under the SAME transport policy
@@ -153,6 +165,28 @@ def serve_traffic(cfg, params, args) -> None:
               f"{sum(1 for s in served if s > 1)}/{len(served)}")
     print(f"  load stats: {eng.slots.stats}")
     print_transport_stats(eng)
+    # ---- KV pool occupancy + per-node memory (paged serving)
+    if kv_pool is not None:
+        st = res.kv_stats
+        occ = [s.kv_pages_used for s in res.steps if s.kv_pages_used >= 0]
+        dense = dense_cache_footprint(
+            cfg, kv_pool.window_pages * kv_pool.page_tokens, len(reqs))
+        print(f"  kv pool: {st['num_pages']} pages x "
+              f"{st['page_tokens']} tokens = {st['pool_bytes'] / 1e6:.2f} MB"
+              f" (dense footprint for {len(reqs)} requests: "
+              f"{dense / 1e6:.2f} MB)")
+        print(f"  occupancy: peak {st['peak_pages_used']}"
+              f"/{st['num_pages']} pages"
+              + (f", mean {np.mean(occ):.1f}" if occ else "")
+              + f"  deferred admissions: {st['deferred_admissions']}")
+        print(f"  preemptions: {st['preemptions']}  resumes: "
+              f"{st['resumes']}  swapped: "
+              f"{(st['swap_out_bytes'] + st['swap_in_bytes']) / 1e6:.2f} MB"
+              f" ({st['swap_s'] * 1e3:.3f} ms modeled)")
+    mem = node_memory_report(eng, kv_pool)
+    print("  per-node memory: " + ", ".join(
+        f"{k}={v / 1e6:.2f}MB" for k, v in mem.items()
+        if k.endswith("bytes")))
     # per-request wire bytes: each load's packed payload credited to
     # every request riding it (amortized codec accounting)
     per_req = {r.rid: 0 for r in reqs}
@@ -181,7 +215,9 @@ def serve_single(cfg, params, args) -> None:
     exact = bool(np.array_equal(np.asarray(toks), np.asarray(ref)))
     print(f"  tokens == dense reference (same transport policy): {exact}")
     assert exact, "engine output diverged from reference"
-    print(f"  recall (Eq.3): {trace.recall():.4f}   "
+    rec = trace.recall()      # None when nothing was predicted
+    print(f"  recall (Eq.3): "
+          f"{'n/a (no predictions)' if rec is None else f'{rec:.4f}'}   "
           f"reload fraction: {trace.reload_fraction():.4f}")
     print(f"  loads: {eng.slots.stats}")
     print_transport_stats(eng)

@@ -1,23 +1,33 @@
 """Continuous-batching serving over the cacheless OD-MoE engine.
 
-Three layers, composed by ``ServingLoop.run``:
+Four layers, composed by ``ServingLoop.run``:
 
   * ``request``  — ``Request`` / ``RequestState`` / ``RequestQueue``:
     arrival, admission, per-request decode + shadow state, lifecycle;
+  * ``kvpool``   — ``KVPool`` and the paged cache views: KV memory as
+    an explicit per-node page budget (fixed-size pages, per-request
+    page tables, free-list allocation, byte-exact swap-out/in);
   * ``composer`` — ``BatchComposer``: which runnable requests decode
     together, preferring overlapping SEP-predicted expert sets so one
-    on-demand slot load serves many requests;
+    on-demand slot load serves many requests, and (with a pool) never
+    composing a batch whose page growth exceeds the free list;
   * ``loop``     — ``ServingLoop``: prefill-on-admission, iterative
-    composed decode, co-simulated virtual time (TTFT/TPOT/throughput).
+    composed decode, budget-aware admission with youngest-first
+    preemption and page-exact resume, co-simulated virtual time
+    (TTFT/TPOT/throughput).
 
 Guarantee: per-request outputs are bit-identical to solo decoding —
-batch composition is scheduling, never arithmetic.
+batch composition, deferral and preemption are scheduling, never
+arithmetic.
 """
 from .composer import BatchComposer
+from .kvpool import (KVPool, PagedCacheBatch, PagedRequestCache,
+                     PoolExhausted, dense_cache_footprint)
 from .loop import ServeResult, ServingLoop, StepRecord
 from .request import Request, RequestQueue, RequestState, make_traffic
 
 __all__ = [
-    "BatchComposer", "ServeResult", "ServingLoop", "StepRecord",
-    "Request", "RequestQueue", "RequestState", "make_traffic",
+    "BatchComposer", "KVPool", "PagedCacheBatch", "PagedRequestCache",
+    "PoolExhausted", "dense_cache_footprint", "ServeResult", "ServingLoop",
+    "StepRecord", "Request", "RequestQueue", "RequestState", "make_traffic",
 ]

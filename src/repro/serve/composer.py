@@ -16,6 +16,17 @@ composition never advances any shadow — it only reads predictions.
 ``fifo`` policy: the ``max_batch`` oldest requests, the continuous-
 batching baseline every serving benchmark compares against.
 
+With a ``kv_pool`` the composer is additionally *budget-aware*: a
+candidate whose next decode step crosses a page boundary needs a fresh
+KV page, and a batch whose collective page growth exceeds the pool's
+free list would force the serving loop to preempt one of the batch's
+own members mid-step.  The composer therefore stops adding candidates
+once the chosen set's growth demand reaches the free-page supply (the
+seed — the oldest request — is exempt: the loop's preemption path
+guarantees it pages, so head-of-line progress never depends on the
+budget check).  This is soft admission control; the loop's
+ensure-pages/preempt step remains the hard guarantee.
+
 Composition is pure policy: whatever subset is chosen, per-request
 outputs are bit-identical to solo decoding (the engine invariant), so
 the composer can only change *when* tokens appear, never *which*.
@@ -28,31 +39,70 @@ from .request import RequestState
 
 
 class BatchComposer:
-    def __init__(self, max_batch: int = 4, policy: str = "overlap"):
+    def __init__(self, max_batch: int = 4, policy: str = "overlap",
+                 kv_pool=None):
         if max_batch < 1:
             raise ValueError("max_batch must be >= 1")
         if policy not in ("overlap", "fifo"):
             raise ValueError(f"unknown composition policy {policy!r}")
         self.max_batch = max_batch
         self.policy = policy
+        self.kv_pool = kv_pool
 
+    # ----------------------------------------------------------- KV budget
+    def _growth(self, state: RequestState) -> int:
+        """KV pages ``state`` must acquire before its next decode step
+        (the step writes slot ``pos``, so coverage is ``pos + 1``)."""
+        if self.kv_pool is None:
+            return 0
+        return self.kv_pool.growth_need(state.rid, int(state.pos[0]) + 1)
+
+    def _fits(self, state: RequestState, spent: int) -> bool:
+        return (self.kv_pool is None
+                or spent + self._growth(state) <= self.kv_pool.free_pages)
+
+    def _seed_spent(self, seed: RequestState) -> int:
+        """The seed rides regardless (the loop preempts to page it), so
+        it charges the candidates' budget only for what the free list
+        can actually supply — a seed needing more than ``free_pages``
+        must not lock zero-growth candidates out of the batch."""
+        if self.kv_pool is None:
+            return 0
+        return min(self._growth(seed), self.kv_pool.free_pages)
+
+    # -------------------------------------------------------------- choose
     def compose(self, runnable: List[RequestState]) -> List[RequestState]:
         """Pick <= max_batch requests for the next iteration.  ``runnable``
         arrives in admission order; the chosen subset keeps that order so
         batch row <-> request mapping stays deterministic."""
-        if len(runnable) <= self.max_batch or self.policy == "fifo":
-            return runnable[: self.max_batch]
-        sig = {s.rid: s.predicted_experts() for s in runnable}
+        if not runnable:
+            return []
         seed, candidates = runnable[0], runnable[1:]
-        chosen = [seed]
+        chosen, spent = [seed], self._seed_spent(seed)  # seed always rides
+        if self.policy == "fifo":
+            for cand in candidates:
+                if len(chosen) >= self.max_batch:
+                    break
+                if not self._fits(cand, spent):
+                    continue
+                spent += self._growth(cand)
+                chosen.append(cand)
+            return chosen
+        sig = {s.rid: s.predicted_experts() for s in runnable}
         union = set(sig[seed.rid])
+        candidates = list(candidates)
         while len(chosen) < self.max_batch and candidates:
-            best_i, best_score = 0, -1
+            best_i, best_score = -1, -1
             for i, cand in enumerate(candidates):
+                if not self._fits(cand, spent):
+                    continue
                 score = len(union & sig[cand.rid])
                 if score > best_score:          # ties keep the oldest
                     best_i, best_score = i, score
+            if best_i < 0:                      # nothing fits the budget
+                break
             pick = candidates.pop(best_i)
+            spent += self._growth(pick)
             union |= sig[pick.rid]
             chosen.append(pick)
         # preserve admission order for deterministic row mapping

@@ -1,0 +1,390 @@
+"""Paged KV-cache pool — KV memory as a first-class per-node budget.
+
+The dense serving path gives every admitted request a full
+``max_cache_len`` KV buffer at prefill, so under heavy traffic KV (not
+experts) silently becomes the GPU-memory floor on the main node.  This
+module replaces those dense per-request buffers with one fixed pool of
+``num_pages`` pages of ``page_tokens`` KV slots each (SlimCaching's
+explicit per-node memory budget, vLLM's paging mechanics):
+
+  * ``KVPool`` — per-attention-layer page arrays, a free list, and one
+    page table per request.  Pages are allocated on demand as a request
+    decodes past a page boundary and returned when it retires.  A
+    preempted request's pages are *swapped out* byte-exactly to host
+    memory and restored on resume, so preemption is pure scheduling —
+    tokens stay bit-identical to the request's solo decode.
+  * ``PagedRequestCache`` / ``PagedCacheBatch`` — drop-in stand-ins for
+    the engine's per-layer ``cache_list``.  Indexing ``caches[li]``
+    *gathers* the member requests' pages into the dense ``(B, W, ...)``
+    view ``block_decode`` consumes; assigning ``caches[li] = new``
+    *scatters* the updated pages back.  Logical pages beyond a
+    request's table read from a permanent zero "null page" (``pos=-1``
+    masks them in attention), which is exactly what the dense buffer's
+    untouched tail holds — so the gathered view is bit-identical to the
+    dense cache it replaces.
+
+Budget math: one page holds ``page_tokens`` slots of one layer's K + V
+(``2 * page_tokens * num_kv_heads * head_dim * itemsize``) plus the
+``pos`` lane (``4 * page_tokens``); a *page set* spans every attention
+layer, and the pool's device footprint is
+``num_pages * page_set_bytes`` — reported beside expert-slot bytes by
+``repro.core.timing.node_memory_report``.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.config import ATTN, ModelConfig
+
+
+class PoolExhausted(RuntimeError):
+    """Raised when an allocation cannot be satisfied from the free list
+    (the serving loop turns this into deferral or preemption)."""
+
+
+@dataclass
+class KVPoolStats:
+    allocated_pages: int = 0
+    released_pages: int = 0
+    preemptions: int = 0
+    resumes: int = 0
+    swap_out_bytes: int = 0
+    swap_in_bytes: int = 0
+    peak_pages_used: int = 0
+    deferred_admissions: int = 0
+
+    def as_dict(self) -> Dict[str, int]:
+        return dict(self.__dict__)
+
+
+class KVPool:
+    """Fixed-size paged KV storage for every attention layer.
+
+    Physical page ``num_pages`` (one past the end) is the permanent
+    null page: always zero K/V with ``pos = -1``, never on the free
+    list, never written — unallocated logical pages gather from it.
+    """
+
+    def __init__(self, cfg: ModelConfig, num_pages: int, page_tokens: int):
+        if num_pages < 1 or page_tokens < 1:
+            raise ValueError("num_pages and page_tokens must be >= 1")
+        self.cfg = cfg
+        self.num_pages = num_pages
+        self.page_tokens = page_tokens
+        self.attn_layers: List[int] = [
+            i for i, (mixer, _) in enumerate(cfg.layer_kinds())
+            if mixer == ATTN]
+        if not self.attn_layers:
+            raise ValueError("KVPool needs at least one attention layer "
+                             "(pure-SSM states are O(1) and stay dense)")
+        dt = jnp.dtype(cfg.dtype)
+        nkv, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+        n = num_pages + 1                      # + the null page
+        self.k: Dict[int, jax.Array] = {
+            li: jnp.zeros((n, page_tokens, nkv, hd), dt)
+            for li in self.attn_layers}
+        self.v: Dict[int, jax.Array] = {
+            li: jnp.zeros((n, page_tokens, nkv, hd), dt)
+            for li in self.attn_layers}
+        self.pos: Dict[int, jax.Array] = {
+            li: jnp.full((n, page_tokens), -1, jnp.int32)
+            for li in self.attn_layers}
+        # one K or V page of one layer
+        kv_lane = 2 * page_tokens * nkv * hd * dt.itemsize
+        pos_lane = page_tokens * np.dtype(np.int32).itemsize
+        # a page *set* spans every attention layer (tables are shared
+        # across layers: logical page j lives at the same physical index
+        # in every layer's arrays)
+        self.page_set_bytes = (kv_lane + pos_lane) * len(self.attn_layers)
+        self.free: List[int] = list(range(num_pages - 1, -1, -1))
+        self.tables: Dict[int, List[int]] = {}
+        self.swapped: Dict[int, Dict[int, Dict[str, np.ndarray]]] = {}
+        self.stats = KVPoolStats()
+        # serving window in pages, fixed once per run by the loop
+        self.window_pages = 0
+
+    def reset(self) -> None:
+        """Fresh run: drop every table, swap and counter (page contents
+        are re-zeroed lazily at allocation).  The serving loop resets
+        the pool it carries at the top of each ``run``."""
+        self.free = list(range(self.num_pages - 1, -1, -1))
+        self.tables = {}
+        self.swapped = {}
+        self.stats = KVPoolStats()
+
+    # ------------------------------------------------------------ geometry
+    def pages_for(self, n_slots: int) -> int:
+        """Pages needed to cover KV slots ``[0, n_slots)``."""
+        return max(0, -(-n_slots // self.page_tokens))
+
+    def set_window(self, cache_len: int) -> int:
+        """Fix the serving window; returns it rounded up to whole pages
+        (the shared ``max_cache_len`` every request is prefetched with)."""
+        self.window_pages = self.pages_for(cache_len)
+        if self.window_pages > self.num_pages:
+            raise ValueError(
+                f"pool of {self.num_pages} pages cannot hold even one "
+                f"request's window of {self.window_pages} pages — no "
+                "admission order could make progress")
+        return self.window_pages * self.page_tokens
+
+    @property
+    def free_pages(self) -> int:
+        return len(self.free)
+
+    @property
+    def pages_used(self) -> int:
+        return self.num_pages - len(self.free)
+
+    def pool_bytes(self) -> int:
+        """Device footprint of the whole pool (the KV budget)."""
+        return self.num_pages * self.page_set_bytes
+
+    def table_pages(self, rid: int) -> int:
+        return len(self.tables.get(rid, ()))
+
+    def growth_need(self, rid: int, n_slots: int) -> int:
+        """New pages ``rid`` must acquire to cover ``n_slots`` slots."""
+        return max(0, self.pages_for(n_slots) - self.table_pages(rid))
+
+    def can_alloc(self, n_new: int) -> bool:
+        return n_new <= len(self.free)
+
+    # ---------------------------------------------------------- allocation
+    def _take_pages(self, n: int) -> List[int]:
+        """Pop ``n`` pages off the free list and re-zero them in ONE
+        batched update per pool array (fresh pages must read exactly
+        like the dense buffer's untouched slots: zero K/V, pos = -1 —
+        and per-page functional updates would copy the whole pool once
+        per page on the decode hot path)."""
+        pages = [self.free.pop() for _ in range(n)]
+        if pages:
+            idx = jnp.asarray(np.asarray(pages))
+            for li in self.attn_layers:
+                self.k[li] = self.k[li].at[idx].set(0)
+                self.v[li] = self.v[li].at[idx].set(0)
+                self.pos[li] = self.pos[li].at[idx].set(-1)
+        return pages
+
+    def ensure(self, rid: int, n_slots: int) -> int:
+        """Grow ``rid``'s table to cover ``n_slots`` slots; returns the
+        number of pages added.  Raises ``PoolExhausted`` (allocating
+        nothing) when the free list cannot supply them all."""
+        need = self.growth_need(rid, n_slots)
+        if need > len(self.free):
+            raise PoolExhausted(
+                f"request {rid} needs {need} page(s), {len(self.free)} free")
+        if need:
+            self.tables.setdefault(rid, []).extend(self._take_pages(need))
+            self.stats.allocated_pages += need
+            self.stats.peak_pages_used = max(self.stats.peak_pages_used,
+                                             self.pages_used)
+        return need
+
+    def release(self, rid: int) -> None:
+        """Return every page ``rid`` holds (request retired)."""
+        pages = self.tables.pop(rid, [])
+        self.free.extend(reversed(pages))
+        self.stats.released_pages += len(pages)
+        self.swapped.pop(rid, None)
+
+    # ---------------------------------------------------- preempt / resume
+    def swap_out(self, rid: int) -> int:
+        """Preemption: copy ``rid``'s pages to host byte-exactly and
+        free them.  Returns the bytes that crossed (the modeled
+        device->host page transfer)."""
+        pages = self.tables.pop(rid, [])
+        if not pages:
+            return 0
+        idx = np.asarray(pages)
+        saved: Dict[int, Dict[str, np.ndarray]] = {}
+        for li in self.attn_layers:
+            saved[li] = {"k": np.asarray(self.k[li][idx]),
+                         "v": np.asarray(self.v[li][idx]),
+                         "pos": np.asarray(self.pos[li][idx])}
+        self.swapped[rid] = saved
+        self.free.extend(reversed(pages))
+        nbytes = len(pages) * self.page_set_bytes
+        self.stats.preemptions += 1
+        self.stats.swap_out_bytes += nbytes
+        return nbytes
+
+    def swapped_pages(self, rid: int) -> int:
+        saved = self.swapped.get(rid)
+        if not saved:
+            return 0
+        return saved[self.attn_layers[0]]["k"].shape[0]
+
+    def swap_in(self, rid: int) -> int:
+        """Page-exact resume: reallocate pages and restore the saved
+        contents bit-for-bit.  Returns the bytes that crossed."""
+        saved = self.swapped.get(rid)
+        if saved is None:
+            raise KeyError(f"request {rid} has no swapped pages")
+        n = saved[self.attn_layers[0]]["k"].shape[0]
+        if n > len(self.free):
+            raise PoolExhausted(
+                f"resume of request {rid} needs {n} page(s), "
+                f"{len(self.free)} free")
+        pages = [self.free.pop() for _ in range(n)]
+        idx = jnp.asarray(np.asarray(pages))
+        for li in self.attn_layers:
+            self.k[li] = self.k[li].at[idx].set(saved[li]["k"])
+            self.v[li] = self.v[li].at[idx].set(saved[li]["v"])
+            self.pos[li] = self.pos[li].at[idx].set(saved[li]["pos"])
+        del self.swapped[rid]
+        self.tables[rid] = pages
+        nbytes = n * self.page_set_bytes
+        self.stats.resumes += 1
+        self.stats.swap_in_bytes += nbytes
+        self.stats.allocated_pages += n
+        self.stats.peak_pages_used = max(self.stats.peak_pages_used,
+                                         self.pages_used)
+        return nbytes
+
+    # ------------------------------------------------------ gather/scatter
+    def _padded_table(self, rid: int) -> List[int]:
+        table = self.tables.get(rid, [])
+        return (table + [self.num_pages] * (self.window_pages - len(table))
+                )[: self.window_pages]
+
+    def gather_layer(self, li: int, rids: Sequence[int]) -> dict:
+        """Dense ``(B, W, ...)`` view of layer ``li`` for ``rids`` —
+        bit-identical to the dense buffers it replaces (unallocated
+        logical pages read from the null page)."""
+        pt, wp = self.page_tokens, self.window_pages
+        idx = jnp.asarray(np.asarray([self._padded_table(r) for r in rids]))
+        b = len(rids)
+        k = self.k[li][idx]                  # (B, wp, pt, nkv, hd)
+        v = self.v[li][idx]
+        pos = self.pos[li][idx]              # (B, wp, pt)
+        return {"k": k.reshape(b, wp * pt, *k.shape[3:]),
+                "v": v.reshape(b, wp * pt, *v.shape[3:]),
+                "pos": pos.reshape(b, wp * pt)}
+
+    def scatter_layer(self, li: int, rids: Sequence[int], dense: dict
+                      ) -> None:
+        """Write the updated dense view back into each request's
+        allocated pages (the null-page tail is never written — the loop
+        guarantees the decoded slot is covered before each step)."""
+        pt = self.page_tokens
+        for i, rid in enumerate(rids):
+            table = self.tables.get(rid)
+            if not table:
+                raise PoolExhausted(
+                    f"scatter for request {rid} with no pages (preempted?)")
+            n = len(table)
+            idx = jnp.asarray(np.asarray(table))
+            k = dense["k"][i, : n * pt]
+            v = dense["v"][i, : n * pt]
+            pos = dense["pos"][i, : n * pt]
+            self.k[li] = self.k[li].at[idx].set(
+                k.reshape(n, pt, *k.shape[1:]))
+            self.v[li] = self.v[li].at[idx].set(
+                v.reshape(n, pt, *v.shape[1:]))
+            self.pos[li] = self.pos[li].at[idx].set(pos.reshape(n, pt))
+
+    # ------------------------------------------------------------ adoption
+    def adopt(self, rid: int, cache_list: List[dict], prompt_len: int
+              ) -> "PagedRequestCache":
+        """Move a freshly-prefilled request's KV into pool pages (batch
+        axis must be 1) and hand back the paged stand-in the serving
+        loop carries instead of the dense buffers."""
+        self.ensure(rid, prompt_len)
+        handle = PagedRequestCache(self, rid, len(cache_list))
+        for li, cache in enumerate(cache_list):
+            if li in self.k:
+                self.scatter_layer(li, [rid], cache)
+            else:
+                handle.states[li] = cache
+        return handle
+
+
+class PagedRequestCache:
+    """One request's per-layer cache stand-in: attention layers live in
+    the pool (via the request's page table), anything else (Mamba/SSM
+    state) stays dense in ``states``.  Supports the same
+    ``caches[li]`` / ``caches[li] = x`` protocol as a dense cache list,
+    so the engine's decode path is oblivious to paging."""
+
+    def __init__(self, pool: KVPool, rid: int, n_layers: int):
+        self.pool = pool
+        self.rid = rid
+        self.n_layers = n_layers
+        self.states: Dict[int, dict] = {}
+
+    def __len__(self) -> int:
+        return self.n_layers
+
+    def __getitem__(self, li: int):
+        if li in self.pool.k:
+            return self.pool.gather_layer(li, [self.rid])
+        return self.states[li]
+
+    def __setitem__(self, li: int, value) -> None:
+        if li in self.pool.k:
+            self.pool.scatter_layer(li, [self.rid], value)
+        else:
+            self.states[li] = value
+
+    # engine dispatch hooks (see core.engine.concat_cache_lists)
+    @staticmethod
+    def compose(handles: Sequence["PagedRequestCache"]) -> "PagedCacheBatch":
+        return PagedCacheBatch(list(handles))
+
+
+class PagedCacheBatch:
+    """Composed-batch view over member ``PagedRequestCache`` handles.
+    Gathers/scatters attention layers through the pool page tables;
+    concatenates/splits the dense non-attention states.  Slicing
+    returns the member handle — scatter already committed its state."""
+
+    def __init__(self, members: List[PagedRequestCache]):
+        if not members:
+            raise ValueError("empty paged batch")
+        self.members = members
+        self.pool = members[0].pool
+        self.rids = [m.rid for m in members]
+        self.n_layers = members[0].n_layers
+
+    def __len__(self) -> int:
+        return self.n_layers
+
+    def __getitem__(self, li: int):
+        if li in self.pool.k:
+            return self.pool.gather_layer(li, self.rids)
+        per = [m.states[li] for m in self.members]
+        if len(per) == 1:
+            return per[0]
+        return jax.tree.map(lambda *xs: jnp.concatenate(xs, axis=0), *per)
+
+    def __setitem__(self, li: int, value) -> None:
+        if li in self.pool.k:
+            self.pool.scatter_layer(li, self.rids, value)
+            return
+        if len(self.members) == 1:
+            self.members[0].states[li] = value
+            return
+        for i, m in enumerate(self.members):
+            m.states[li] = jax.tree.map(lambda a: a[i:i + 1], value)
+
+    def member(self, i: int) -> PagedRequestCache:
+        return self.members[i]
+
+
+def dense_cache_footprint(cfg: ModelConfig, cache_len: int,
+                          n_requests: int) -> int:
+    """Bytes the dense serving path would pin for ``n_requests`` live
+    requests at window ``cache_len`` — the baseline the pool budget is
+    sized against (benchmarks size pools as a fraction of this)."""
+    dt = jnp.dtype(cfg.dtype)
+    nkv, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    n_attn = sum(1 for mixer, _ in cfg.layer_kinds() if mixer == ATTN)
+    per_layer = (2 * cache_len * nkv * hd * dt.itemsize
+                 + cache_len * np.dtype(np.int32).itemsize)
+    return n_requests * n_attn * per_layer

@@ -1,32 +1,47 @@
 """ServingLoop — continuous batching driven by the OD-MoE engine.
 
-Each outer iteration: (1) admit every request whose arrival time the
-virtual clock has passed, running real prefill on admission (the first
-token falls out of prefill, so TTFT = admission wait + prefill); (2)
-refresh each runnable request's SEP *peek* — a functional shadow step
-that yields the prediction for its next token without committing the
-shadow, so waiting requests never drift; (3) let the ``BatchComposer``
-pick <= max_batch requests, preferring overlapping predicted expert
-sets; (4) run one composed ``decode_batch`` through the engine — shared
-worker fleet, shared expert store, load events tagged with the batch's
-request ids — and charge its duration on the ``DecodeClock``; (5) split
-the batch back into per-request states, commit the participants' shadow
-states, and retire finished requests.
+Each outer iteration: (1) resume preempted requests and admit deferred
+ones as KV pages free up, then admit every request whose arrival time
+the virtual clock has passed, running real prefill on admission (the
+first token falls out of prefill, so TTFT = admission wait + prefill);
+(2) refresh each runnable request's SEP *peek* — a functional shadow
+step that yields the prediction for its next token without committing
+the shadow, so waiting requests never drift; (3) let the
+``BatchComposer`` pick <= max_batch requests, preferring overlapping
+predicted expert sets; (4) run one composed ``decode_batch`` through
+the engine — shared worker fleet, shared expert store, load events
+tagged with the batch's request ids — and charge its duration on the
+``DecodeClock``; (5) split the batch back into per-request states,
+commit the participants' shadow states, and retire finished requests.
 
 Correctness and time are deliberately co-simulated: admission depends on
 the clock, the clock depends on the composed traces, and both share one
 event stream, so TTFT/TPOT/throughput come out of the same run that
 checks bit-exactness.
 
+KV memory is a first-class budget when the loop carries a
+``repro.serve.kvpool.KVPool``: requests decode out of pool pages via
+per-request page tables instead of dense ``max_cache_len`` buffers.
+Admission is budget-aware — a request whose prompt pages do not fit is
+*deferred* (FIFO, its TTFT absorbs the memory wait) rather than
+allowed to over-commit the node.  When a running request crosses a
+page boundary and the free list is empty, the *youngest* runnable
+request is preempted: its pages are swapped out to host byte-exactly
+(``DecodeClock.charge_kv_swap`` prices the transfer), and it resumes —
+oldest first, page-exact — once retirements free pages.  Because the
+oldest request can always claim pages (victims are strictly younger,
+and one window must fit the pool by construction), every admitted
+request completes; preemption is scheduling, never arithmetic.
+
 The bit-exactness invariant (tested in tests/test_serving.py): every
 request's token stream is bit-identical to running it alone through
-``greedy_generate``, whatever batches it rode in — composition is pure
-scheduling, never arithmetic.  Under a mixed-precision transport policy
-(``ODMoEEngine(transport=...)``) the same holds against
-``greedy_generate(..., transport=...)``: the loop passes the engine's
-policy to the ``DecodeClock`` so composed-step durations price expert
-loads by packed wire bytes, and every load event carries its scheme and
-payload for per-request codec accounting.
+``greedy_generate``, whatever batches it rode in — and, under a pool,
+however often it was preempted and resumed.  Under a mixed-precision
+transport policy (``ODMoEEngine(transport=...)``) the same holds
+against ``greedy_generate(..., transport=...)``: the loop passes the
+engine's policy to the ``DecodeClock`` so composed-step durations
+price expert loads by packed wire bytes, and every load event carries
+its scheme and payload for per-request codec accounting.
 
 Serving survives fleet faults (tests/test_fleet.py): when the engine
 carries a ``repro.fleet.FaultInjector``, worker kills/throttles fire
@@ -51,6 +66,7 @@ from repro.core import (AlignmentPolicy, DecodeClock, LayerRecord,
 from repro.core.predictor import recall_counts
 from repro.core.timing import HardwareProfile
 from .composer import BatchComposer
+from .kvpool import KVPool, PoolExhausted
 from .request import Request, RequestQueue, RequestState
 
 
@@ -64,6 +80,7 @@ class StepRecord:
     duration_s: float
     stall_s: float
     alive_workers: int = -1      # fleet liveness after this step's faults
+    kv_pages_used: int = -1      # pool occupancy after this step (paged)
 
 
 @dataclass
@@ -74,6 +91,7 @@ class ServeResult:
     steps: List[StepRecord] = field(default_factory=list)
     states: Dict[int, RequestState] = field(default_factory=dict)
     n_workers: int = 0
+    kv_stats: Optional[Dict] = None      # pool counters + swap seconds
 
     @property
     def mean_batch(self) -> float:
@@ -82,8 +100,11 @@ class ServeResult:
         return float(np.mean([len(s.request_ids) for s in self.steps]))
 
     def degraded_report(self) -> Dict[str, float]:
-        """Healthy- vs degraded-fleet TPOT over the composed steps (see
-        ``repro.core.timing.degraded_tpot_report``)."""
+        """Healthy- vs degraded-fleet TPOT over the composed steps.  An
+        all-healthy run is a well-defined explicit case (see
+        ``repro.core.timing.degraded_tpot_report``): ``healthy_only``
+        is True, the empty degraded bucket reports 0.0 and
+        ``degradation_x`` is 1.0 — never NaN."""
         return degraded_tpot_report(
             [s.duration_s for s in self.steps],
             [s.alive_workers if s.alive_workers >= 0 else self.n_workers
@@ -96,9 +117,14 @@ class ServingLoop:
                  composer: Optional[BatchComposer] = None,
                  profile: HardwareProfile = RTX3090_EDGE,
                  policy: AlignmentPolicy = AlignmentPolicy(1, 1),
-                 max_seq_len: int = 0):
+                 max_seq_len: int = 0,
+                 kv_pool: Optional[KVPool] = None):
         self.engine = engine
-        self.composer = composer or BatchComposer(max_batch)
+        self.kv_pool = kv_pool
+        self.composer = composer or BatchComposer(max_batch,
+                                                  kv_pool=kv_pool)
+        if kv_pool is not None and self.composer.kv_pool is None:
+            self.composer.kv_pool = kv_pool   # budget-aware composition
         self.profile = profile
         self.policy = policy
         self.max_seq_len = max_seq_len
@@ -107,7 +133,9 @@ class ServingLoop:
     def _admit(self, req: Request, cache_len: int, clock: DecodeClock
                ) -> RequestState:
         """Prefill ``req`` on the main node (real compute + modeled
-        time); its first token is emitted here."""
+        time); its first token is emitted here.  Paged serving adopts
+        the prefilled KV straight into pool pages (the caller verified
+        they fit)."""
         eng = self.engine
         arrival_wait_end = clock.now
         t_pre = simulate_prefill_odmoe(
@@ -115,15 +143,85 @@ class ServingLoop:
             n_workers=eng.sched.n_workers)
         clock.charge_prefill(t_pre)
         batch = {"tokens": jnp.asarray(req.prompt)[None, :]}
-        token, cache_list, pos = eng.prefill_request(batch, cache_len)
+        token, cache_list, pos = eng.prefill_request(
+            batch, cache_len, kv_pool=self.kv_pool,
+            rid=req.rid if self.kv_pool is not None else None)
         state = RequestState(request=req, token=token,
                              cache_list=cache_list, pos=pos,
                              admit_s=arrival_wait_end,
                              first_token_s=clock.now)
+        state.admit_seq = self._admit_seq
+        self._admit_seq += 1
         state.generated.append(int(token[0]))
         if eng.shadow is not None:
             state.shadow_state = eng.shadow.prefill_state(batch, cache_len)
         return state
+
+    def _admission_fits(self, req: Request) -> bool:
+        pool = self.kv_pool
+        return pool is None or pool.can_alloc(pool.pages_for(len(req.prompt)))
+
+    def _admit_or_retire(self, req: Request, cache_len: int,
+                         clock: DecodeClock, queue: RequestQueue) -> None:
+        state = self._admit(req, cache_len, clock)
+        queue.activate(state)
+        if state.done:                       # max_new_tokens == 1
+            state.finish_s = clock.now
+            self._retire(state, queue)
+
+    def _retire(self, state: RequestState, queue: RequestQueue) -> None:
+        if self.kv_pool is not None:
+            self.kv_pool.release(state.rid)
+        queue.retire(state)
+
+    # --------------------------------------------- KV preemption / resume
+    def _preempt(self, state: RequestState, clock: DecodeClock) -> None:
+        """Swap the victim's KV pages out to host and take it off the
+        runnable set; the transfer serializes on the clock."""
+        nbytes = self.kv_pool.swap_out(state.rid)
+        state.preempted = True
+        self._swap_s += clock.charge_kv_swap(nbytes)
+
+    def _resume_preempted(self, queue: RequestQueue, clock: DecodeClock
+                          ) -> bool:
+        """Swap preempted requests back in, oldest admission first,
+        while their full saved page sets fit (FIFO — a younger request
+        never resumes past a starved older one)."""
+        pool, resumed = self.kv_pool, False
+        for state in queue.preempted():
+            if not pool.can_alloc(pool.swapped_pages(state.rid)):
+                break
+            nbytes = pool.swap_in(state.rid)
+            self._swap_s += clock.charge_kv_swap(nbytes)
+            state.preempted = False
+            resumed = True
+        return resumed
+
+    def _ensure_batch_pages(self, batch: List[RequestState],
+                            queue: RequestQueue, clock: DecodeClock
+                            ) -> List[RequestState]:
+        """Hard budget guarantee before a composed step: every member
+        gets the page its next slot writes into, preempting the
+        *youngest* runnable request (possibly a batch member, possibly
+        the grower itself when it is the youngest) on exhaustion.
+        Victims are strictly younger than the oldest member, so the
+        head of the line always decodes — no livelock."""
+        pool = self.kv_pool
+        for state in batch:
+            if state.preempted:              # lost its pages to an older
+                continue                     # member this very step
+            need_slots = int(state.pos[0]) + 1
+            while True:
+                try:
+                    pool.ensure(state.rid, need_slots)
+                    break
+                except PoolExhausted:
+                    victim = max(queue.runnable(),
+                                 key=lambda s: s.admit_seq)
+                    self._preempt(victim, clock)
+                    if victim is state:
+                        break
+        return [s for s in batch if not s.preempted]
 
     # -------------------------------------------------------- shadow peek
     def _ensure_peek(self, state: RequestState) -> None:
@@ -154,6 +252,11 @@ class ServingLoop:
                 n_workers=eng.sched.n_workers)
         cache_len = self.max_seq_len or (
             max(len(r.prompt) + r.max_new_tokens for r in requests) + 2)
+        if self.kv_pool is not None:
+            self.kv_pool.reset()
+            # every request shares one page-aligned window (bit-exact vs
+            # the dense path: the extra tail slots stay pos=-1/masked)
+            cache_len = self.kv_pool.set_window(cache_len)
         queue = RequestQueue(requests)
         clock = DecodeClock(eng.cfg, eng.sched, self.profile,
                             shadow_scheme=(eng.shadow.scheme
@@ -162,31 +265,64 @@ class ServingLoop:
                             transport=getattr(eng, "transport", None))
         trace = Trace()
         steps: List[StepRecord] = []
+        deferred: List[Request] = []
+        self._admit_seq = 0
+        self._swap_s = 0.0
         step = 0
-        while not queue.all_done:
+        while not queue.all_done or deferred:
+            progressed = False
+            if self.kv_pool is not None:
+                progressed |= self._resume_preempted(queue, clock)
+                while deferred and self._admission_fits(deferred[0]):
+                    self._admit_or_retire(deferred.pop(0), cache_len,
+                                          clock, queue)
+                    progressed = True
             for req in queue.pop_arrived(clock.now):
-                state = self._admit(req, cache_len, clock)
-                queue.activate(state)
-                if state.done:               # max_new_tokens == 1
-                    state.finish_s = clock.now
-                    queue.retire(state)
+                # budget-aware admission is strictly FIFO: while an
+                # older request waits for pages, younger arrivals queue
+                # behind it (mirrors the resume path) — otherwise a
+                # stream of small requests could starve a large one
+                if deferred or not self._admission_fits(req):
+                    self.kv_pool.stats.deferred_admissions += 1
+                    deferred.append(req)
+                    continue
+                self._admit_or_retire(req, cache_len, clock, queue)
+                progressed = True
             runnable = queue.runnable()
             if not runnable:
                 nxt = queue.next_arrival_s()
-                if nxt is None:
+                if nxt is not None:
+                    clock.advance_to(nxt)    # idle until the next arrival
+                    continue
+                if queue.all_done and not deferred:
                     break
-                clock.advance_to(nxt)        # idle until the next arrival
-                continue
+                if progressed:
+                    continue                 # retires freed pages; retry
+                raise RuntimeError(
+                    "KV pool deadlock: nothing runnable, resumable or "
+                    "admittable (pool smaller than one request window?)")
             for state in runnable:
                 self._ensure_peek(state)
             batch = self.composer.compose(runnable)
+            if self.kv_pool is not None:
+                batch = self._ensure_batch_pages(batch, queue, clock)
+                if not batch:
+                    continue                 # preemptions freed pages
             self._decode_composed(batch, clock, trace, steps, step)
             for state in list(batch):
                 if state.done:
                     state.finish_s = clock.now
-                    queue.retire(state)
+                    self._retire(state, queue)
             step += 1
-        return self._result(queue, trace, steps, eng.sched.n_workers)
+        kv_stats = None
+        if self.kv_pool is not None:
+            kv_stats = self.kv_pool.stats.as_dict()
+            kv_stats.update(swap_s=self._swap_s,
+                            num_pages=self.kv_pool.num_pages,
+                            page_tokens=self.kv_pool.page_tokens,
+                            pool_bytes=self.kv_pool.pool_bytes())
+        return self._result(queue, trace, steps, eng.sched.n_workers,
+                            kv_stats)
 
     # ------------------------------------------------------ composed step
     def _decode_composed(self, batch: List[RequestState],
@@ -218,7 +354,10 @@ class ServingLoop:
                                 request_ids=[s.rid for s in batch],
                                 record=rec, start_s=start,
                                 duration_s=duration, stall_s=stall,
-                                alive_workers=clock.alive_workers()))
+                                alive_workers=clock.alive_workers(),
+                                kv_pages_used=(self.kv_pool.pages_used
+                                               if self.kv_pool is not None
+                                               else -1)))
         for i, state in enumerate(batch):
             state.token = new_token[i:i + 1]
             state.cache_list = slice_cache_list(caches, i)
@@ -257,7 +396,8 @@ class ServingLoop:
     # ------------------------------------------------------------ result
     @staticmethod
     def _result(queue: RequestQueue, trace: Trace,
-                steps: List[StepRecord], n_workers: int) -> ServeResult:
+                steps: List[StepRecord], n_workers: int,
+                kv_stats: Optional[Dict] = None) -> ServeResult:
         states = dict(sorted(queue.finished.items()))
         timings = ServingTimings(
             arrival_s=[s.request.arrival_s for s in states.values()],
@@ -267,4 +407,5 @@ class ServingLoop:
         outputs = {rid: np.asarray(s.generated, np.int32)
                    for rid, s in states.items()}
         return ServeResult(outputs=outputs, timings=timings, trace=trace,
-                           steps=steps, states=states, n_workers=n_workers)
+                           steps=steps, states=states, n_workers=n_workers,
+                           kv_stats=kv_stats)

@@ -57,6 +57,14 @@ class RequestState:
     admit_s: float = 0.0
     first_token_s: float = 0.0
     finish_s: float = 0.0
+    # KV-pool scheduling (paged serving): admission sequence number (the
+    # preemption priority — younger admissions are preempted first) and
+    # whether the request's KV pages are currently swapped out to host.
+    # A preempted request is not runnable until the loop swaps it back
+    # in page-exactly; its cached shadow peek stays valid across the gap
+    # because resume restores the decode state bit-for-bit.
+    admit_seq: int = -1
+    preempted: bool = False
 
     @property
     def rid(self) -> int:
@@ -133,8 +141,15 @@ class RequestQueue:
 
     def runnable(self) -> List[RequestState]:
         """Active requests eligible for the next composed iteration, in
-        admission order (the composer's FIFO tie-break)."""
-        return [s for s in self.active if not s.done]
+        admission order (the composer's FIFO tie-break).  Preempted
+        requests hold no KV pages and sit out until resumed."""
+        return [s for s in self.active if not s.done and not s.preempted]
+
+    def preempted(self) -> List[RequestState]:
+        """Swapped-out requests awaiting resume, oldest admission
+        first (the resume order — FIFO prevents starvation)."""
+        return sorted((s for s in self.active if s.preempted),
+                      key=lambda s: s.admit_seq)
 
     @property
     def all_done(self) -> bool:

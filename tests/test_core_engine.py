@@ -85,6 +85,39 @@ def test_reload_accounting(setup):
     assert trace.reload_fraction() <= 1.0
 
 
+def test_recall_none_safe_semantics(setup):
+    """Eq. (2)/(3) pool over the layers that HAD a prediction; layers
+    without one never enter the denominator, and a decode with no
+    predictions at all reports ``None`` — never NaN, never a fake 0.0
+    — so benchmark aggregation can skip it (the den=0 poisoning fix)."""
+    from repro.core import LayerRecord, TokenRecord, Trace
+
+    def layer(pred, true, correct):
+        return LayerRecord(layer=0, moe_index=0, group=0,
+                           predicted=None if pred is None
+                           else np.asarray(pred),
+                           true=np.asarray(true), correct=correct,
+                           reloads=0, assignments=[])
+
+    t1 = TokenRecord(index=1, aligned_token=True, aligned_kv=True)
+    t1.layers = [layer([[0, 1]], [[0, 1]], 2),        # predicted: 2/2
+                 layer(None, [[2, 3]], 0)]            # predictor-less
+    t2 = TokenRecord(index=2, aligned_token=True, aligned_kv=True)
+    t2.layers = [layer(None, [[4, 5]], 0)]            # predictor-less only
+    trace = Trace(records=[t1, t2])
+    assert trace.recall() == pytest.approx(1.0)       # den counts t1 only
+    assert trace.recall_per_token() == [pytest.approx(1.0), None]
+    assert Trace().recall() is None                   # empty: None not NaN
+    # end-to-end: a predictor-less engine decode measures no recall but
+    # still reloads every routed expert after the gate
+    cfg, params, batch, _ = setup
+    eng = ODMoEEngine(cfg, params, n_workers=8, predictor="none")
+    _, tr = eng.generate(batch, 3)
+    assert tr.recall() is None
+    assert all(r is None for r in tr.recall_per_token())
+    assert tr.reload_fraction() == 1.0                # every load post-gate
+
+
 def test_memory_report_cacheless_saving(setup):
     """Cacheless total must undercut the fully-cached deployment."""
     cfg, params, batch, _ = setup

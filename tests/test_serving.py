@@ -1,5 +1,6 @@
-"""Continuous batching: bit-exactness under dynamic membership, the
-one-slot-per-worker invariant under expert-overlap composition, and
+"""Continuous batching: bit-exactness under dynamic membership (and
+under KV-pool preemption/resume), the one-slot-per-worker invariant
+under expert-overlap composition, paged-pool mechanics, and
 timing-model monotonicity in arrival rate."""
 import jax
 import jax.numpy as jnp
@@ -7,11 +8,14 @@ import numpy as np
 import pytest
 
 from conftest import tiny_moe
-from repro.core import (ODMoEEngine, concat_shadow_states,
+from repro.core import (ODMoEEngine, ServingTimings, TokenRecord, Trace,
+                        concat_shadow_states, node_memory_report,
                         slice_shadow_state)
 from repro.models import greedy_generate, init_params
-from repro.serve import (BatchComposer, Request, RequestQueue, RequestState,
-                         ServingLoop)
+from repro.models.attention import init_cache
+from repro.serve import (BatchComposer, KVPool, PoolExhausted, Request,
+                         RequestQueue, RequestState, ServeResult,
+                         ServingLoop, StepRecord, dense_cache_footprint)
 
 # real multi-request engine runs cost minutes of 1-core compute; the
 # queue/composer/round-trip units below stay in the fast tier
@@ -127,6 +131,188 @@ def test_load_events_carry_request_context(model):
     tagged = [e for e in eng.slots.events if e.requests]
     assert tagged, "decode loads must carry request context"
     assert any(len(e.requests) > 1 for e in tagged)
+
+
+# --------------------------------------------------- KV pool (paged serving)
+@slow
+def test_preempt_resume_bitexact_at_half_dense_budget(model):
+    """The acceptance scenario: pool sized to HALF the dense KV
+    footprint, burst arrivals.  The loop must finish every request via
+    preemption (youngest swapped out byte-exactly, resumed page-exactly
+    when retirements free pages), every token stream must equal the
+    solo ``greedy_generate`` run, and the per-node memory report —
+    expert slots + KV pages + in-flight packed bytes — must land under
+    the configured budget."""
+    cfg, params = model
+    rng = np.random.default_rng(1)
+    reqs = [Request(rid=i,
+                    prompt=rng.integers(0, cfg.vocab_size,
+                                        int(rng.integers(5, 12))
+                                        ).astype(np.int32),
+                    max_new_tokens=int(rng.integers(6, 10)),
+                    arrival_s=0.0)
+            for i in range(4)]
+    cache_len = max(len(r.prompt) + r.max_new_tokens for r in reqs) + 2
+    page_tokens = 4
+    window_pages = -(-cache_len // page_tokens)
+    num_pages = window_pages * len(reqs) // 2      # 1/2 dense footprint
+    pool = KVPool(cfg, num_pages=num_pages, page_tokens=page_tokens)
+    eng = ODMoEEngine(cfg, params, n_workers=8, predictor="sep",
+                      shadow_scheme="fp16")
+    res = ServingLoop(eng, max_batch=4, kv_pool=pool).run(reqs)
+    st = res.kv_stats
+    assert st["preemptions"] >= 1, "half budget must force preemption"
+    assert st["resumes"] == st["preemptions"]      # everyone came back
+    assert st["swap_in_bytes"] == st["swap_out_bytes"] > 0
+    assert len(res.outputs) == len(reqs)           # all completed
+    for r in reqs:      # including the preempted-and-resumed ones
+        assert np.array_equal(solo_reference(cfg, params, r),
+                              res.outputs[r.rid]), r.rid
+    # occupancy never exceeded the page budget
+    assert st["peak_pages_used"] <= num_pages
+    assert all(0 <= s.kv_pages_used <= num_pages for s in res.steps)
+    # timing report: total per-node memory under the configured budget
+    # (expert slot + transient packed + half the dense KV footprint)
+    dense = dense_cache_footprint(cfg, pool.window_pages * page_tokens,
+                                  len(reqs))
+    budget = (eng.store.expert_bytes + eng.slots.transient_packed_bytes()
+              + dense // 2)
+    rep = node_memory_report(eng, pool, budget_bytes=budget)
+    assert rep["within_budget"], rep
+    assert rep["kv_page_bytes"] == pool.pool_bytes()
+    assert rep["total_bytes"] < eng.store.expert_bytes + dense
+
+
+def test_kvpool_alloc_release_exhaust():
+    """Free-list allocation: ensure() grows page tables on demand,
+    raises PoolExhausted without allocating anything on shortfall, and
+    release() returns every page."""
+    cfg = CFG
+    pool = KVPool(cfg, num_pages=6, page_tokens=4)
+    assert pool.set_window(18) == 20            # rounds up to 5 pages
+    assert pool.pages_for(18) == 5
+    assert pool.ensure(1, 7) == 2               # 2 pages cover 7 slots
+    assert pool.ensure(1, 8) == 0               # still covered
+    assert pool.ensure(1, 9) == 1
+    assert pool.free_pages == 3 and pool.pages_used == 3
+    assert pool.growth_need(2, 13) == 4
+    with pytest.raises(PoolExhausted):
+        pool.ensure(2, 16)                      # needs 4, only 3 free
+    assert pool.table_pages(2) == 0             # failed ensure: no alloc
+    pool.release(1)
+    assert pool.free_pages == 6
+    assert pool.stats.allocated_pages == 3
+    assert pool.stats.released_pages == 3
+    with pytest.raises(ValueError):             # one window must fit
+        KVPool(cfg, num_pages=2, page_tokens=4).set_window(18)
+
+
+def _filled_dense_cache(cfg, window, n_slots, seed=0):
+    rng = np.random.default_rng(seed)
+    dense = init_cache(cfg, 1, window, jnp.dtype(cfg.dtype))
+    k = np.asarray(dense["k"]).copy()
+    v = np.asarray(dense["v"]).copy()
+    pos = np.asarray(dense["pos"]).copy()
+    k[:, :n_slots] = rng.normal(size=k[:, :n_slots].shape)
+    v[:, :n_slots] = rng.normal(size=v[:, :n_slots].shape)
+    pos[:, :n_slots] = np.arange(n_slots)
+    return {"k": jnp.asarray(k), "v": jnp.asarray(v),
+            "pos": jnp.asarray(pos)}
+
+
+def test_kvpool_gather_scatter_roundtrip_bitexact():
+    """The paged view IS the dense buffer: scatter a prefilled dense
+    cache into pages, gather it back bit-identically (null-page tail
+    included), and survive a swap-out/swap-in byte-exactly."""
+    cfg = CFG
+    pool = KVPool(cfg, num_pages=8, page_tokens=4)
+    window = pool.set_window(14)                # 4 pages -> 16 slots
+    li = pool.attn_layers[0]
+    dense = _filled_dense_cache(cfg, window, n_slots=9)
+    pool.ensure(7, 9)                           # 3 pages
+    pool.scatter_layer(li, [7], dense)
+    back = pool.gather_layer(li, [7])
+    for name in ("k", "v", "pos"):
+        assert np.array_equal(np.asarray(back[name]),
+                              np.asarray(dense[name])), name
+    # swap out: pages freed, contents preserved on host
+    nbytes = pool.swap_out(7)
+    assert nbytes == 3 * pool.page_set_bytes
+    assert pool.free_pages == 8 and pool.table_pages(7) == 0
+    assert pool.swapped_pages(7) == 3
+    # interleave another request so resume lands on different pages
+    other = _filled_dense_cache(cfg, window, n_slots=5, seed=1)
+    pool.ensure(2, 5)
+    pool.scatter_layer(li, [2], other)
+    assert pool.swap_in(7) == nbytes            # page-exact resume
+    back2 = pool.gather_layer(li, [7])
+    for name in ("k", "v", "pos"):
+        assert np.array_equal(np.asarray(back2[name]),
+                              np.asarray(dense[name])), name
+    # batch gather rows == the members' solo gathers
+    both = pool.gather_layer(li, [2, 7])
+    for name in ("k", "v", "pos"):
+        assert np.array_equal(np.asarray(both[name][0]),
+                              np.asarray(pool.gather_layer(li, [2])[name][0]))
+        assert np.array_equal(np.asarray(both[name][1]),
+                              np.asarray(back2[name][0]))
+    assert pool.stats.preemptions == 1 and pool.stats.resumes == 1
+
+
+def test_composer_kv_budget_aware():
+    """With a pool the composer never picks a batch whose collective
+    page growth exceeds the free list (the seed is exempt — preemption
+    guarantees the head of the line)."""
+    pool = KVPool(CFG, num_pages=7, page_tokens=4)
+    pool.set_window(16)
+
+    def fake(rid, covered_slots, next_slot, seq):
+        s = RequestState(request=Request(rid=rid, prompt=np.arange(4),
+                                         max_new_tokens=4),
+                         token=None, cache_list=[],
+                         pos=np.array([next_slot]))
+        s.admit_seq = seq
+        pool.ensure(rid, covered_slots)
+        return s
+
+    a = fake(0, 8, 8, 0)        # 2 pages held, next slot needs a 3rd
+    b = fake(1, 8, 8, 1)        # ditto
+    c = fake(2, 8, 7, 2)        # next slot still covered (growth 0)
+    assert pool.free_pages == 1
+    for policy in ("fifo", "overlap"):
+        chosen = BatchComposer(max_batch=3, policy=policy,
+                               kv_pool=pool).compose([a, b, c])
+        # a rides as seed (growth 1); b would overdraw (skip); c is free
+        assert [s.rid for s in chosen] == [0, 2], policy
+    # free list empty, seed over budget: the seed still rides (the loop
+    # preempts to page it) and must NOT lock zero-growth candidates out
+    pool.ensure(3, 4)
+    assert pool.free_pages == 0
+    chosen = BatchComposer(max_batch=3, kv_pool=pool).compose([a, b, c])
+    assert [s.rid for s in chosen] == [0, 2]
+    # without a pool the same runnable set composes unrestricted
+    assert len(BatchComposer(max_batch=3).compose([a, b, c])) == 3
+
+
+def test_serve_result_degraded_report_all_healthy():
+    """ServeResult.degraded_report() on an all-healthy run is explicit
+    and finite: no degraded steps, 0.0 bucket mean, ratio 1.0."""
+    steps = [StepRecord(step=i, request_ids=[0],
+                        record=TokenRecord(index=i, aligned_token=False,
+                                           aligned_kv=False),
+                        start_s=0.0, duration_s=0.1, stall_s=0.0,
+                        alive_workers=8)
+             for i in range(3)]
+    res = ServeResult(outputs={}, timings=ServingTimings([], [], [], []),
+                      trace=Trace(), steps=steps, n_workers=8)
+    rep = res.degraded_report()
+    assert rep["healthy_only"] is True
+    assert rep["degraded_steps"] == 0
+    assert rep["tpot_degraded_s"] == 0.0
+    assert rep["degradation_x"] == 1.0
+    assert rep["tpot_s"] == pytest.approx(0.1)
+    assert all(np.isfinite(v) for v in rep.values()
+               if isinstance(v, float))
 
 
 # ------------------------------------------------------------ timing model

@@ -3,7 +3,8 @@ import numpy as np
 import pytest
 
 from repro.configs import get_config
-from repro.core import (RTX3090_EDGE, GroupSchedule, simulate_cached,
+from repro.core import (RTX3090_EDGE, DecodeClock, GroupSchedule,
+                        degraded_tpot_report, simulate_cached,
                         simulate_cpu, simulate_odmoe, simulate_offload_cache,
                         simulate_prefill_cached, simulate_prefill_odmoe,
                         synthetic_trace)
@@ -105,3 +106,39 @@ def test_minibatch_pipelining_helps():
     t1 = simulate_prefill_odmoe(CFG, PROF, 512, n_minibatches=1)
     t4 = simulate_prefill_odmoe(CFG, PROF, 512, n_minibatches=4)
     assert t4 <= t1
+
+
+def test_degraded_report_healthy_only_explicit():
+    """An all-healthy run is a first-class case: finite everywhere,
+    empty degraded bucket reports 0.0, degradation_x is 1.0 (no NaN to
+    poison downstream JSON/means)."""
+    rep = degraded_tpot_report([0.1, 0.2], [8, 8], 8)
+    assert rep["healthy_only"] is True
+    assert rep["degraded_steps"] == 0
+    assert rep["tpot_degraded_s"] == 0.0
+    assert rep["degradation_x"] == 1.0
+    assert rep["tpot_s"] == pytest.approx(0.15)
+    assert all(np.isfinite(v) for v in rep.values()
+               if isinstance(v, float))
+    # zero steps is also well-defined
+    rep0 = degraded_tpot_report([], [], 8)
+    assert rep0["steps"] == 0 and rep0["degradation_x"] == 1.0
+    assert rep0["healthy_only"] is True
+    # a genuinely degraded run still reports the ratio
+    rep2 = degraded_tpot_report([0.1, 0.3], [8, 7], 8)
+    assert rep2["healthy_only"] is False
+    assert rep2["degradation_x"] == pytest.approx(3.0)
+    assert rep2["tpot_degraded_s"] == pytest.approx(0.3)
+
+
+def test_charge_kv_swap_prices_host_link_and_serializes():
+    """KV page preemption/resume transfers ride the host (PCIe-class)
+    link and serialize on the main-node clock."""
+    clock = DecodeClock(CFG, SCHED, PROF)
+    t0 = clock.now
+    nbytes = 1.0e6
+    dt = clock.charge_kv_swap(nbytes)
+    assert dt == pytest.approx(nbytes / (PROF.pcie_gbps * 1e9))
+    assert clock.now == pytest.approx(t0 + dt)
+    # zero bytes (preempting a request with no pages) costs nothing
+    assert clock.charge_kv_swap(0) == 0.0

@@ -138,6 +138,37 @@ def test_bytes_moved_pinned():
     assert s32.events[0].scheme == "fp32"
 
 
+def test_device_bytes_counts_transient_packed():
+    """Peak worker memory during dequantize-on-arrival holds BOTH the
+    in-flight packed buffer and the full-width slot — pinned against
+    ``ExpertStore.packed_bytes`` per scheme.  fp32 transport aliases the
+    arriving buffer (no double-buffering), so it keeps the historical
+    slots-only value."""
+    params, _ = _model()
+    for scheme in SCHEMES:
+        store = ExpertStore(CFG, params, policy=scheme)
+        slots = WorkerSlots(store, 4, physical=False)
+        packed_max = max(
+            store.packed_bytes(li, e) for li in store.moe_layers
+            for e in range(CFG.num_experts))
+        if scheme == "fp32":
+            assert slots.transient_packed_bytes() == 0
+            assert slots.device_bytes_per_worker() == store.expert_bytes
+        else:
+            assert slots.transient_packed_bytes() == packed_max
+            assert slots.device_bytes_per_worker() == \
+                store.expert_bytes + packed_max, scheme
+    # a mixed policy's peak transient counts only sub-fp32 arrivals
+    moe_layers = [i for i, (_, ff) in enumerate(CFG.layer_kinds())
+                  if ff == "moe"]
+    tiered = TieredPolicy({(li, 0) for li in moe_layers},
+                          high="fp32", low="int8")
+    store_t = ExpertStore(CFG, params, policy=tiered)
+    slots_t = WorkerSlots(store_t, 4, physical=False)
+    li0 = store_t.moe_layers[0]
+    assert slots_t.transient_packed_bytes() == store_t.packed_bytes(li0, 0)
+
+
 # --------------------------------------------------------- timing scaling
 def test_t_load_scales_exactly_with_packed_bytes():
     """Per-link t_load under a codec == fp32 t_load x packed-byte
