@@ -14,10 +14,11 @@ import time
 
 import jax
 
-from . import (fig3_recall, fig6_periods_recall, fig7_prefill,
-               fig8_ablation, fig9_periods_speed, fleet_degradation,
-               kv_occupancy, roofline, serving_throughput,
-               table1_predictors, table2_speed, transport_precision)
+from . import (decode_wallclock, fig3_recall, fig6_periods_recall,
+               fig7_prefill, fig8_ablation, fig9_periods_speed,
+               fleet_degradation, kv_occupancy, roofline,
+               serving_throughput, table1_predictors, table2_speed,
+               transport_precision)
 
 MODULES = {
     "fig3": fig3_recall,
@@ -32,6 +33,7 @@ MODULES = {
     "fleet": fleet_degradation,
     "transport": transport_precision,
     "kv_occupancy": kv_occupancy,
+    "decode_wallclock": decode_wallclock,
 }
 
 

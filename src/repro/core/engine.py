@@ -26,13 +26,20 @@ the returned ``Trace``.
 Correctness invariant (tested): greedy tokens produced by the engine are
 bit-identical to the reference ``greedy_generate`` on the same weights,
 because expert compute consumes the physically-loaded slot contents and
-mispredicted experts are always reloaded before use.  Composed batches
-preserve it per-request: expert contributions accumulate in the same
-(row, top-k rank) order regardless of which wave physically computed
-them, so batch membership never changes a request's arithmetic.
+mispredicted experts are always reloaded before use.  The invariant
+holds *by construction*: each wave's expert FFNs run as ONE jitted
+grouped call (``repro.kernels.moe_gemm.grouped_topk_contrib`` on the
+wave's slot-gathered weight stack) and per-(row, rank) contributions
+reduce through the shared fixed-order ``combine_topk`` — the exact
+functions the reference ``grouped`` dispatch uses — so engine and
+reference consume identical arithmetic.  Composed batches preserve it
+per-request: a contribution's value is independent of which wave (or
+which batch neighbours) rode along in the grouped call, so batch
+membership never changes a request's arithmetic.
 """
 from __future__ import annotations
 
+import functools
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Tuple
 
@@ -40,12 +47,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.kernels.moe_gemm import combine_topk, grouped_topk_contrib
 from repro.models import prefill
 from repro.models.blocks import block_decode
 from repro.models.config import MOE_FF, NO_FF, ModelConfig
 from repro.models.layers import apply_norm, embed
 from repro.models.moe import route
 from repro.models.transformer import layer_params, logits_from_hidden
+from repro.quant.quantize import shadow_nbytes
 from repro.quant.transport import resolve_policy, transport_params
 
 from .align import AlignmentPolicy
@@ -118,6 +127,48 @@ class Trace:
         return reloads / loads if loads else 0.0
 
 
+# ---------------------------------------------------- jitted step pieces
+# The decode hot path is jit-compiled per (config, layer-kind): one
+# dispatch per layer instead of one per primitive.  Factories are
+# module-level and lru-cached on the frozen ``ModelConfig``, so every
+# engine over the same architecture shares one compiled executable per
+# shape — constructing engines stays cheap and the test suite compiles
+# each step once, not once per engine.  Parameters enter as pytree
+# arguments (never closures), so transport-round-tripped and shadow
+# weight sets reuse the same executables too.
+_embed_token = jax.jit(lambda p, t: embed(t[:, None], p["embed"]))
+
+
+@functools.lru_cache(maxsize=None)
+def _block_step(cfg: ModelConfig, kinds) -> object:
+    """Jitted non-MoE block decode (mixer + dense/no FFN)."""
+    def fn(lp, x, cache, pos):
+        return block_decode(cfg, lp, kinds, x, cache, pos)
+    return jax.jit(fn)
+
+
+@functools.lru_cache(maxsize=None)
+def _mixer_router_step(cfg: ModelConfig, kinds) -> object:
+    """Jitted MoE-layer prefix: mixer + residual (no FFN), post-norm
+    router input, and the top-k routing decision — everything between
+    the previous layer and the expert waves, fused into one dispatch.
+    The expert FFNs themselves run from worker slots (see
+    ``_serve_and_compute``); only the gate lives on the main node."""
+    def fn(lp, x, cache, pos):
+        x, cache, _ = block_decode(cfg, lp, (kinds[0], NO_FF), x, cache,
+                                   pos)
+        h = apply_norm(cfg, x, lp["norm2"])[:, 0]          # router input
+        topk_idx, topk_gate, _ = route(cfg, lp["ff"], h)
+        return x, cache, h, topk_idx, topk_gate
+    return jax.jit(fn)
+
+
+@functools.lru_cache(maxsize=None)
+def _logits_argmax(cfg: ModelConfig) -> object:
+    return jax.jit(lambda p, x: jnp.argmax(
+        logits_from_hidden(cfg, p, x)[:, 0], axis=-1).astype(jnp.int32))
+
+
 # ------------------------------------------------------- batch membership
 def concat_cache_lists(cache_lists: Sequence) -> object:
     """Join per-request per-layer caches along the batch axis.
@@ -152,10 +203,17 @@ class ODMoEEngine:
                  group_size: int = 0, predictor: str = "sep",
                  shadow_scheme: str = "int8", lookahead: int = 4,
                  physical_loading: bool = True, seed: int = 0,
-                 profiles=None, faults=None, transport=None):
+                 profiles=None, faults=None, transport=None,
+                 wave_compute: str = "grouped"):
         if cfg.is_encoder_decoder:
             raise ValueError("engine drives decoder-only models")
+        if wave_compute not in ("grouped", "loop"):
+            raise ValueError("wave_compute must be 'grouped' or 'loop'")
         self.cfg = cfg
+        # ``wave_compute='loop'`` keeps the retired per-(row, rank)
+        # Python loop as the benchmark baseline and property-test
+        # oracle; production decode runs the jit-grouped path.
+        self.wave_compute = wave_compute
         # ``transport`` (PrecisionPolicy / scheme name / None=fp32) fixes
         # each expert's on-demand wire precision.  The engine computes
         # with ``transport_params`` — the same round-tripped weights a
@@ -194,6 +252,10 @@ class ODMoEEngine:
                                  physical=physical_loading,
                                  profiles=getattr(self.sched, "profiles",
                                                   None))
+        # per-layer parameter views sliced once (params never mutate);
+        # the decode loop re-slicing them every token was pure overhead
+        self._layer_params = [layer_params(cfg, self.params, li)
+                              for li in range(cfg.num_layers)]
         self.predictor_kind = predictor
         self.shadow: Optional[SEPShadow] = None
         self.fly: Optional[GateExtrapolator] = None
@@ -248,7 +310,7 @@ class ODMoEEngine:
         control) and supplies the request id the page table is keyed by.
         """
         logits, state = prefill(self.cfg, self.params, batch, max_cache_len,
-                                moe_method="dense")
+                                moe_method="grouped")
         token = jnp.argmax(logits, axis=-1).astype(jnp.int32)
         cache_list = self._unstack(state["caches"])
         if kv_pool is not None:
@@ -309,7 +371,83 @@ class ODMoEEngine:
         computes, layer-scoped ones inside ``_serve_and_compute`` (the
         stranded-predicted-load window).  A worker death costs at most
         the reloads for what it held — never the tokens.
+
+        Every main-node segment between expert waves runs as one jitted
+        dispatch (``_block_step`` / ``_mixer_router_step`` /
+        ``_logits_argmax``); only scheduling, loading and the trace
+        stay in Python.  ``wave_compute='loop'`` instead replays the
+        retired pre-refactor path — eager per-primitive blocks plus the
+        per-(row, rank) expert loop — as the wall-clock baseline,
+        producing bit-identical tokens by the shared-arithmetic
+        contract.
         """
+        if self.wave_compute == "loop":
+            return self._decode_batch_loop(token, cache_list, pos, preds,
+                                           step_idx, rec)
+        cfg = self.cfg
+        if self.faults is not None:
+            self.faults.apply(step_idx, self.sched.state, self.slots)
+        x = _embed_token(self.params, token)
+        pending: Dict[int, np.ndarray] = dict(preds)
+        moe_i = -1
+        for li, kinds in enumerate(cfg.layer_kinds()):
+            lp = self._layer_params[li]
+            if kinds[1] != MOE_FF:
+                x, cache_list[li], _ = _block_step(cfg, kinds)(
+                    lp, x, cache_list[li], pos)
+                continue
+            moe_i += 1
+            # mixer + residual + router input + gate, one jitted dispatch
+            x, cache_list[li], h, topk_idx, topk_gate = _mixer_router_step(
+                cfg, kinds)(lp, x, cache_list[li], pos)
+            true = np.asarray(topk_idx)
+            x = self._moe_bookkeeping(step_idx, li, moe_i, pending, true,
+                                      h, topk_gate, x, rec)
+        return (_logits_argmax(cfg)(self.params, x), cache_list, pos + 1)
+
+    def _moe_bookkeeping(self, step_idx, li, moe_i, pending, true, h,
+                         topk_gate, x, rec: TokenRecord):
+        """Everything around one MoE layer's expert waves, shared by the
+        production and the retired decode paths: on-the-fly predictors,
+        serve + compute, trace recording and the cacheless eviction
+        rule."""
+        b = true.shape[0]
+        # on-the-fly predictors key off the router input
+        if self.fly is not None:
+            for tgt, p in self.fly.predict_from(li, h).items():
+                pending[tgt] = p
+        if self.freq is not None:
+            pending[li] = self.freq.predict(li, b)
+        if self.rand is not None:
+            pending[li] = self.rand.predict(li, b)
+        pred = pending.get(li)
+        lr, y = self._serve_and_compute(
+            step_idx, li, moe_i, pred, true, h, np.asarray(topk_gate))
+        rec.layers.append(lr)
+        if self.freq is not None:
+            self.freq.observe(li, true)
+        x = x + y[:, None].astype(x.dtype)
+        # prompt eviction — cacheless rule.  Every worker that took a
+        # load this layer (predicted or reload, group or spill) drops
+        # its experts, so a mispredicted never-used resident cannot
+        # linger to fake a later hit.
+        used = set(lr.touched)
+        used.update(w for _, w in lr.assignments)
+        used.update(self.sched.workers_of_group(lr.group))
+        for w in sorted(used):
+            self.slots.evict(w)
+        return x
+
+    # ------------------------------------------- retired loop baseline
+    def _decode_batch_loop(self, token, cache_list, pos, preds, step_idx,
+                           rec: TokenRecord):
+        """The pre-refactor decode step, kept verbatim as the
+        ``wave_compute='loop'`` baseline: per-primitive eager block
+        compute, per-step parameter re-slicing, and the per-(row, rank)
+        Python expert loop (``_compute_wave_loop``).  The wall-clock
+        benchmark measures the grouped path against this; the property
+        suite pins both token-bit-identical.  Never used in production
+        decode."""
         cfg = self.cfg
         if self.faults is not None:
             self.faults.apply(step_idx, self.sched.state, self.slots)
@@ -329,31 +467,8 @@ class ODMoEEngine:
             h = apply_norm(cfg, x, lp["norm2"])[:, 0]          # router input
             topk_idx, topk_gate, _ = route(cfg, lp["ff"], h)
             true = np.asarray(topk_idx)
-            b = true.shape[0]
-            # on-the-fly predictors key off the router input
-            if self.fly is not None:
-                for tgt, p in self.fly.predict_from(li, h).items():
-                    pending[tgt] = p
-            if self.freq is not None:
-                pending[li] = self.freq.predict(li, b)
-            if self.rand is not None:
-                pending[li] = self.rand.predict(li, b)
-            pred = pending.get(li)
-            lr, y = self._serve_and_compute(
-                step_idx, li, moe_i, pred, true, h, np.asarray(topk_gate))
-            rec.layers.append(lr)
-            if self.freq is not None:
-                self.freq.observe(li, true)
-            x = x + y[:, None].astype(x.dtype)
-            # prompt eviction — cacheless rule.  Every worker that took a
-            # load this layer (predicted or reload, group or spill) drops
-            # its experts, so a mispredicted never-used resident cannot
-            # linger to fake a later hit.
-            used = set(lr.touched)
-            used.update(w for _, w in lr.assignments)
-            used.update(self.sched.workers_of_group(lr.group))
-            for w in sorted(used):
-                self.slots.evict(w)
+            x = self._moe_bookkeeping(step_idx, li, moe_i, pending, true,
+                                      h, topk_gate, x, rec)
         logits = logits_from_hidden(cfg, self.params, x)[:, 0]
         return (jnp.argmax(logits, axis=-1).astype(jnp.int32), cache_list,
                 pos + 1)
@@ -367,9 +482,13 @@ class ODMoEEngine:
         workers; later waves overwrite earlier slots, which the timing
         model sees as serialized loads on busy workers).
 
-        Expert contributions are accumulated per row in top-k rank
-        order, independent of wave membership, so a request's output is
-        bit-identical however the batch was composed.
+        Each wave is ONE jitted grouped-FFN call on the wave's
+        slot-gathered weight stack; per-(row, rank) contributions land
+        in a ``(B, k, d)`` buffer and reduce through the shared
+        fixed-rank-order ``combine_topk``, independent of wave
+        membership, so a request's output is bit-identical however the
+        batch was composed — and identical to the reference ``grouped``
+        dispatch, which calls the same primitives.
         """
         group = self.sched.group_of(moe_i)
         touched: set = set()
@@ -396,7 +515,8 @@ class ODMoEEngine:
         reloads = 0
         assignments: List[Tuple[int, int]] = []
         waves: List[List[Tuple[int, int]]] = []
-        contrib: Dict[Tuple[int, int], jax.Array] = {}
+        contrib = None                     # grouped: (B, k, d) fp32
+        loop_contrib: Dict[Tuple[int, int], jax.Array] = {}
         remaining = needed
         while remaining:
             # workers already serving a *correct* prediction are claimed;
@@ -425,16 +545,24 @@ class ODMoEEngine:
                 touched.add(w)
                 reloads += 1
                 wave[e] = w
-            self._compute_wave(layer, h, true, gates, wave, contrib)
+            if self.wave_compute == "loop":
+                self._compute_wave_loop(layer, h, true, gates, wave,
+                                        loop_contrib)
+            else:
+                contrib = self._compute_wave(layer, h, true, gates, wave,
+                                             contrib)
             done = [(e, wave[e]) for e in remaining if e in wave]
             assignments.extend(done)
             waves.append(done)
             remaining = [e for e in remaining if e not in wave]
         # deterministic accumulation: (row, rank) order, wave-independent
-        y = jnp.zeros((true.shape[0], h.shape[1]), jnp.float32)
-        for bi in range(true.shape[0]):
-            for j in range(true.shape[1]):
-                y = y.at[bi].add(contrib[(bi, j)])
+        if self.wave_compute == "loop":
+            y = jnp.zeros((true.shape[0], h.shape[1]), jnp.float32)
+            for bi in range(true.shape[0]):
+                for j in range(true.shape[1]):
+                    y = y.at[bi].add(loop_contrib[(bi, j)])
+        else:
+            y = combine_topk(contrib)
         correct = recall_counts(pred, true) if pred is not None else 0
         lr = LayerRecord(layer=layer, moe_index=moe_i, group=group,
                          predicted=pred, true=true, correct=correct,
@@ -445,8 +573,28 @@ class ODMoEEngine:
 
     def _compute_wave(self, layer, h, true, gates, wave: Dict[int, int],
                       contrib):
-        """Expert FFNs for the (row, rank) pairs routed to this wave's
-        experts, consuming the physically-loaded slot weights."""
+        """One jitted grouped-FFN call for this wave: gather the wave's
+        resident slot weights as a stacked ``(E_wave, d, f)`` tensor,
+        map every (row, rank) pair routed to a wave expert onto the
+        stacked axis, and add the gate-weighted contributions into the
+        ``(B, k, d)`` accumulator (masked pairs contribute exact
+        zeros, so cross-wave accumulation is order-free)."""
+        experts, stacked = self.slots.gather_stack(layer, wave)
+        eid = np.asarray(experts)
+        match = true[..., None] == eid                       # (B, k, E_wave)
+        slot_map = np.where(match.any(-1), match.argmax(-1),
+                            -1).astype(np.int32)
+        wc = grouped_topk_contrib(h, stacked["w_gate"], stacked["w_up"],
+                                  stacked["w_down"], jnp.asarray(slot_map),
+                                  jnp.asarray(gates))
+        return wc if contrib is None else contrib + wc
+
+    def _compute_wave_loop(self, layer, h, true, gates,
+                           wave: Dict[int, int], contrib):
+        """The retired per-(row, rank) Python loop — kept verbatim as
+        the ``wave_compute='loop'`` baseline the wall-clock benchmark
+        measures against and the property suite pins the grouped path
+        bit-identical to.  Not used by production decode."""
         for bi in range(true.shape[0]):
             hb = h[bi].astype(jnp.float32)
             for j in range(true.shape[1]):
@@ -471,9 +619,11 @@ class ODMoEEngine:
         main = total - expert_total
         shadow = 0
         if self.shadow is not None:
-            factor = {"fp16": 0.5, "int8": 0.25, "nf4": 0.125}.get(
-                self.shadow.scheme, 1.0)
-            shadow = int(total * factor)
+            # exact deployed footprint of the shadow's parameter tree:
+            # quantized leaves at packed size (codes + scales), the
+            # leaves that stay full width (norms, small vectors) at
+            # their real nbytes — not a flat fraction of the model
+            shadow = shadow_nbytes(self.shadow.params, self.shadow.scheme)
         # peak, not steady-state: while a non-fp32 shard dequantizes on
         # arrival the packed wire buffer and the full-width slot are
         # both live on the worker (see WorkerSlots.transient_packed_bytes)

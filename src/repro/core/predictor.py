@@ -16,6 +16,7 @@ Recall is Eq. (2)/(3): correctly predicted experts / (k · L · tokens).
 """
 from __future__ import annotations
 
+import functools
 from collections import defaultdict
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence
@@ -24,9 +25,24 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.models import decode_step, prefill
+from repro.models import prefill
 from repro.models.config import MOE_FF, ModelConfig
 from repro.quant import shadow_params
+
+
+@functools.lru_cache(maxsize=None)
+def _shadow_step(cfg: ModelConfig):
+    """One jitted whole-model shadow decode step per architecture.
+
+    Cached on the frozen config (params enter as a pytree argument), so
+    every ``SEPShadow`` over the same architecture — whatever its
+    quantization scheme, and however many engines the caller builds —
+    shares one compiled executable per batch shape.  The expert FFNs
+    inside run the same ``grouped`` dispatch as the engine and the
+    reference decoder."""
+    from repro.models.transformer import lm_decode
+    return jax.jit(lambda p, t, c, pos: lm_decode(
+        cfg, p, t, c, pos, moe_method="grouped"))
 
 
 def moe_layer_indices(cfg: ModelConfig) -> List[int]:
@@ -80,25 +96,27 @@ class SEPShadow:
         self.params = shadow_params(params, scheme)
         self.state = None
         self.token = None
-        self._decode = jax.jit(
-            lambda p, t, s: decode_step(cfg, p, t, s, moe_method="dense"))
+        # the whole shadow decode step — grouped expert FFNs included —
+        # compiles to ONE dispatch, shared across shadows of the same
+        # architecture; the serving loop leans on this when it peeks
+        # every runnable request's shadow as a single composed batch
+        # (see ServingLoop._ensure_peeks)
+        self._step = _shadow_step(cfg)
 
     # ------------------------------------------------------- functional
     def prefill_state(self, batch, max_cache_len: int) -> dict:
         """Prefill a fresh shadow state for one request (or batch)."""
         logits, state = prefill(self.cfg, self.params, batch,
-                                max_cache_len, moe_method="dense")
+                                max_cache_len, moe_method="grouped")
         token = jnp.argmax(logits, axis=-1).astype(jnp.int32)
         return dict(state, token=token)
 
     def step_state(self, state: dict, token):
-        """Pure one-step shadow decode: consume ``token`` against
-        ``state``; return ``({layer: predicted (B,k)}, new_state)``
-        without touching the stateful shadow."""
-        from repro.models.transformer import lm_decode
-        logits, caches, aux = lm_decode(
-            self.cfg, self.params, token, state["caches"],
-            state["pos"], moe_method="dense")
+        """Pure one-step shadow decode (one jitted dispatch): consume
+        ``token`` against ``state``; return ``({layer: predicted
+        (B,k)}, new_state)`` without touching the stateful shadow."""
+        logits, caches, aux = self._step(self.params, token,
+                                         state["caches"], state["pos"])
         new = dict(state, caches=caches, pos=state["pos"] + 1,
                    token=jnp.argmax(logits, axis=-1).astype(jnp.int32))
         return topk_to_layer_dict(self.cfg, aux["topk"]), new
@@ -130,10 +148,11 @@ class SEPShadow:
         self.token = main_token
 
     def align_kv(self, main_state):
-        """Overwrite the shadow KV/SSM caches with the main model's."""
-        self.state = dict(self.state,
-                          caches=jax.tree.map(lambda a: a, main_state["caches"]),
-                          pos=main_state["pos"])
+        """Overwrite the shadow KV/SSM caches with the main model's —
+        the stateful spelling of :meth:`align_kv_state` (one shared
+        implementation; jax arrays are immutable, so adopting the main
+        model's cache pytree needs no defensive copy)."""
+        self.state = self.align_kv_state(self.state, main_state)
 
 
 def concat_shadow_states(states: Sequence[dict]) -> dict:
@@ -144,10 +163,12 @@ def concat_shadow_states(states: Sequence[dict]) -> dict:
     must share the same cache length (the serving loop allocates every
     request with a common ``max_cache_len``).
 
-    Utility for batching shadow decode across requests; the serving
-    loop currently steps each request's shadow individually (peeks must
-    be cacheable per request), so production code does not yet call
-    this — see tests/test_serving.py for the round-trip contract.
+    This is how the serving loop batches shadow decode across requests:
+    every runnable request needing a peek is aligned per-request first,
+    composed here, stepped as ONE ``lm_decode`` dispatch, and sliced
+    back with :func:`slice_shadow_state` (peeks stay cacheable per
+    request) — see ``ServingLoop._ensure_peeks`` and
+    tests/test_serving.py for the round-trip contract.
     """
     if len(states) == 1:
         return states[0]

@@ -39,6 +39,7 @@ from dataclasses import dataclass
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.models.config import MOE_FF, ModelConfig
@@ -116,12 +117,13 @@ class ExpertStore:
             # bookkeeping-only fp32 loads alias the host copies outright
             # (the pre-codec zero-cost path)
             return self._host[(layer, expert)]
-        out = {}
-        for name, pw in self._packed[(layer, expert)].items():
-            parts = (tuple(jax.device_put(p) for p in pw.parts)
-                     if device else None)
-            out[name] = codec.unpack(pw, parts)
-        return out
+        packed = self._packed[(layer, expert)]
+        # one batched transfer for the whole shard (all three weights'
+        # packed parts), not one dispatch per part — the per-expert
+        # payload is the modeled link unit anyway
+        parts = (jax.device_put({n: pw.parts for n, pw in packed.items()})
+                 if device else {n: None for n in packed})
+        return {n: codec.unpack(pw, parts[n]) for n, pw in packed.items()}
 
     def router_weights(self, params):
         """Routers live on the main node (non-expert parameters)."""
@@ -217,6 +219,22 @@ class WorkerSlots:
         data = self._slot_data[worker].get((layer, expert))
         assert data is not None, "expert must be resident"
         return data
+
+    def gather_stack(self, layer: int,
+                     wave: Dict[int, int]) -> Tuple[List[int], Dict]:
+        """Materialize one wave's resident expert weights as stacked
+        arrays for the grouped FFN kernel: ``wave`` maps expert ->
+        serving worker; returns ``(experts, {w_gate/w_up: (E_wave, d,
+        f), w_down: (E_wave, f, d)})`` with the expert order fixed
+        (ascending id) so the stacked axis is deterministic.  Gathers
+        through :meth:`slot`, which asserts each expert is *physically
+        resident* on its assigned worker — the grouped hot path still
+        consumes genuine slot contents, never the host store."""
+        experts = sorted(wave)
+        shards = [self.slot(wave[e], layer, e) for e in experts]
+        stacked = {name: jnp.stack([s[name] for s in shards])
+                   for name in EXPERT_WEIGHT_NAMES}
+        return experts, stacked
 
     def worker_with(self, layer: int, expert: int) -> Optional[int]:
         key = (layer, expert)

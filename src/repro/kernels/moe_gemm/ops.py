@@ -1,8 +1,20 @@
-"""jit'd public wrapper: kernel on TPU, interpret-mode kernel or oracle
-fallback on CPU."""
+"""jit'd public wrappers for the grouped expert FFN.
+
+``moe_ffn`` is the raw (E, C, D) -> (E, C, D) grouped GEMM: kernel on
+TPU, interpret-mode kernel or oracle fallback on CPU.
+
+``grouped_topk_contrib`` / ``combine_topk`` are the system's ONE
+expert-FFN hot path: every decode-time consumer — the OD-MoE engine's
+wave compute, the reference ``greedy_generate`` dispatch
+(``models/moe.py::moe_grouped``) and the SEP shadow — routes its
+routed-expert arithmetic through these two jitted functions, so
+engine ≡ reference holds because both consume *identical* arithmetic,
+not by accident of Python loop order.
+"""
 from __future__ import annotations
 
 import jax
+import jax.numpy as jnp
 
 from .kernel import moe_ffn_kernel
 from .ref import moe_ffn_ref
@@ -22,3 +34,79 @@ def moe_ffn(xd, w_gate, w_up, w_down, *, block_c: int = 128,
         return moe_ffn_ref(xd, w_gate, w_up, w_down)
     return moe_ffn_kernel(xd, w_gate, w_up, w_down, block_c=block_c,
                           block_f=block_f, interpret=interpret)
+
+
+# ------------------------------------------------- top-k decode hot path
+@jax.jit
+def _grouped_contrib(h, w_gate, w_up, w_down, slot, gates):
+    """Traced body of :func:`grouped_topk_contrib` (shapes pre-padded)."""
+    x32 = h.astype(jnp.float32)
+    n = x32.shape[0]
+    xd = jnp.broadcast_to(x32[None], (w_gate.shape[0],) + x32.shape)
+    y = moe_ffn(xd, w_gate, w_up, w_down)            # (Es, N, d) fp32
+    valid = slot >= 0
+    safe = jnp.where(valid, slot, 0)
+    rows = jnp.arange(n)[:, None]                    # (N, 1)
+    picked = y[safe, rows]                           # (N, k, d)
+    return jnp.where(valid[..., None],
+                     gates.astype(jnp.float32)[..., None] * picked, 0.0)
+
+
+def _pow2(n: int) -> int:
+    p = 1
+    while p < n:
+        p *= 2
+    return p
+
+
+def grouped_topk_contrib(h, w_gate, w_up, w_down, slot, gates):
+    """Gate-weighted expert-FFN contributions for a routed top-k batch.
+
+    ``h``: (N, d) rows; ``w_gate``/``w_up``: (Es, d, f) and ``w_down``:
+    (Es, f, d) stacked expert weights; ``slot``: (N, k) int32 index of
+    each (row, rank) pair's expert in the stacked axis, ``-1`` when that
+    pair's expert is not part of this call (e.g. it computes in a later
+    engine wave); ``gates``: (N, k) gate weights.  Returns (N, k, d)
+    fp32 contributions — zeros at masked pairs — whose per-pair values
+    are independent of which other experts/rows rode along (each row of
+    each expert's GEMM is its own dot product), so wave partitioning can
+    never change a request's arithmetic.
+
+    Cost note: the grouped GEMM computes every stacked expert over
+    every row and the top-k sparsity is applied by the *gather* — the
+    deliberate trade that buys batching-independent bits and one fused
+    dispatch.  Callers control the FLOPs by what they stack: the engine
+    stacks only a wave's routed, slot-resident experts; the reference
+    dispatch stacks all ``E`` (dense-equivalent FLOPs, as before).
+
+    The row and stacked-expert axes are padded to power-of-two buckets
+    before the jitted body so decode sees a handful of compiled shapes
+    instead of one per (batch, wave) combination.
+    """
+    n, k = slot.shape
+    es = w_gate.shape[0]
+    np_, ep = _pow2(max(n, 1)), _pow2(max(es, 1))
+    if np_ != n:
+        h = jnp.pad(h, ((0, np_ - n), (0, 0)))
+        slot = jnp.pad(slot, ((0, np_ - n), (0, 0)), constant_values=-1)
+        gates = jnp.pad(gates, ((0, np_ - n), (0, 0)))
+    if ep != es:
+        pad = ((0, ep - es), (0, 0), (0, 0))
+        w_gate = jnp.pad(w_gate, pad)
+        w_up = jnp.pad(w_up, pad)
+        w_down = jnp.pad(w_down, pad)
+    out = _grouped_contrib(h, w_gate, w_up, w_down, slot, gates)
+    return out[:n] if np_ != n else out
+
+
+@jax.jit
+def combine_topk(contrib):
+    """Reduce (N, k, d) contributions to (N, d) in *fixed top-k rank
+    order* — the accumulation order every decode path shares.  The
+    unrolled loop pins the floating-point summation tree so the result
+    is independent of how contributions were produced (one grouped call
+    or several engine waves)."""
+    y = contrib[:, 0]
+    for j in range(1, contrib.shape[1]):
+        y = y + contrib[:, j]
+    return y

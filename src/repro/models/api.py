@@ -116,8 +116,10 @@ def tf_like_prefill_encdec(cfg, params, tokens, memories, max_cache_len):
 
 
 def decode_step(cfg: ModelConfig, params, token, state, *,
-                moe_method: str = "dense"):
-    """One greedy-decode step.  token: (B,) int32."""
+                moe_method: str = "grouped"):
+    """One greedy-decode step.  token: (B,) int32.  MoE layers default
+    to the ``grouped`` dispatch — the jit-grouped top-k hot path shared
+    with the OD-MoE engine's wave compute (see ``models/moe.py``)."""
     pos = state["pos"]
     if cfg.is_encoder_decoder:
         logits, caches = encdec_lib.encdec_decode(
@@ -131,9 +133,15 @@ def decode_step(cfg: ModelConfig, params, token, state, *,
 
 
 def greedy_generate(cfg: ModelConfig, params, batch, num_tokens: int,
-                    max_cache_len: int = 0, moe_method: str = "dense",
+                    max_cache_len: int = 0, moe_method: str = "grouped",
                     transport=None):
     """Reference autoregressive generation (prefill + decode loop).
+
+    MoE layers run the ``grouped`` dispatch — the same jitted top-k
+    expert-FFN primitive (``repro.kernels.moe_gemm``) the OD-MoE engine
+    consumes from worker slots, with the same fixed rank-order
+    accumulation — so the engine ≡ reference invariant is a shared
+    arithmetic contract, not a coincidence of loop order.
 
     ``transport`` (a ``repro.quant`` ``PrecisionPolicy`` or scheme
     name) makes this the reference for mixed-precision expert

@@ -13,6 +13,18 @@ Three dispatch strategies, selectable per call site:
                   materialized.  Default for compiled SPMD paths.
   * ``einsum``  — classic GShard one-hot dispatch/combine einsums.  Kept
                   as an alternative for the §Perf sharding comparison.
+  * ``grouped`` — the decode-path default: the routed experts' FFNs run
+                  through the shared jit-grouped primitive in
+                  ``repro.kernels.moe_gemm`` with contributions gathered
+                  per (row, top-k rank) and accumulated in fixed rank
+                  order.  The grouped GEMM computes its stacked experts
+                  densely over all rows (the *gather* is top-k sparse,
+                  not the FLOPs — the deliberate price of per-pair bits
+                  that never depend on batching).  This is the SAME
+                  arithmetic the OD-MoE engine's wave compute consumes
+                  from worker slots, which is what makes engine decode
+                  token-bit-identical to ``greedy_generate`` *by
+                  construction* rather than by accident of loop order.
 
 The router also returns the per-token top-k expert ids — the signal the
 OD-MoE engine and the SEP predictor consume.
@@ -24,6 +36,8 @@ from typing import Tuple
 
 import jax
 import jax.numpy as jnp
+
+from repro.kernels.moe_gemm import combine_topk, grouped_topk_contrib
 
 from .config import ModelConfig
 from .layers import _dense_init
@@ -164,6 +178,30 @@ def moe_einsum(cfg: ModelConfig, params, x, cap_factor: float = None
     return out, aux
 
 
+def moe_grouped(cfg: ModelConfig, params, x) -> Tuple[jax.Array, dict]:
+    """Grouped top-k dispatch through the shared expert-FFN hot path.
+
+    Routes ``x`` then runs ``repro.kernels.moe_gemm.
+    grouped_topk_contrib`` on the stacked ``(E, d, f)`` expert weights
+    — the top-k indices are themselves the slot map — and reduces with
+    ``combine_topk``'s fixed rank-order accumulation.  As the reference
+    it stacks ALL experts, so its FLOPs match ``dense`` (only the
+    gather is top-k sparse); the win is one fused dispatch and, above
+    all, the arithmetic contract: the OD-MoE engine feeds the same two
+    functions only the wave's slot-resident experts, and per-pair bits
+    are batching-independent, so reference and cacheless engine agree
+    bit-for-bit.
+    """
+    topk_idx, topk_gate, aux = route(cfg, params, x)
+    e = cfg.num_experts
+    wg, wu, wd = (params[k][:e] for k in ("w_gate", "w_up", "w_down"))
+    contrib = grouped_topk_contrib(x, wg, wu, wd,
+                                   topk_idx.astype(jnp.int32), topk_gate)
+    out = combine_topk(contrib).astype(x.dtype)
+    aux["topk_idx"] = topk_idx
+    return out, aux
+
+
 DISPATCH = {"dense": moe_dense, "scatter": moe_scatter, "einsum": moe_einsum}
 
 
@@ -176,4 +214,6 @@ def moe_ff(cfg: ModelConfig, params, x2d, method="scatter",
         return method(cfg, params, x2d)
     if method == "dense":
         return moe_dense(cfg, params, x2d)
+    if method == "grouped":
+        return moe_grouped(cfg, params, x2d)
     return DISPATCH[method](cfg, params, x2d, cap_factor)

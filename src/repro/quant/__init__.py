@@ -1,13 +1,14 @@
 from .quantize import (NF4_LEVELS, dequantize, pack_nf4_codes, quantize,
-                       quantize_pytree, shadow_params, simulate_quantization,
-                       unpack_nf4_codes)
+                       quantize_pytree, shadow_nbytes, shadow_params,
+                       simulate_quantization, unpack_nf4_codes)
 from .transport import (SCHEMES, PackedWeight, PrecisionPolicy, TieredPolicy,
                         TransportCodec, UniformPolicy, get_codec,
                         resolve_policy, transport_expert_bytes,
                         transport_params)
 
 __all__ = ["NF4_LEVELS", "dequantize", "pack_nf4_codes", "quantize",
-           "quantize_pytree", "shadow_params", "simulate_quantization",
+           "quantize_pytree", "shadow_nbytes", "shadow_params",
+           "simulate_quantization",
            "unpack_nf4_codes",
            "SCHEMES", "PackedWeight", "PrecisionPolicy", "TieredPolicy",
            "TransportCodec", "UniformPolicy", "get_codec", "resolve_policy",

@@ -131,3 +131,29 @@ def quantize_pytree(params, scheme: str):
 def shadow_params(params, scheme: str):
     """The SEP shadow model's parameters: quantized view of the full set."""
     return quantize_pytree(params, scheme)
+
+
+def shadow_nbytes(params, scheme: str) -> int:
+    """Deployed byte footprint of ``shadow_params(params, scheme)``.
+
+    Walks the same per-leaf decision as :func:`quantize_pytree`: leaves
+    that quantize are charged the scheme's *exact* packed size — codes
+    plus scales, via the transport codec's closed-form accounting, which
+    tests pin byte-equal to a real ``pack`` — while the leaves that stay
+    full precision (norms, small vectors, non-float buffers) are charged
+    their real ``nbytes``.  This replaces the old hard-coded
+    ``{fp16: 0.5, int8: 0.25, nf4: 0.125}`` fraction table, which was
+    wrong whenever any leaf skipped quantization (and ignored scale
+    payloads entirely).
+    """
+    from .transport import get_codec             # deferred: avoids cycle
+    codec = get_codec("fp32" if scheme in ("fp32", "none") else scheme)
+    total = 0
+    for w in jax.tree.leaves(params):
+        if w.ndim >= 2 and w.size >= _MIN_QUANT_SIZE and jnp.issubdtype(
+                w.dtype, jnp.floating):
+            total += codec.packed_nbytes(tuple(int(s) for s in w.shape),
+                                         elem_bytes=w.dtype.itemsize)
+        else:
+            total += int(w.size) * w.dtype.itemsize
+    return total

@@ -4,9 +4,11 @@ Each outer iteration: (1) resume preempted requests and admit deferred
 ones as KV pages free up, then admit every request whose arrival time
 the virtual clock has passed, running real prefill on admission (the
 first token falls out of prefill, so TTFT = admission wait + prefill);
-(2) refresh each runnable request's SEP *peek* — a functional shadow
-step that yields the prediction for its next token without committing
-the shadow, so waiting requests never drift; (3) let the
+(2) refresh the runnable requests' SEP *peeks* — every request lacking
+one is aligned per-request, composed, and stepped as ONE batched shadow
+dispatch (``_ensure_peeks``) that yields each request's next-token
+prediction without committing any shadow, so waiting requests never
+drift; (3) let the
 ``BatchComposer`` pick <= max_batch requests, preferring overlapping
 predicted expert sets; (4) run one composed ``decode_batch`` through
 the engine — shared worker fleet, shared expert store, load events
@@ -61,7 +63,8 @@ import numpy as np
 from repro.core import (AlignmentPolicy, DecodeClock, LayerRecord,
                         ODMoEEngine, RTX3090_EDGE, ServingTimings,
                         TokenRecord, Trace, concat_cache_lists,
-                        degraded_tpot_report, slice_cache_list,
+                        concat_shadow_states, degraded_tpot_report,
+                        slice_cache_list, slice_shadow_state,
                         simulate_prefill_odmoe)
 from repro.core.predictor import recall_counts
 from repro.core.timing import HardwareProfile
@@ -224,24 +227,45 @@ class ServingLoop:
         return [s for s in batch if not s.preempted]
 
     # -------------------------------------------------------- shadow peek
-    def _ensure_peek(self, state: RequestState) -> None:
-        """Functionally step the request's shadow to predict its next
-        token's experts, caching the result until the request actually
-        takes that step (composition must not advance shadows)."""
+    def _ensure_peeks(self, runnable: List[RequestState]) -> None:
+        """Fleet-batched shadow peek: functionally step EVERY runnable
+        request that lacks a cached peek as one composed shadow state —
+        a single ``lm_decode`` dispatch per serving iteration instead of
+        one per request.
+
+        Per-request semantics are unchanged: token/KV alignment is
+        applied to each request's own shadow state *before* composition
+        (each request sees its own request-local iteration index), the
+        composed step is sliced back per request, and the resulting peek
+        is cached until the request actually takes that step
+        (composition must not advance shadows — a request that sits out
+        the next batch keeps its peek)."""
         eng = self.engine
-        if eng.shadow is None or state.pending is not None:
+        if eng.shadow is None:
             return
-        n = len(state.generated)          # request-local iteration index
-        at = self.policy.align_token_at(n)
-        ak = self.policy.align_kv_at(n)
-        sh = state.shadow_state
-        if ak:
-            sh = eng.shadow.align_kv_state(
-                sh, {"caches": eng._stack(state.cache_list),
-                     "pos": state.pos})
-        shadow_in = state.token if at else sh["token"]
-        preds, new_sh = eng.shadow.step_state(sh, shadow_in)
-        state.pending = (preds, new_sh, at, ak)
+        need = [s for s in runnable if s.pending is None]
+        if not need:
+            return
+        aligned, flags = [], []
+        for state in need:
+            n = len(state.generated)      # request-local iteration index
+            at = self.policy.align_token_at(n)
+            ak = self.policy.align_kv_at(n)
+            sh = state.shadow_state
+            if ak:
+                sh = eng.shadow.align_kv_state(
+                    sh, {"caches": eng._stack(state.cache_list),
+                         "pos": state.pos})
+            # the composed ``token`` field carries each request's chosen
+            # shadow input (main token when aligning, else the shadow's)
+            aligned.append(dict(sh, token=state.token if at
+                                else sh["token"]))
+            flags.append((at, ak))
+        composed = concat_shadow_states(aligned)
+        preds, new = eng.shadow.step_state(composed, composed["token"])
+        for i, (state, (at, ak)) in enumerate(zip(need, flags)):
+            preds_i = {li: p[i:i + 1] for li, p in preds.items()}
+            state.pending = (preds_i, slice_shadow_state(new, i), at, ak)
 
     # --------------------------------------------------------------- run
     def run(self, requests: Sequence[Request]) -> ServeResult:
@@ -301,8 +325,7 @@ class ServingLoop:
                 raise RuntimeError(
                     "KV pool deadlock: nothing runnable, resumable or "
                     "admittable (pool smaller than one request window?)")
-            for state in runnable:
-                self._ensure_peek(state)
+            self._ensure_peeks(runnable)
             batch = self.composer.compose(runnable)
             if self.kv_pool is not None:
                 batch = self._ensure_batch_pages(batch, queue, clock)

@@ -6,9 +6,11 @@ composed decode iterations: the main-model decode state (per-layer
 caches with batch axis 1, absolute position, last emitted token), the
 request's own SEP shadow state, a cached shadow *peek* (the prediction
 for the request's next decode step, computed without committing the
-shadow so a request can wait out composition rounds without drifting),
-its generated tokens, and latency timestamps in the timing model's
-virtual clock.
+shadow so a request can wait out composition rounds without drifting —
+refreshed fleet-batched: each serving iteration aligns every peek-less
+runnable request individually, then steps all their shadows as one
+composed dispatch), its generated tokens, and latency timestamps in
+the timing model's virtual clock.
 
 ``RequestQueue`` orders arrivals, admits them when the clock reaches
 their arrival time, and tracks the active/finished populations.  It is
@@ -49,7 +51,10 @@ class RequestState:
     pos: object                   # (1,) absolute position (jax)
     shadow_state: Optional[dict] = None
     # cached shadow peek: (preds {layer: (1,k)}, next_shadow_state,
-    # aligned_token, aligned_kv) — valid until the next committed step
+    # aligned_token, aligned_kv) — valid until the next committed step.
+    # Produced by ServingLoop._ensure_peeks, which steps every peek-less
+    # runnable request's shadow as one composed batch and slices this
+    # request's share back out.
     pending: Optional[tuple] = None
     generated: List[int] = field(default_factory=list)
     last_experts: FrozenSet[Tuple[int, int]] = frozenset()
