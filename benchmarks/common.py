@@ -68,6 +68,37 @@ def save_artifact(name: str, obj) -> str:
     return path
 
 
+def record_bench(name: str, metrics: dict) -> str:
+    """Append this commit's measured point to the committed perf
+    trajectory ``benchmarks/BENCH_<name>.json`` (one entry per commit;
+    re-running on the same commit overwrites its point).  The commit id
+    comes from ``$BENCH_COMMIT`` (CI) or ``git rev-parse``; the file is
+    meant to be committed so tokens/s, overlap efficiency and re-hit
+    rate are traceable PR over PR."""
+    import subprocess
+    commit = os.environ.get("BENCH_COMMIT")
+    if not commit:
+        try:
+            commit = subprocess.run(
+                ["git", "rev-parse", "--short", "HEAD"],
+                capture_output=True, text=True, check=True,
+                cwd=os.path.dirname(__file__)).stdout.strip()
+        except Exception:
+            commit = "unknown"
+    path = os.path.join(os.path.dirname(__file__), f"BENCH_{name}.json")
+    series = []
+    if os.path.exists(path):
+        with open(path) as f:
+            series = json.load(f).get("series", [])
+    series = [p for p in series if p.get("commit") != commit]
+    series.append({"commit": commit, **metrics})
+    with open(path, "w") as f:
+        json.dump({"benchmark": name, "series": series}, f, indent=1,
+                  default=float)
+        f.write("\n")
+    return path
+
+
 def load_artifact(name: str):
     """Previously-measured artifact, or None.  Engine measurements are
     expensive on this 1-core container, so benchmark modules reuse their

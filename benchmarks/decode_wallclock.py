@@ -34,11 +34,12 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import AlignmentPolicy, ODMoEEngine
+from repro.fleet import uniform_profiles
 from repro.models import greedy_generate, init_params
 from repro.models.config import ModelConfig
 from repro.serve import Request, ServingLoop
 
-from .common import row, save_artifact
+from .common import record_bench, row, save_artifact
 
 MIN_SPEEDUP = 2.0
 # the CI smoke budgets (3 requests x 4 tokens) are too short to average
@@ -104,6 +105,80 @@ def single_stream_tps(cfg, params, mode, n_tokens) -> float:
     toks, t_decode = run()
     assert np.array_equal(toks, ref), f"{mode} decode diverged"
     return (n_tokens - 1) / t_decode
+
+
+# ------------------------------------------- async prefetch + residency
+def async_model():
+    """Heavier experts than ``tiny_model`` so expert transport (int8
+    unpack + device placement) is a real fraction of decode — the work
+    the async executor overlaps and residency re-hits eliminate."""
+    cfg = ModelConfig(name="wallclock-async-moe", family="moe",
+                      num_layers=4, d_model=128, num_heads=4,
+                      num_kv_heads=2, d_ff=0, d_expert=2048, vocab_size=97,
+                      num_experts=8, top_k=2)
+    return cfg, init_params(cfg, jax.random.PRNGKey(0))
+
+
+def async_decode_point(cfg, params, predictor, n_tokens,
+                       repeats) -> dict:
+    """Steady-state decode rate: synchronous grouped engine vs the same
+    engine with a threaded prefetch executor + LRU residency on
+    capacity-2 workers.
+
+    The figure is 1 / (best per-token wall time), cold first token
+    excluded, minimized over ``repeats`` interleaved runs — the
+    noise-robust estimator on a shared host: interference only ever
+    slows a token down, while the synchronous path's floor is real
+    unpack + device-placement work that residency re-hits eliminate and
+    the executor overlaps.  Tokens must stay bit-identical to
+    ``greedy_generate(..., transport='int8')`` on BOTH paths — the
+    speedup is transfer scheduling, never arithmetic."""
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (1, 12),
+                                          0, cfg.vocab_size)}
+    ref = np.asarray(greedy_generate(cfg, params, batch, n_tokens,
+                                     transport="int8"))
+
+    def run(prefetch, residency):
+        eng = _PrefillTimedEngine(
+            cfg, params, predictor=predictor, shadow_scheme="int8",
+            wave_compute="grouped", transport="int8",
+            profiles=uniform_profiles(8, capacity=2),
+            prefetch=prefetch, residency=residency)
+        dts = []
+        inner = eng.decode_batch
+
+        def timed_decode(*a, **kw):
+            t0 = time.time()
+            out = inner(*a, **kw)
+            dts.append(time.time() - t0)
+            return out
+
+        eng.decode_batch = timed_decode
+        toks, _ = eng.generate(batch, n_tokens, AlignmentPolicy(1, 1))
+        rep = eng.prefetch_report() if prefetch else {}
+        eng.close()
+        assert np.array_equal(np.asarray(toks), ref), \
+            f"async decode diverged ({predictor}, {prefetch}, {residency})"
+        return min(dts[1:]), rep
+
+    for args in ((None, None), ("thread", "lru")):
+        run(*args)                     # warm-up: compile at these shapes
+    t_sync, t_async, rep = 9e9, 9e9, {}
+    for _ in range(repeats):           # interleaved best-of-N: the two
+        t_sync = min(t_sync, run(None, None)[0])      # paths see the
+        dt, rep = run("thread", "lru")                # same host noise
+        t_async = min(t_async, dt)
+    pf = rep.get("prefetch_prefetched", 0)
+    fetched = (pf + rep.get("prefetch_inline", 0)
+               + rep.get("prefetch_demand_fetches", 0))
+    return {
+        "predictor": predictor,
+        "sync_tok_s": 1.0 / t_sync,
+        "async_tok_s": 1.0 / t_async,
+        "speedup_x": t_sync / t_async,
+        "rehit_rate": rep.get("rehit_rate", 0.0),
+        "overlap_efficiency": pf / fetched if fetched else 0.0,
+    }
 
 
 # ---------------------------------------------------- composed serving
@@ -193,6 +268,44 @@ def run(fast: bool = True, smoke: bool = False):
         assert speedup >= bar, (
             f"{label}: grouped path only {speedup:.2f}x over the retired "
             f"loop path (acceptance bar is {bar}x)")
+    # async prefetch + opportunistic residency vs synchronous grouped
+    acfg, aparams = async_model()
+    a_tokens = 8 if smoke else (12 if fast else 24)
+    repeats = 2 if smoke else (3 if fast else 5)
+    bench = {}
+    for predictor in (("freq",) if smoke else ("freq", "sep")):
+        point = async_decode_point(acfg, aparams, predictor, a_tokens,
+                                   repeats)
+        table[f"async/{predictor}"] = point
+        bench[predictor] = point
+    # the PR's acceptance bar: real wall-clock decode must be strictly
+    # faster with the executor overlapping transfers + residency
+    # re-hitting (high-locality freq routing is the headline point;
+    # smoke keeps strictness, the fuller profiles demand headroom)
+    bar = 1.0 if smoke else 1.1
+    if bench["freq"]["speedup_x"] <= bar:
+        # shared-runner noise can stomp a short best-of-N; re-measure
+        # once with a doubled budget before declaring a regression
+        bench["freq"] = async_decode_point(acfg, aparams, "freq",
+                                           a_tokens, 2 * repeats + 1)
+        table["async/freq"] = bench["freq"]
+    freq = bench["freq"]
+    for predictor, point in bench.items():
+        for metric in ("sync_tok_s", "async_tok_s", "speedup_x",
+                       "rehit_rate", "overlap_efficiency"):
+            rows.append(row(f"decode_wallclock/async/{predictor}/{metric}",
+                            0.0, round(point[metric], 3)))
+    assert freq["speedup_x"] > bar, (
+        f"async decode only {freq['speedup_x']:.3f}x over sync grouped "
+        f"(bar {bar}x, re-hit rate {freq['rehit_rate']:.2f})")
+    record_bench("decode_wallclock", {
+        "profile": "smoke" if smoke else ("fast" if fast else "full"),
+        "sync_tok_s": freq["sync_tok_s"],
+        "async_tok_s": freq["async_tok_s"],
+        "speedup_x": freq["speedup_x"],
+        "rehit_rate": freq["rehit_rate"],
+        "overlap_efficiency": freq["overlap_efficiency"],
+    })
     if not smoke:
         save_artifact("decode_wallclock.json", table)
     return rows
@@ -207,5 +320,5 @@ if __name__ == "__main__":
     args = ap.parse_args()
     for r in run(fast=not args.full, smoke=args.smoke):
         print(r)
-    print("decode-wallclock smoke OK: >= 2x on both paths, bit-exact"
-          if args.smoke else "done")
+    print("decode-wallclock smoke OK: >= 2x on both paths, async > sync, "
+          "bit-exact" if args.smoke else "done")

@@ -20,24 +20,36 @@ import numpy as np
 from repro.core import ODMoEEngine
 from repro.serve import BatchComposer, ServingLoop, make_traffic
 
-from .common import bench_model, row, save_artifact, timed
+from .common import bench_model, record_bench, row, save_artifact, timed
 
-# (label, arrival rate req/s of modeled time, composition policy)
+# (label, arrival rate req/s of modeled time, composition policy,
+#  async: threaded prefetch executor + LRU residency)
 POINTS = [
-    ("burst/overlap", 0.0, "overlap"),
-    ("burst/fifo", 0.0, "fifo"),
-    ("r200/overlap", 200.0, "overlap"),
-    ("r20/overlap", 20.0, "overlap"),
+    ("burst/overlap", 0.0, "overlap", False),
+    ("burst/fifo", 0.0, "fifo", False),
+    ("burst/overlap-async", 0.0, "overlap", True),
+    ("r200/overlap", 200.0, "overlap", False),
+    ("r20/overlap", 20.0, "overlap", False),
 ]
 
 
 def serve_point(cfg, params, rate: float, policy: str, n: int,
-                tokens: int, max_batch: int = 4) -> dict:
+                tokens: int, max_batch: int = 4,
+                use_async: bool = False) -> dict:
+    from repro.fleet import uniform_profiles
     eng = ODMoEEngine(cfg, params, n_workers=8, predictor="sep",
-                      shadow_scheme="int8")
+                      shadow_scheme="int8",
+                      # capacity-2 workers give released residents a slot
+                      # to survive in; the modeled clock then prices only
+                      # the experts that physically shipped (lr.shipped)
+                      profiles=(uniform_profiles(8, capacity=2)
+                                if use_async else None),
+                      prefetch="thread" if use_async else None,
+                      residency="lru" if use_async else None)
     loop = ServingLoop(eng, max_batch=max_batch,
                        composer=BatchComposer(max_batch, policy))
     res = loop.run(make_traffic(cfg, n, rate, max_new=tokens))
+    eng.close()
     rep = res.timings.report()
     served = [len(e.requests) for e in eng.slots.events if e.requests]
     rep.update({
@@ -48,7 +60,16 @@ def serve_point(cfg, params, rate: float, policy: str, n: int,
         "requests_per_load": float(np.mean(served)) if served else 0.0,
         "loads_per_token": (len(eng.slots.events)
                             / max(rep["total_tokens"], 1)),
+        "bytes_moved": eng.slots.bytes_moved,
     })
+    if res.prefetch_stats is not None:
+        ps = res.prefetch_stats
+        rep["rehit_rate"] = ps["rehit_rate"]
+        fetched = (ps.get("prefetch_prefetched", 0)
+                   + ps.get("prefetch_inline", 0)
+                   + ps.get("prefetch_demand_fetches", 0))
+        rep["overlap_efficiency"] = (ps.get("prefetch_prefetched", 0)
+                                     / fetched if fetched else 0.0)
     return rep
 
 
@@ -56,8 +77,9 @@ def run(fast: bool = True):
     cfg, params = bench_model()
     n, tokens = (6, 8) if fast else (16, 24)
     rows, table = [], {}
-    for label, rate, policy in POINTS:
-        rep, us = timed(serve_point, cfg, params, rate, policy, n, tokens)
+    for label, rate, policy, use_async in POINTS:
+        rep, us = timed(serve_point, cfg, params, rate, policy, n,
+                        tokens, use_async=use_async)
         table[label] = rep
         rows.append(row(f"serving/{label}/tok_s", us,
                         round(rep["throughput_tok_s"], 2)))
@@ -68,6 +90,18 @@ def run(fast: bool = True):
         rows.append(row(f"serving/{label}/req_per_load", 0.0,
                         round(rep["requests_per_load"], 2)))
     save_artifact("serving_throughput.json", table)
+    sync_p, async_p = table["burst/overlap"], table["burst/overlap-async"]
+    record_bench("serving_throughput", {
+        "profile": "fast" if fast else "full",
+        "tok_s": sync_p["throughput_tok_s"],
+        "async_tok_s": async_p["throughput_tok_s"],
+        "tpot_ms": sync_p["tpot_mean_s"] * 1e3,
+        "rehit_rate": async_p.get("rehit_rate", 0.0),
+        "overlap_efficiency": async_p.get("overlap_efficiency", 0.0),
+        "bytes_moved": sync_p["bytes_moved"],
+        "async_bytes_moved": async_p["bytes_moved"],
+        "requests_per_load": sync_p["requests_per_load"],
+    })
     return rows
 
 

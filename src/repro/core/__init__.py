@@ -7,7 +7,11 @@ from .engine import (LayerRecord, ODMoEEngine, TokenRecord, Trace,
                      concat_cache_lists, slice_cache_list)
 from .predictor import (FrequencyPredictor, GateExtrapolator,
                         RandomPredictor, SEPShadow, concat_shadow_states,
-                        moe_layer_indices, slice_shadow_state)
+                        layers_within_horizon, moe_layer_indices,
+                        slice_shadow_state)
+from .prefetch import (ChaosExecutor, GateStatsResidency, LRUResidency,
+                       PrefetchExecutor, ResidencyPolicy, SyncExecutor,
+                       ThreadedExecutor, make_executor, resolve_residency)
 from .schedule import GroupSchedule
 from .store import ExpertStore, LoadEvent, WorkerSlots
 from .timing import (RTX3090_EDGE, TPU_V5E, DecodeClock, HardwareProfile,
@@ -21,8 +25,12 @@ __all__ = [
     "AlignmentPolicy", "kv_bytes_per_token", "LayerRecord", "ODMoEEngine",
     "TokenRecord", "Trace", "concat_cache_lists", "slice_cache_list",
     "FrequencyPredictor", "GateExtrapolator", "RandomPredictor",
-    "SEPShadow", "concat_shadow_states", "moe_layer_indices",
-    "slice_shadow_state", "GroupSchedule", "ExpertStore", "LoadEvent",
+    "SEPShadow", "concat_shadow_states", "layers_within_horizon",
+    "moe_layer_indices", "slice_shadow_state", "ChaosExecutor",
+    "GateStatsResidency", "LRUResidency", "PrefetchExecutor",
+    "ResidencyPolicy", "SyncExecutor", "ThreadedExecutor",
+    "make_executor", "resolve_residency",
+    "GroupSchedule", "ExpertStore", "LoadEvent",
     "WorkerSlots", "RTX3090_EDGE", "TPU_V5E", "DecodeClock",
     "HardwareProfile", "ODMoETimings", "ServingTimings",
     "degraded_tpot_report", "node_memory_report", "poisson_arrivals",

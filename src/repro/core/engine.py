@@ -60,6 +60,7 @@ from repro.quant.transport import resolve_policy, transport_params
 from .align import AlignmentPolicy
 from .predictor import (FrequencyPredictor, GateExtrapolator, RandomPredictor,
                         SEPShadow, moe_layer_indices, recall_counts)
+from .prefetch import PrefetchExecutor, make_executor, resolve_residency
 from .schedule import GroupSchedule
 from .store import ExpertStore, WorkerSlots
 
@@ -78,6 +79,11 @@ class LayerRecord:
     touched: Tuple[int, ...] = ()        # every worker that took a load
     gates: Optional[np.ndarray] = None   # (B,k) gate weights (confidence
     #                                      signal for TieredPolicy calib)
+    # residency-aware engines record exactly which predicted experts
+    # PHYSICALLY shipped (re-hits excluded); ``None`` keeps the legacy
+    # timing model's group-padded predicted-load pricing
+    shipped: Optional[Tuple[int, ...]] = None
+    rehits: int = 0                      # residency re-hits this layer
 
 
 @dataclass
@@ -179,9 +185,20 @@ def concat_cache_lists(cache_lists: Sequence) -> object:
     into a batch *view* instead: no KV is copied here — each layer is
     gathered from the pool through the members' page tables when the
     decode step indexes it, and scattered back on assignment.
+
+    An empty batch is a caller bug (the serving loop never composes
+    one) and raises ``ValueError``; mixing paged handles and dense
+    lists in one batch raises ``TypeError`` — a request is either
+    pooled or dense for its whole lifetime.
     """
+    if not cache_lists:
+        raise ValueError("cannot compose an empty batch of caches")
     first = cache_lists[0]
-    if hasattr(first, "compose"):          # paged handles
+    paged = [hasattr(c, "compose") for c in cache_lists]
+    if any(paged) and not all(paged):
+        raise TypeError("cannot mix paged and dense caches in one "
+                        "composed batch")
+    if paged[0]:                           # paged handles
         return first.compose(cache_lists)
     if len(cache_lists) == 1:
         return list(first)
@@ -204,11 +221,17 @@ class ODMoEEngine:
                  shadow_scheme: str = "int8", lookahead: int = 4,
                  physical_loading: bool = True, seed: int = 0,
                  profiles=None, faults=None, transport=None,
-                 wave_compute: str = "grouped"):
+                 wave_compute: str = "grouped", prefetch=None,
+                 residency=None, peek_horizon: int = 0):
         if cfg.is_encoder_decoder:
             raise ValueError("engine drives decoder-only models")
         if wave_compute not in ("grouped", "loop"):
             raise ValueError("wave_compute must be 'grouped' or 'loop'")
+        if ((prefetch is not None or residency is not None)
+                and wave_compute != "grouped"):
+            # the retired loop baseline stays the synchronous oracle
+            raise ValueError("prefetch/residency require the grouped "
+                             "wave path")
         self.cfg = cfg
         # ``wave_compute='loop'`` keeps the retired per-(row, rank)
         # Python loop as the benchmark baseline and property-test
@@ -248,10 +271,22 @@ class ODMoEEngine:
         self.params = (params if self.transport.trivial
                        else transport_params(cfg, params, self.transport,
                                              packed=self.store.get_packed))
+        # opportunistic residency + async prefetch (repro.core.prefetch).
+        # Defaults (None) keep the historical cacheless synchronous
+        # engine bit-for-bit: release degrades to evict, loads fetch
+        # inline.
+        self.residency = resolve_residency(residency)
         self.slots = WorkerSlots(self.store, n_workers,
                                  physical=physical_loading,
                                  profiles=getattr(self.sched, "profiles",
-                                                  None))
+                                                  None),
+                                 residency=self.residency)
+        executor = make_executor(prefetch)
+        self.prefetch: Optional[PrefetchExecutor] = (
+            None if executor is None
+            else PrefetchExecutor(self.store, executor,
+                                  horizon=peek_horizon,
+                                  physical=physical_loading))
         # per-layer parameter views sliced once (params never mutate);
         # the decode loop re-slicing them every token was pure overhead
         self._layer_params = [layer_params(cfg, self.params, li)
@@ -389,6 +424,12 @@ class ODMoEEngine:
             self.faults.apply(step_idx, self.sched.state, self.slots)
         x = _embed_token(self.params, token)
         pending: Dict[int, np.ndarray] = dict(preds)
+        # SEP predictions cover the whole token up front: queue their
+        # fetches NOW so transfers overlap all the compute before each
+        # layer's wave boundary (the peek horizon bounds the window)
+        if self.prefetch is not None and pending:
+            self.prefetch.enqueue(step_idx, 0, pending,
+                                  skip=self._resident_skip())
         moe_i = -1
         for li, kinds in enumerate(cfg.layer_kinds()):
             lp = self._layer_params[li]
@@ -403,14 +444,26 @@ class ODMoEEngine:
             true = np.asarray(topk_idx)
             x = self._moe_bookkeeping(step_idx, li, moe_i, pending, true,
                                       h, topk_gate, x, rec)
+        if self.prefetch is not None:
+            self.prefetch.finish_token(step_idx)
         return (_logits_argmax(cfg)(self.params, x), cache_list, pos + 1)
+
+    def _resident_skip(self):
+        """Prefetch skip predicate under residency: an expert that is
+        still resident somewhere will re-hit, so fetching it again is
+        pure waste.  (Cacheless engines never have cross-layer
+        residents, so the predicate is only built when residency is
+        on.)"""
+        if self.residency is None:
+            return None
+        return lambda layer, e: self.slots.worker_with(layer, e) is not None
 
     def _moe_bookkeeping(self, step_idx, li, moe_i, pending, true, h,
                          topk_gate, x, rec: TokenRecord):
         """Everything around one MoE layer's expert waves, shared by the
         production and the retired decode paths: on-the-fly predictors,
         serve + compute, trace recording and the cacheless eviction
-        rule."""
+        rule (or, under residency, the opportunistic release)."""
         b = true.shape[0]
         # on-the-fly predictors key off the router input
         if self.fly is not None:
@@ -420,22 +473,35 @@ class ODMoEEngine:
             pending[li] = self.freq.predict(li, b)
         if self.rand is not None:
             pending[li] = self.rand.predict(li, b)
+        if self.prefetch is not None and pending:
+            # on-the-fly predictors only just produced this layer's (and
+            # lookahead) predictions; queue whatever is new in-window
+            self.prefetch.enqueue(step_idx, li, pending,
+                                  skip=self._resident_skip())
         pred = pending.get(li)
         lr, y = self._serve_and_compute(
             step_idx, li, moe_i, pred, true, h, np.asarray(topk_gate))
         rec.layers.append(lr)
         if self.freq is not None:
             self.freq.observe(li, true)
+        if self.residency is not None:
+            # realized routing feeds the gate-statistics policy
+            self.slots.observe_gates(li, true, np.asarray(topk_gate))
         x = x + y[:, None].astype(x.dtype)
         # prompt eviction — cacheless rule.  Every worker that took a
         # load this layer (predicted or reload, group or spill) drops
         # its experts, so a mispredicted never-used resident cannot
-        # linger to fake a later hit.
+        # linger to fake a later hit.  Under opportunistic residency the
+        # drop becomes a *release*: residents keep their free slots and
+        # a later load of the same expert re-hits instead of reloading.
         used = set(lr.touched)
         used.update(w for _, w in lr.assignments)
         used.update(self.sched.workers_of_group(lr.group))
         for w in sorted(used):
-            self.slots.evict(w)
+            if self.residency is not None:
+                self.slots.release(w)
+            else:
+                self.slots.evict(w)
         return x
 
     # ------------------------------------------- retired loop baseline
@@ -492,16 +558,50 @@ class ODMoEEngine:
         """
         group = self.sched.group_of(moe_i)
         touched: set = set()
+        rehits = 0
+        shipped: List[int] = []
         # 1) predicted experts were loaded ahead of time.  A composed
         # batch can predict more unique experts than the group holds;
         # those spread onto the other groups' idle workers and onto
         # spare slots of multi-slot workers (the whole fleet serves the
         # batch).  Predictions beyond the fleet's slot count cannot be
         # held anywhere and fall through to the reload path.
+        #
+        # Under residency, predicted experts still resident anywhere
+        # re-hit in place first (no load, no bytes); the rest commit in
+        # the same deterministic expert order onto the remaining load
+        # targets, consuming prefetched payloads when the executor
+        # finished them in time.  All scheduling decisions happen HERE,
+        # on the main thread — an async executor can only change when
+        # payload bytes were fetched, never who serves what.
         if pred is not None:
             pred_experts = list(dict.fromkeys(int(e) for e in pred.reshape(-1)))
-            for e, w in zip(pred_experts, self.sched.load_targets(group)):
-                self.slots.load(step_idx, layer, e, w, predicted=True)
+            rest: List[int] = []
+            reserved: Dict[int, int] = {}
+            if self.residency is not None:
+                for e in pred_experts:
+                    w = self.slots.reactivate(layer, e)
+                    if w is None:
+                        rest.append(e)
+                    else:                      # re-hit: slot already live
+                        rehits += 1
+                        touched.add(w)
+                        reserved[w] = reserved.get(w, 0) + 1
+            else:
+                rest = pred_experts
+            targets: List[int] = []
+            for w in self.sched.load_targets(group):
+                if reserved.get(w, 0):         # slot pledged to a re-hit
+                    reserved[w] -= 1
+                    continue
+                targets.append(w)
+            rest = rest[:len(targets)]   # beyond fleet slots -> reloads
+            payloads = (self.prefetch.collect(step_idx, layer, rest)
+                        if self.prefetch is not None and rest else {})
+            for e, w in zip(rest, targets):
+                if self.slots.load(step_idx, layer, e, w, predicted=True,
+                                   payload=payloads.get(e)):
+                    shipped.append(e)
                 touched.add(w)
         # mid-step faults: a worker dying HERE strands the predicted
         # experts it just loaded — the gate pass below reloads them on a
@@ -526,12 +626,21 @@ class ODMoEEngine:
             for e in remaining:
                 w = self.slots.worker_with(layer, e)
                 if w is not None and w not in claimed:
+                    if (self.residency is not None
+                            and self.slots.claim_resident(layer, e, w)):
+                        rehits += 1     # mispredicted but still resident
+                        touched.add(w)
                     wave[e] = w
                     claimed.add(w)
             free = [w for w in order if w not in claimed]
             if not wave and not free:
                 raise RuntimeError(
                     f"no alive workers left to serve layer {layer}")
+            # dry-assign the wave's misses first, then fetch them as one
+            # batch through the executor (concurrent transfers), then
+            # commit in assignment order — the same worker choices and
+            # event order the synchronous path produces
+            loads: List[Tuple[int, int]] = []
             for e in remaining:
                 if e in wave:
                     continue
@@ -540,8 +649,13 @@ class ODMoEEngine:
                     #            computes next wave, no reload needed
                 if not free:
                     break                          # overflow -> next wave
-                w = free.pop(0)
-                self.slots.load(step_idx, layer, e, w, predicted=False)
+                loads.append((e, free.pop(0)))
+            payloads = (self.prefetch.fetch_now(step_idx, layer,
+                                                [e for e, _ in loads])
+                        if self.prefetch is not None and loads else {})
+            for e, w in loads:
+                self.slots.load(step_idx, layer, e, w, predicted=False,
+                                payload=payloads.get(e))
                 touched.add(w)
                 reloads += 1
                 wave[e] = w
@@ -568,7 +682,10 @@ class ODMoEEngine:
                          predicted=pred, true=true, correct=correct,
                          reloads=reloads, assignments=assignments,
                          waves=waves, touched=tuple(sorted(touched)),
-                         gates=gates)
+                         gates=gates,
+                         shipped=(tuple(shipped)
+                                  if self.residency is not None else None),
+                         rehits=rehits)
         return lr, y
 
     def _compute_wave(self, layer, h, true, gates, wave: Dict[int, int],
@@ -606,6 +723,33 @@ class ODMoEEngine:
                 out = (jax.nn.silu(hb @ wd["w_gate"]) * (hb @ wd["w_up"])
                        ) @ wd["w_down"]
                 contrib[(bi, j)] = float(gates[bi, j]) * out
+
+    # ---------------------------------------------------- prefetch report
+    def prefetch_report(self) -> dict:
+        """Prefetch/residency effectiveness counters: what the executor
+        fetched ahead vs inline, and what residency re-hits saved.
+        ``rehit_rate`` is re-hits over all slot fills (loads + re-hits)
+        — the fraction of expert placements that moved zero bytes."""
+        rs = self.slots.residency_stats
+        loads = self.slots.stats["loads"]
+        denom = loads + rs["rehits"]
+        rep = {
+            "residency": getattr(self.residency, "name", None),
+            "rehit_rate": rs["rehits"] / denom if denom else 0.0,
+            "bytes_moved": self.slots.bytes_moved,
+        }
+        rep.update({f"residency_{k}": v for k, v in rs.items()})
+        if self.prefetch is not None:
+            rep["executor"] = self.prefetch.executor.kind
+            rep.update({f"prefetch_{k}": v
+                        for k, v in self.prefetch.stats.items()})
+        return rep
+
+    def close(self) -> None:
+        """Shut down the prefetch executor's worker threads (no-op for
+        synchronous engines)."""
+        if self.prefetch is not None:
+            self.prefetch.close()
 
     # ------------------------------------------------------------- memory
     def memory_report(self) -> dict:

@@ -49,6 +49,18 @@ def moe_layer_indices(cfg: ModelConfig) -> List[int]:
     return [i for i, (_, ff) in enumerate(cfg.layer_kinds()) if ff == MOE_FF]
 
 
+def layers_within_horizon(moe_layers: Sequence[int], current_layer: int,
+                          horizon: int) -> List[int]:
+    """The peek window feeding the prefetch load queue: MoE layer
+    indices at or after ``current_layer``, truncated to the first
+    ``horizon`` of them.  ``horizon=0`` means unbounded — the SEP
+    shadow predicts the whole token at once, so the default window is
+    the full remaining depth; on-the-fly predictors
+    (``GateExtrapolator``) naturally bound it by their own lookahead."""
+    ahead = [li for li in sorted(moe_layers) if li >= current_layer]
+    return ahead if horizon <= 0 else ahead[:horizon]
+
+
 def topk_to_layer_dict(cfg: ModelConfig, topk_tuple) -> Dict[int, np.ndarray]:
     """Map ``lm_decode`` aux["topk"] (per-pattern-pos, (R,B,k)) to
     {absolute_layer: (B,k)}."""

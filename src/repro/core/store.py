@@ -32,6 +32,16 @@ Stats semantics (pinned by tests/test_fleet.py):
     *packed* transport payload of every physical load — what actually
     crossed the link under the store's ``PrecisionPolicy``.  Hits and
     failures move nothing.
+
+Opportunistic residency (``repro.core.prefetch``) extends the model
+without touching those semantics: ``release`` marks a worker's
+residents *released* instead of evicting them — they keep occupying
+free slots and a later ``load`` of the same expert re-hits in place (no
+event, zero bytes) — while displacement pressure (a full worker taking
+a new load) evicts released residents first, with the residency policy
+choosing the victim.  Residency counters live in ``residency_stats``,
+beside ``stats`` like ``bytes_moved``, so the scripted stats regression
+stays byte-for-byte.
 """
 from __future__ import annotations
 
@@ -139,10 +149,12 @@ class WorkerSlots:
 
     def __init__(self, store: ExpertStore, n_workers: int,
                  physical: bool = True,
-                 profiles: Optional[Sequence] = None):
+                 profiles: Optional[Sequence] = None,
+                 residency=None):
         self.store = store
         self.n_workers = n_workers
         self.physical = physical  # False: bookkeep only (no device copies)
+        self.residency = residency   # ResidencyPolicy or None (cacheless)
         self.profiles = list(profiles) if profiles else None
         if self.profiles is not None and len(self.profiles) != n_workers:
             raise ValueError("one profile per worker required")
@@ -164,6 +176,14 @@ class WorkerSlots:
         # kept beside ``stats`` so the scripted stats regression stays
         # byte-for-byte while transport accounting grows independently
         self.bytes_moved: int = 0
+        # opportunistic-residency accounting, also beside ``stats``:
+        # ``rehit_bytes_saved`` counts the packed payload a re-hit did
+        # NOT move; ``evicted_bytes`` the full-width slot bytes every
+        # eviction freed (capacity displacement or explicit evict)
+        self._released: List[set] = [set() for _ in range(n_workers)]
+        self.residency_stats = {"released": 0, "rehits": 0,
+                                "rehit_bytes_saved": 0, "displaced": 0,
+                                "evicted_bytes": 0}
         self._request_context: Tuple[int, ...] = ()
 
     @property
@@ -185,34 +205,135 @@ class WorkerSlots:
 
     # ------------------------------------------------------------- actions
     def load(self, token: int, layer: int, expert: int, worker: int,
-             predicted: bool) -> None:
+             predicted: bool, payload: Optional[dict] = None) -> bool:
         """Ship (layer, expert)'s *packed* shard into a slot on
         ``worker`` and dequantize on arrival, so compute consumes the
         transported precision while only packed bytes cross the link.
-        A full worker overwrites its oldest resident (counted as an
-        eviction)."""
+        A full worker overwrites a resident: the residency policy's
+        victim among released residents when one exists, else the
+        oldest (FIFO — the historical cacheless behaviour, counted as
+        an eviction either way).
+
+        ``payload`` is an already-fetched ``unpack_shard`` result from
+        the prefetch executor; commit then skips the inline fetch but
+        accounts the identical packed bytes — prefetch moves WHEN the
+        transfer happens, never what it costs.  Returns ``True`` when
+        the load physically shipped, ``False`` on a hit/re-hit."""
         if not self.alive[worker]:
             raise RuntimeError(f"load onto dead worker {worker}")
         key = (layer, expert)
         if key in self._slot_data[worker]:
-            self.stats["hits"] += 1
-            return
+            if key in self._released[worker]:
+                self._reactivate(worker, key)      # residency re-hit
+            else:
+                self.stats["hits"] += 1
+            return False
         if len(self._occupied[worker]) >= self.capacity[worker]:
-            victim = self._occupied[worker].pop(0)
+            victim = None
+            if self.residency is not None:
+                released = [k for k in self._occupied[worker]
+                            if k in self._released[worker]]
+                if released:
+                    victim = self.residency.victim(released)
+                    self.residency_stats["displaced"] += 1
+            if victim is None:
+                victim = self._occupied[worker][0]
+            self._occupied[worker].remove(victim)
+            self._released[worker].discard(victim)
             del self._slot_data[worker][victim]
+            if self.residency is not None:
+                self.residency.forget(victim)
             self.stats["evictions"] += 1
-        self._slot_data[worker][key] = self.store.unpack_shard(
-            layer, expert, device=self.physical)
+            self.residency_stats["evicted_bytes"] += self.store.expert_bytes
+        self._slot_data[worker][key] = (
+            payload if payload is not None
+            else self.store.unpack_shard(layer, expert,
+                                         device=self.physical))
         self._occupied[worker].append(key)
         self.stats["loads"] += 1
         self.stats["predicted_loads" if predicted else "reloads"] += 1
         nbytes = self.store.packed_bytes(layer, expert)
         self.bytes_moved += nbytes
+        if self.residency is not None:
+            self.residency.note(key)
         self.events.append(LoadEvent(
             token, layer, expert, worker, predicted,
             nbytes, self._request_context,
             self.profiles[worker] if self.profiles else None,
             self.store.scheme_of(layer, expert)))
+        return True
+
+    # ---------------------------------------------------------- residency
+    def _reactivate(self, worker: int, key: Tuple[int, int]) -> None:
+        """A released resident is used again: un-release in place.  The
+        re-hit saved exactly the packed payload a reload would have
+        moved — no event, no bytes."""
+        self._released[worker].discard(key)
+        self.residency_stats["rehits"] += 1
+        self.residency_stats["rehit_bytes_saved"] += \
+            self.store.packed_bytes(*key)
+        if self.residency is not None:
+            self.residency.note(key)
+
+    def reactivate(self, layer: int, expert: int) -> Optional[int]:
+        """Claim a resident copy of (layer, expert) anywhere in the
+        fleet: re-hit accounting when it was released, plain claim when
+        it is already active.  Returns the hosting worker, or ``None``
+        when nothing is resident (the caller loads normally)."""
+        key = (layer, expert)
+        for w in range(self.n_workers):
+            if self.alive[w] and key in self._slot_data[w]:
+                if key in self._released[w]:
+                    self._reactivate(w, key)
+                return w
+        return None
+
+    def claim_resident(self, layer: int, expert: int, worker: int) -> bool:
+        """Wave-time claim of a known-resident expert on ``worker``:
+        un-release it when released (a reload avoided).  Returns whether
+        a re-hit happened."""
+        key = (layer, expert)
+        if key in self._released[worker]:
+            self._reactivate(worker, key)
+            return True
+        return False
+
+    def is_released(self, worker: int, layer: int, expert: int) -> bool:
+        return (layer, expert) in self._released[worker]
+
+    def release(self, worker: int) -> None:
+        """Opportunistic residency: instead of the cacheless eviction,
+        mark the worker's residents released — they stay in their free
+        slots until displaced and a matching later load re-hits.
+        Without a policy this degrades to ``evict`` (cacheless)."""
+        if self.residency is None:
+            self.evict(worker)
+            return
+        newly = [k for k in self._occupied[worker]
+                 if k not in self._released[worker]]
+        self.residency_stats["released"] += len(newly)
+        self._released[worker].update(newly)
+
+    def observe_gates(self, layer: int, true, gates) -> None:
+        """Feed the router's realized routing into the residency policy
+        (gate-statistics popularity).  Deterministic accumulation order:
+        keys ascending."""
+        if self.residency is None:
+            return
+        mass: Dict[Tuple[int, int], float] = {}
+        t = np.asarray(true)
+        g = np.asarray(gates)
+        for b in range(t.shape[0]):
+            for j in range(t.shape[1]):
+                key = (layer, int(t[b, j]))
+                mass[key] = mass.get(key, 0.0) + abs(float(g[b, j]))
+        for key in sorted(mass):
+            self.residency.credit(key, mass[key])
+
+    def resident_slot_bytes(self, worker: int) -> int:
+        """Full-width device bytes currently held by ``worker``'s
+        occupied slots (active + released residents)."""
+        return len(self._occupied[worker]) * self.store.expert_bytes
 
     def slot(self, worker: int, layer: int, expert: int) -> dict:
         assert self.alive[worker], "dead worker used"
@@ -246,9 +367,15 @@ class WorkerSlots:
     def evict(self, worker: int) -> None:
         """Prompt eviction after the expert computation (cacheless rule):
         drop everything resident on ``worker``."""
-        self.stats["evictions"] += len(self._occupied[worker])
+        n = len(self._occupied[worker])
+        self.stats["evictions"] += n
+        self.residency_stats["evicted_bytes"] += n * self.store.expert_bytes
+        if self.residency is not None:
+            for k in self._occupied[worker]:
+                self.residency.forget(k)
         self._occupied[worker] = []
         self._slot_data[worker] = {}
+        self._released[worker].clear()
 
     # ------------------------------------------------------------ failures
     def fail(self, worker: int) -> None:
@@ -260,8 +387,12 @@ class WorkerSlots:
         self.alive[worker] = False
         self.stats["failures"] += 1
         self.stats["failure_drops"] += len(self._occupied[worker])
+        if self.residency is not None:
+            for k in self._occupied[worker]:
+                self.residency.forget(k)
         self._occupied[worker] = []
         self._slot_data[worker] = {}
+        self._released[worker].clear()
 
     def recover(self, worker: int) -> None:
         """The worker rejoins with empty slots."""

@@ -310,7 +310,21 @@ class DecodeClock:
             # (group-padding loads beyond the known experts price at the
             # policy's default scheme)
             load_done = 0.0
-            if lr is not None and lr.predicted is not None:
+            if (lr is not None and lr.predicted is not None
+                    and lr.shipped is not None):
+                # residency-aware engines record exactly which predicted
+                # experts physically shipped; price those and only those
+                # (a fully re-hit layer starts its waves load-free — the
+                # modeled form of the wall-clock re-hit win).  No group
+                # padding: the record is exact, not an estimate.
+                for j, e in enumerate(lr.shipped):
+                    w = targets[j % len(targets)]
+                    ls = max(pred_avail(li, t - self.t_router),
+                             worker_free[w])
+                    worker_free[w] = ls + self.t_load_for(
+                        w, self._bytes_for(li, int(e)))
+                    load_done = max(load_done, worker_free[w])
+            elif lr is not None and lr.predicted is not None:
                 pred_u = list(dict.fromkeys(
                     int(e) for e in lr.predicted.reshape(-1)))
                 n_loads = max(len(workers), min(len(pred_u), len(targets)))

@@ -3,12 +3,13 @@ profiles, scripted fault injection (kill/recover/throttle at chosen
 decode steps), and a liveness- and link-aware extension of the paper's
 group schedule.  See docs/ARCHITECTURE.md for the failure-injection
 walkthrough."""
-from .faults import FaultEvent, FaultInjector, outage
+from .faults import FaultEvent, FaultInjector, outage, random_fault_script
 from .profile import (DEFAULT_LINK_GBPS, FleetState, WorkerProfile,
                       uniform_profiles)
 from .schedule import FleetSchedule
 
 __all__ = [
     "DEFAULT_LINK_GBPS", "FaultEvent", "FaultInjector", "FleetSchedule",
-    "FleetState", "WorkerProfile", "outage", "uniform_profiles",
+    "FleetState", "WorkerProfile", "outage", "random_fault_script",
+    "uniform_profiles",
 ]

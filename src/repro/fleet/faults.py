@@ -20,6 +20,7 @@ Two hook points mirror where failures bite in Fig. 2's pipeline:
 """
 from __future__ import annotations
 
+import random
 from dataclasses import dataclass
 from typing import List, Optional, Sequence
 
@@ -56,6 +57,42 @@ def outage(worker: int, start_step: int, recover_step: Optional[int] = None,
         if recover_step <= start_step:
             raise ValueError("recover_step must follow start_step")
         events.append(FaultEvent(recover_step, worker, "recover"))
+    return events
+
+
+def random_fault_script(seed: int, n_workers: int, n_steps: int,
+                        n_moe: int, max_kills: Optional[int] = None
+                        ) -> List[FaultEvent]:
+    """A seeded random fault script for chaos runs: step-scoped and
+    mid-wave kills (with optional recovery) plus throttles, bounded so
+    at most ``max_kills`` (default: just under half the fleet) workers
+    are ever dead at once — the engine must always keep enough alive
+    workers to serve a layer.  Deterministic in ``seed``, so a chaos
+    case's whole scenario reproduces from one printed integer."""
+    rng = random.Random(seed)
+    if max_kills is None:
+        max_kills = max(1, (n_workers - 1) // 2)
+    victims = rng.sample(range(n_workers), min(n_workers, max_kills + 2))
+    events: List[FaultEvent] = []
+    kills = 0
+    for w in victims:
+        kind = rng.choice(("kill", "throttle", "none"))
+        if kind == "none":
+            continue
+        step = rng.randint(1, max(1, n_steps - 1))
+        if kind == "throttle":
+            events.append(FaultEvent(step, w, "throttle",
+                                     factor=rng.choice((0.25, 0.5, 2.0))))
+            continue
+        if kills >= max_kills:
+            continue
+        kills += 1
+        moe_index = (rng.randint(0, n_moe - 1)
+                     if n_moe and rng.random() < 0.5 else None)
+        events.append(FaultEvent(step, w, "kill", moe_index=moe_index))
+        if rng.random() < 0.5 and step + 1 < n_steps:
+            events.append(FaultEvent(rng.randint(step + 1, n_steps),
+                                     w, "recover"))
     return events
 
 

@@ -95,6 +95,8 @@ class ServeResult:
     states: Dict[int, RequestState] = field(default_factory=dict)
     n_workers: int = 0
     kv_stats: Optional[Dict] = None      # pool counters + swap seconds
+    prefetch_stats: Optional[Dict] = None  # engine.prefetch_report()
+    #                                       when prefetch/residency ran
 
     @property
     def mean_batch(self) -> float:
@@ -344,8 +346,11 @@ class ServingLoop:
                             num_pages=self.kv_pool.num_pages,
                             page_tokens=self.kv_pool.page_tokens,
                             pool_bytes=self.kv_pool.pool_bytes())
+        prefetch_stats = (eng.prefetch_report()
+                          if (eng.prefetch is not None
+                              or eng.residency is not None) else None)
         return self._result(queue, trace, steps, eng.sched.n_workers,
-                            kv_stats)
+                            kv_stats, prefetch_stats)
 
     # ------------------------------------------------------ composed step
     def _decode_composed(self, batch: List[RequestState],
@@ -420,7 +425,8 @@ class ServingLoop:
     @staticmethod
     def _result(queue: RequestQueue, trace: Trace,
                 steps: List[StepRecord], n_workers: int,
-                kv_stats: Optional[Dict] = None) -> ServeResult:
+                kv_stats: Optional[Dict] = None,
+                prefetch_stats: Optional[Dict] = None) -> ServeResult:
         states = dict(sorted(queue.finished.items()))
         timings = ServingTimings(
             arrival_s=[s.request.arrival_s for s in states.values()],
@@ -431,4 +437,4 @@ class ServingLoop:
                    for rid, s in states.items()}
         return ServeResult(outputs=outputs, timings=timings, trace=trace,
                            steps=steps, states=states, n_workers=n_workers,
-                           kv_stats=kv_stats)
+                           kv_stats=kv_stats, prefetch_stats=prefetch_stats)

@@ -1,0 +1,44 @@
+"""Closed-form timing references shared by the timing / fleet /
+transport test suites.
+
+Instead of pinning per-link ``t_load`` durations to hand-computed
+floats (which go stale the moment a transport codec, link profile or
+residency change alters what crosses the wire), every pin recomputes
+the expected duration from first principles: packed payload bytes over
+effective link bandwidth.  A mismatch then fails with a meaningful
+"payload / bandwidth" diff instead of a bare magic-number mismatch.
+"""
+from repro.fleet import DEFAULT_LINK_GBPS
+from repro.quant import transport_expert_bytes
+
+__all__ = ["DEFAULT_LINK_GBPS", "effective_gbps", "expected_t_load",
+           "link_t_load", "packed_expert_bytes"]
+
+
+def link_t_load(nbytes, gbps, throttle=1.0):
+    """Eq. (1) per-link load time: payload bytes over the link's
+    effective (throttled) bandwidth in GB/s."""
+    return nbytes / (gbps * throttle * 1e9)
+
+
+def packed_expert_bytes(cfg, scheme="fp32", weight_bytes=4):
+    """Wire payload of one expert under a transport scheme — the exact
+    packed-codec byte count, shared with ``DecodeClock`` pricing."""
+    return transport_expert_bytes(cfg, scheme, weight_bytes)
+
+
+def effective_gbps(sched, worker, default_gbps=DEFAULT_LINK_GBPS):
+    """Recompute a fleet worker's effective bandwidth from its declared
+    profile and the shared throttle state, independently of the
+    schedule's own ``link_gbps_of`` path."""
+    prof = sched.profiles[worker]
+    base = prof.link_gbps if prof.link_gbps is not None else default_gbps
+    return base * sched.state.link_scale[worker]
+
+
+def expected_t_load(cfg, sched, worker, scheme="fp32", *, weight_bytes=4,
+                    default_gbps=DEFAULT_LINK_GBPS):
+    """Closed-form per-link expert-load duration: one expert's packed
+    bytes at ``scheme`` over the worker's effective bandwidth."""
+    return link_t_load(packed_expert_bytes(cfg, scheme, weight_bytes),
+                       effective_gbps(sched, worker, default_gbps))

@@ -1,0 +1,156 @@
+"""``concat_cache_lists`` / ``slice_cache_list`` edge cases — empty,
+singleton, multi-member and paged batches, previously only exercised
+indirectly through the serving tests.
+
+The contract: compose-then-slice returns each member's per-layer cache
+tree bit-exactly (dense) or its committed paged handle (paged); empty
+and mixed paged/dense batches are caller bugs with typed errors.
+"""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import tiny_moe
+from repro.core import ODMoEEngine, concat_cache_lists, slice_cache_list
+from repro.models import init_params
+from repro.serve.kvpool import KVPool
+
+CACHE_LEN = 16
+
+
+@functools.lru_cache(maxsize=None)
+def _setup():
+    cfg = tiny_moe()
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    eng = ODMoEEngine(cfg, params, n_workers=8, predictor="none")
+    return cfg, eng
+
+
+def _prefill(eng, prompt, **kw):
+    tokens = np.asarray([prompt], np.int32)
+    _, cache_list, _ = eng.prefill_request({"tokens": tokens}, CACHE_LEN,
+                                           **kw)
+    return cache_list
+
+
+def _tree_equal(a, b):
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    return (len(la) == len(lb)
+            and all(np.array_equal(np.asarray(x), np.asarray(y))
+                    for x, y in zip(la, lb)))
+
+
+def test_concat_empty_batch_raises():
+    with pytest.raises(ValueError, match="empty batch"):
+        concat_cache_lists([])
+
+
+def test_concat_singleton_dense_roundtrip():
+    """A batch of one: composition must copy the list (the step mutates
+    it in place) but preserve every layer tree bit-exactly, and slicing
+    row 0 returns the same trees."""
+    _, eng = _setup()
+    cache = _prefill(eng, list(range(1, 7)))
+    composed = concat_cache_lists([cache])
+    assert composed is not cache
+    assert len(composed) == len(cache)
+    for li in range(len(cache)):
+        assert _tree_equal(composed[li], cache[li])
+    back = slice_cache_list(composed, 0)
+    for li in range(len(cache)):
+        assert _tree_equal(back[li], cache[li])
+
+
+def test_concat_slice_dense_roundtrip():
+    """Three dense members compose along the batch axis and slice back
+    bit-exactly, in member order."""
+    _, eng = _setup()
+    caches = [_prefill(eng, list(range(1 + i, 8 + i))) for i in range(3)]
+    composed = concat_cache_lists(caches)
+    for li in range(len(caches[0])):
+        b = jax.tree.leaves(composed[li])[0].shape[0]
+        assert b == 3
+    for i, cache in enumerate(caches):
+        back = slice_cache_list(composed, i)
+        for li in range(len(cache)):
+            assert _tree_equal(back[li], cache[li]), (i, li)
+
+
+def test_concat_paged_singleton_and_batch():
+    """Paged handles compose into a pool-backed view; slicing returns
+    the member handle itself and the gathered KV matches the dense
+    prefill bit-exactly."""
+    cfg, eng = _setup()
+    pool = KVPool(cfg, num_pages=16, page_tokens=4)
+    window = pool.set_window(CACHE_LEN)
+    dense = [_prefill(eng, list(range(1 + i, 8 + i))) for i in range(2)]
+    handles = []
+    for i in range(2):
+        tokens = np.asarray([list(range(1 + i, 8 + i))], np.int32)
+        _, h, _ = eng.prefill_request({"tokens": tokens}, window,
+                                      kv_pool=pool, rid=i)
+        handles.append(h)
+    solo = concat_cache_lists([handles[0]])
+    assert solo.member(0) is handles[0]
+    both = concat_cache_lists(handles)
+    assert [both.member(i) for i in range(2)] == handles
+    # the composed view gathers each member's KV bit-exactly; compare
+    # the valid prefix (dense prefill used CACHE_LEN, the pool window
+    # may be page-rounded)
+    for li in range(len(dense[0])):
+        got = both[li]
+        for i in range(2):
+            want = dense[i][li]
+            for name in want:
+                w = np.asarray(want[name])
+                g = np.asarray(got[name][i:i + 1])
+                n = min(w.shape[-1] if w.ndim == 2 else w.shape[-2],
+                        g.shape[-1] if g.ndim == 2 else g.shape[-2])
+                if w.ndim == 2:       # pos: (B, W)
+                    assert np.array_equal(g[..., :n], w[..., :n]), name
+                else:                 # k/v: (B, W, H, D)
+                    assert np.array_equal(g[:, :n], w[:, :n]), name
+    # slice commits nothing extra: the member handle round-trips
+    assert slice_cache_list(both, 1) is handles[1]
+
+
+def test_concat_mixed_paged_dense_raises():
+    cfg, eng = _setup()
+    pool = KVPool(cfg, num_pages=16, page_tokens=4)
+    window = pool.set_window(CACHE_LEN)
+    dense = _prefill(eng, list(range(1, 8)))
+    tokens = np.asarray([list(range(1, 8))], np.int32)
+    _, paged, _ = eng.prefill_request({"tokens": tokens}, window,
+                                      kv_pool=pool, rid=9)
+    with pytest.raises(TypeError, match="mix paged and dense"):
+        concat_cache_lists([paged, dense])
+    with pytest.raises(TypeError, match="mix paged and dense"):
+        concat_cache_lists([dense, paged])
+
+
+def test_composed_decode_after_roundtrip_is_bit_exact():
+    """Slicing a composed cache and re-composing it must not perturb a
+    subsequent decode step: decode(compose(slice(compose(...)))) equals
+    decode on the original composition."""
+    from repro.core import TokenRecord
+
+    _, eng = _setup()
+    caches = [_prefill(eng, list(range(2 + i, 9 + i))) for i in range(2)]
+    token = jnp.asarray([3, 4], jnp.int32)
+    pos = jnp.asarray([7, 7], jnp.int32)
+
+    def step(cache_lists):
+        composed = concat_cache_lists(cache_lists)
+        out, _, _ = eng.decode_batch(token, composed, pos, {}, 1,
+                                     TokenRecord(1, False, False))
+        return np.asarray(out)
+
+    once = step(caches)
+    # round-trip each member through compose+slice first
+    rt = [slice_cache_list(concat_cache_lists(caches), i)
+          for i in range(2)]
+    again = step(rt)
+    assert np.array_equal(once, again)

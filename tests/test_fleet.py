@@ -12,6 +12,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from _timing_ref import effective_gbps, link_t_load
 from conftest import tiny_moe
 from repro.configs import get_config
 from repro.core import (RTX3090_EDGE, ExpertStore, GroupSchedule,
@@ -206,10 +207,13 @@ def test_eq1_per_worker_links():
     eb = int(100e6)
     tm, tw = 2e-3, 1e-3
     tmax = s.t_maxload(tm, tw)                 # 4*2ms + 3*1ms = 11 ms
-    assert s.t_load_s(0, eb) == pytest.approx(eb / 24e9)
+    assert s.t_load_s(0, eb) == pytest.approx(
+        link_t_load(eb, effective_gbps(s, 0)))
     assert not s.io_bottlenecked_worker(0, eb, tm, tw)   # ~4.2 ms
     assert s.io_bottlenecked_worker(5, eb, tm, tw)       # ~50 ms
     s.state.throttle(0, 0.25)                  # 24 -> 6 GB/s: ~16.7 ms
+    assert s.t_load_s(0, eb) == pytest.approx(
+        link_t_load(eb, effective_gbps(s, 0)))
     assert s.io_bottlenecked_worker(0, eb, tm, tw)
     assert s.t_load_s(0, eb) > tmax
 

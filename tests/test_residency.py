@@ -1,0 +1,318 @@
+"""Opportunistic expert residency: re-hit/eviction accounting and the
+LRU vs gate-statistics replacement policies (vs brute-force references).
+
+Residency may only remove *loads* — a re-hit appends no event and moves
+zero bytes, displacement frees exactly the slot bytes a load charged —
+and policies must be deterministic (the chaos suite pins byte
+accounting bit-identical across executor schedules, which victim
+choices feed into).
+"""
+import functools
+import random
+
+import jax
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from conftest import tiny_moe
+from repro.core import (ExpertStore, GateStatsResidency, LRUResidency,
+                        ODMoEEngine, WorkerSlots, resolve_residency)
+from repro.models import greedy_generate, init_params
+
+N_TOK = 6
+
+
+@functools.lru_cache(maxsize=None)
+def _model():
+    cfg = tiny_moe()
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    batch_tokens = np.asarray(
+        jax.random.randint(jax.random.PRNGKey(2), (1, 10), 0,
+                           cfg.vocab_size), np.int32)
+    return cfg, params, batch_tokens
+
+
+def _store():
+    cfg, params, _ = _model()
+    return ExpertStore(cfg, params)
+
+
+# -------------------------------------------------------- slot-level
+def test_rehit_skips_reload():
+    """A released resident re-hit: no new LoadEvent, zero bytes moved,
+    exact packed-payload savings recorded."""
+    store = _store()
+    li = store.moe_layers[0]
+    s = WorkerSlots(store, 2, physical=False, residency=LRUResidency())
+    assert s.load(0, li, 3, 0, predicted=True) is True
+    n_ev, n_bytes = len(s.events), s.bytes_moved
+    s.release(0)
+    assert s.is_released(0, li, 3)
+    assert s.load(1, li, 3, 0, predicted=True) is False     # re-hit
+    assert len(s.events) == n_ev                 # no load event
+    assert s.bytes_moved == n_bytes              # zero bytes
+    assert s.residency_stats["rehits"] == 1
+    assert s.residency_stats["rehit_bytes_saved"] == store.packed_bytes(li, 3)
+    assert not s.is_released(0, li, 3)           # active again
+    assert s.stats["loads"] == 1                 # still the single load
+
+
+def test_reactivate_finds_released_resident_anywhere():
+    store = _store()
+    li = store.moe_layers[0]
+    s = WorkerSlots(store, 4, physical=False, residency=LRUResidency())
+    s.load(0, li, 5, 2, predicted=True)
+    s.release(2)
+    assert s.reactivate(li, 5) == 2
+    assert s.residency_stats["rehits"] == 1
+    assert s.reactivate(li, 6) is None
+
+
+def test_eviction_frees_exactly_loaded_bytes():
+    """Displacement and explicit eviction free exactly the full-width
+    slot bytes each load charged — nothing leaks, nothing double-frees."""
+    store = _store()
+    li = store.moe_layers[0]
+    s = WorkerSlots(store, 2, physical=False, residency=LRUResidency())
+    s.load(0, li, 0, 0, predicted=True)
+    s.load(0, li, 1, 1, predicted=True)
+    assert s.resident_slot_bytes(0) == store.expert_bytes
+    s.release(0)
+    s.release(1)
+    # capacity-1 worker 0: a new load displaces the released resident
+    s.load(1, li, 4, 0, predicted=True)
+    assert s.residency_stats["displaced"] == 1
+    assert s.residency_stats["evicted_bytes"] == store.expert_bytes
+    assert s.resident_slot_bytes(0) == store.expert_bytes   # refilled
+    # explicit eviction frees the remaining residents exactly
+    s.evict(0)
+    s.evict(1)
+    assert s.resident_slot_bytes(0) == 0
+    assert s.residency_stats["evicted_bytes"] == 3 * store.expert_bytes
+    total_loaded = s.stats["loads"] * store.expert_bytes
+    assert s.residency_stats["evicted_bytes"] == total_loaded
+
+
+def test_worker_failure_clears_released_residents():
+    store = _store()
+    li = store.moe_layers[0]
+    s = WorkerSlots(store, 2, physical=False, residency=LRUResidency())
+    s.load(0, li, 3, 0, predicted=True)
+    s.release(0)
+    s.fail(0)
+    assert s.stats["failure_drops"] == 1
+    assert s.reactivate(li, 3) is None       # the device is gone
+    s.recover(0)
+    assert s.load(1, li, 3, 0, predicted=True) is True   # real reload
+
+
+def test_release_without_policy_degrades_to_evict():
+    store = _store()
+    li = store.moe_layers[0]
+    s = WorkerSlots(store, 1, physical=False)       # residency=None
+    s.load(0, li, 3, 0, predicted=True)
+    s.release(0)
+    assert s.stats["evictions"] == 1
+    assert s.worker_with(li, 3) is None
+
+
+def test_resolve_residency():
+    assert resolve_residency(None) is None
+    assert isinstance(resolve_residency("lru"), LRUResidency)
+    assert isinstance(resolve_residency("gate"), GateStatsResidency)
+    pol = LRUResidency()
+    assert resolve_residency(pol) is pol
+    with pytest.raises(ValueError):
+        resolve_residency("mru")
+
+
+# ------------------------------------------- brute-force policy parity
+class _BruteLRU:
+    """Independent reference: victim = smallest (last-use time, key)."""
+
+    def __init__(self):
+        self.t = 0
+        self.last = {}
+
+    def use(self, key):
+        self.last[key] = self.t
+        self.t += 1
+
+    def credit(self, key, mass):
+        self.use(key)
+
+    def victim(self, candidates):
+        return min(candidates, key=lambda k: (self.last.get(k, -1), k))
+
+    def forget(self, key):
+        self.last.pop(key, None)
+
+
+class _BruteGate:
+    """Independent reference: victim = smallest (total gate mass,
+    last-use time, key); mass survives displacement."""
+
+    def __init__(self):
+        self.t = 0
+        self.mass = {}
+        self.last = {}
+
+    def use(self, key):
+        self.last[key] = self.t
+        self.t += 1
+
+    def credit(self, key, mass):
+        self.mass[key] = self.mass.get(key, 0.0) + mass
+        self.use(key)
+
+    def victim(self, candidates):
+        return min(candidates, key=lambda k: (self.mass.get(k, 0.0),
+                                              self.last.get(k, -1), k))
+
+    def forget(self, key):
+        self.last.pop(key, None)
+
+
+@given(seed=st.integers(min_value=0, max_value=10**9))
+@settings(max_examples=40)
+def test_policies_agree_with_brute_force(seed):
+    """Random access traces: every victim choice matches the reference
+    implementation, event for event."""
+    rng = random.Random(seed)
+    pairs = [(LRUResidency(), _BruteLRU()),
+             (GateStatsResidency(), _BruteGate())]
+    keys = [(l, e) for l in (1, 3) for e in range(6)]
+    resident = []
+    for _ in range(60):
+        op = rng.random()
+        if op < 0.45 or not resident:
+            key = rng.choice(keys)
+            if key not in resident:
+                resident.append(key)
+            for pol, ref in pairs:
+                pol.note(key)
+                ref.use(key)
+        elif op < 0.75:
+            key = rng.choice(resident)
+            m = rng.uniform(0.0, 1.0)
+            for pol, ref in pairs:
+                pol.credit(key, m)
+                ref.credit(key, m)
+        else:
+            cands = rng.sample(resident,
+                               rng.randint(1, len(resident)))
+            choices = []
+            for pol, ref in pairs:
+                got, want = pol.victim(cands), ref.victim(cands)
+                assert got == want, \
+                    f"seed={seed}: {type(pol).__name__} chose {got}, " \
+                    f"reference {want}"
+                choices.append(got)
+            victim = choices[0]
+            if rng.random() < 0.7:                 # actually displace
+                resident.remove(victim)
+                for pol, ref in pairs:
+                    pol.forget(victim)
+                    ref.forget(victim)
+
+
+def test_policies_agree_with_brute_force_on_engine_trace():
+    """Replay a RECORDED engine trace (realized routing + gates)
+    through both policies and their references: identical victim
+    choices at every displacement decision."""
+    cfg, params, tokens = _model()
+    eng = ODMoEEngine(cfg, params, n_workers=8)
+    _, trace = eng.generate({"tokens": tokens}, N_TOK)
+    accesses = [(lr.layer, int(e), abs(float(lr.gates[b, j])))
+                for rec in trace.records for lr in rec.layers
+                for b in range(lr.true.shape[0])
+                for j, e in enumerate(lr.true[b])]
+    for pol, ref in ((LRUResidency(), _BruteLRU()),
+                     (GateStatsResidency(), _BruteGate())):
+        resident = []
+        for i, (li, e, g) in enumerate(accesses):
+            key = (li, e)
+            if key not in resident:
+                resident.append(key)
+            pol.credit(key, g)
+            ref.credit(key, g)
+            if i % 5 == 4 and len(resident) > 2:
+                cands = resident[-3:]
+                got, want = pol.victim(cands), ref.victim(cands)
+                assert got == want
+                resident.remove(got)
+                pol.forget(got)
+                ref.forget(got)
+
+
+# ------------------------------------------------------- engine-level
+def test_engine_residency_rehits_and_exactness():
+    """The freq predictor re-requests its top experts every token, so
+    residency must convert repeat predictions into re-hits — while
+    tokens stay bit-identical to the greedy reference and bytes_moved
+    drops by exactly the re-hit savings."""
+    cfg, params, tokens = _model()
+    ref = np.asarray(greedy_generate(cfg, params, {"tokens": tokens},
+                                     N_TOK))
+
+    def run(residency):
+        eng = ODMoEEngine(cfg, params, n_workers=8, predictor="freq",
+                          residency=residency)
+        toks, trace = eng.generate({"tokens": tokens}, N_TOK)
+        return np.asarray(toks), eng
+
+    base_toks, base = run(None)
+    res_toks, res = run("lru")
+    assert np.array_equal(base_toks, ref)
+    assert np.array_equal(res_toks, ref)
+    rs = res.slots.residency_stats
+    assert rs["rehits"] > 0
+    # every re-hit saved one load's packed payload, exactly
+    assert (base.slots.bytes_moved - res.slots.bytes_moved
+            == rs["rehit_bytes_saved"])
+    assert (base.slots.stats["loads"] - res.slots.stats["loads"]
+            == rs["rehits"])
+    rep = res.prefetch_report()
+    assert rep["residency"] == "lru"
+    assert rep["rehit_rate"] == pytest.approx(
+        rs["rehits"] / (rs["rehits"] + res.slots.stats["loads"]))
+
+
+def test_engine_residency_policies_bit_identical_tokens():
+    """LRU and gate-stats may schedule different displacements but must
+    produce identical tokens (residency only moves loads)."""
+    cfg, params, tokens = _model()
+    outs = []
+    for residency in (None, "lru", "gate"):
+        eng = ODMoEEngine(cfg, params, n_workers=8, residency=residency)
+        toks, _ = eng.generate({"tokens": tokens}, N_TOK)
+        outs.append(np.asarray(toks))
+    assert np.array_equal(outs[0], outs[1])
+    assert np.array_equal(outs[0], outs[2])
+
+
+def test_engine_shipped_records_exclude_rehits():
+    """``LayerRecord.shipped`` (what DecodeClock prices) lists exactly
+    the predicted experts that physically shipped: shipped + re-hits
+    cover the committed predictions, and every shipped expert has a
+    matching predicted LoadEvent."""
+    cfg, params, tokens = _model()
+    eng = ODMoEEngine(cfg, params, n_workers=8, predictor="freq",
+                      residency="lru")
+    _, trace = eng.generate({"tokens": tokens}, N_TOK)
+    events = {(e.token, e.layer, e.expert) for e in eng.slots.events
+              if e.predicted}
+    saw_rehit = False
+    for rec in trace.records:
+        for lr in rec.layers:
+            assert lr.shipped is not None
+            for e in lr.shipped:
+                assert (rec.index, lr.layer, e) in events
+            if lr.rehits:
+                saw_rehit = True
+                assert len(lr.shipped) < len(
+                    dict.fromkeys(int(x)
+                                  for x in lr.predicted.reshape(-1)))
+    assert saw_rehit

@@ -14,6 +14,7 @@ import numpy as np
 import pytest
 from hypothesis import given, settings, strategies as st
 
+from _timing_ref import effective_gbps, expected_t_load, link_t_load
 from conftest import tiny_moe
 from repro.configs import get_config
 from repro.core import (ExpertStore, GroupSchedule, DecodeClock,
@@ -188,6 +189,12 @@ def test_t_load_scales_exactly_with_packed_bytes():
             for w in range(8):
                 assert clock.t_load_for(w) == pytest.approx(
                     base.t_load_for(w) * ratio, rel=1e-12), (scheme, w)
+                # and absolutely: packed bytes over effective bandwidth
+                assert clock.t_load_for(w) == pytest.approx(
+                    expected_t_load(
+                        full, sched, w, scheme,
+                        default_gbps=RTX3090_EDGE.pcie_gbps),
+                    rel=1e-12), (scheme, w)
     finally:
         sched.state.reset()
     # base (non-fleet) schedules price the same way
@@ -207,13 +214,14 @@ def test_io_boundary_repinned_for_int8():
     b32 = transport_expert_bytes(full, "fp32")
     b8 = transport_expert_bytes(full, "int8")
     # pick a budget between the int8 and fp32 load times on the default
-    # 24 GB/s link: fp32 blows it, int8 hides under it
-    t8, t32 = b8 / 24e9, b32 / 24e9
+    # link: fp32 blows it, int8 hides under it
+    gbps = effective_gbps(sched, 0)
+    t8, t32 = link_t_load(b8, gbps), link_t_load(b32, gbps)
     tm = (t8 + t32) / 2 / 4          # t_maxload = 4*tm + 3*tw, tw=0
     assert sched.io_bottlenecked_worker(0, b32, tm, 0.0)
     assert not sched.io_bottlenecked_worker(0, b8, tm, 0.0)
     # strictness at the exact boundary, in bytes
-    budget_bytes = sched.t_maxload(tm, 0.0) * 24e9
+    budget_bytes = sched.t_maxload(tm, 0.0) * (gbps * 1e9)
     assert not sched.io_bottlenecked_worker(0, budget_bytes, tm, 0.0)
     assert sched.io_bottlenecked_worker(
         0, np.nextafter(budget_bytes, np.inf), tm, 0.0)
