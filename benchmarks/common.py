@@ -68,13 +68,29 @@ def save_artifact(name: str, obj) -> str:
     return path
 
 
-def record_bench(name: str, metrics: dict) -> str:
+def _short_commit(commit) -> str:
+    """Normalize a commit id to git's 7-char short form.  CI exports the
+    FULL sha in ``$BENCH_COMMIT`` while local runs use ``git rev-parse
+    --short`` — without normalization the same commit recorded from both
+    sides produced two series entries that never deduped against each
+    other.  Non-sha values (e.g. "unknown") pass through unchanged."""
+    commit = (commit or "").strip().lower()
+    if len(commit) >= 7 and all(c in "0123456789abcdef" for c in commit):
+        return commit[:7]
+    return commit or "unknown"
+
+
+def record_bench(name: str, metrics: dict, path: str = None) -> str:
     """Append this commit's measured point to the committed perf
     trajectory ``benchmarks/BENCH_<name>.json`` (one entry per commit;
     re-running on the same commit overwrites its point).  The commit id
-    comes from ``$BENCH_COMMIT`` (CI) or ``git rev-parse``; the file is
-    meant to be committed so tokens/s, overlap efficiency and re-hit
-    rate are traceable PR over PR."""
+    comes from ``$BENCH_COMMIT`` (CI, full sha) or ``git rev-parse
+    --short`` (local), both normalized to the short form so the two
+    sources collide instead of duplicating; historic entries are
+    normalized and deduped on the way through (last point per commit
+    wins).  The file is meant to be committed so tokens/s, overlap
+    efficiency and re-hit rate are traceable PR over PR.  ``path``
+    overrides the destination (unit tests)."""
     import subprocess
     commit = os.environ.get("BENCH_COMMIT")
     if not commit:
@@ -85,13 +101,20 @@ def record_bench(name: str, metrics: dict) -> str:
                 cwd=os.path.dirname(__file__)).stdout.strip()
         except Exception:
             commit = "unknown"
-    path = os.path.join(os.path.dirname(__file__), f"BENCH_{name}.json")
+    commit = _short_commit(commit)
+    if path is None:
+        path = os.path.join(os.path.dirname(__file__),
+                            f"BENCH_{name}.json")
     series = []
     if os.path.exists(path):
         with open(path) as f:
             series = json.load(f).get("series", [])
-    series = [p for p in series if p.get("commit") != commit]
-    series.append({"commit": commit, **metrics})
+    deduped: Dict[str, dict] = {}
+    for p in series:
+        q = dict(p, commit=_short_commit(p.get("commit")))
+        deduped[q["commit"]] = q          # later entries win
+    deduped.pop(commit, None)
+    series = list(deduped.values()) + [{"commit": commit, **metrics}]
     with open(path, "w") as f:
         json.dump({"benchmark": name, "series": series}, f, indent=1,
                   default=float)

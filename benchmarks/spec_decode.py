@@ -1,0 +1,160 @@
+"""Speculative decoding: accept-rate and decode tokens/s vs the k=1 path.
+
+The SEP shadow drafts ``k`` tokens per step and one grouped verify wave
+confirms them; the greedy accept-prefix rule keeps every measured run
+token-bit-identical to ``greedy_generate`` (asserted below — the win is
+fewer, wider waves, never different arithmetic).  Two figures:
+
+  * **single-stream** — ``ODMoEEngine.generate(speculate=k)`` decode
+    tokens/s for k in {1, 2, 4} (prefill subtracted, so steady-state
+    TPOT), with the measured acceptance rate from the wave trace;
+  * **composed serving** — a burst through ``ServingLoop`` on a
+    ``speculate=2`` engine, acceptance from ``ServeResult.spec_stats``.
+
+Acceptance is ``committed / drafted`` — the fraction of wave rows the
+verify pass confirmed.  Under per-step alignment the int8 shadow drafts
+this model near-perfectly, so k=4 approaches a 4x wave-count cut; the
+tokens/s speedup is smaller (wider waves cost more than B=1 waves) and
+THAT ratio is what gets recorded per commit in BENCH_spec_decode.json.
+
+    PYTHONPATH=src python -m benchmarks.spec_decode [--smoke]
+
+``--smoke`` (the CI fast job) shortens the budgets; the bit-exactness
+gate and the accept-rate > 0 assertion are absolute at every profile.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import AlignmentPolicy, ODMoEEngine
+from repro.models import greedy_generate
+from repro.serve import Request, ServingLoop
+
+from .common import record_bench, row, save_artifact
+from .decode_wallclock import _PrefillTimedEngine, _TimedServingLoop, \
+    tiny_model
+
+POLICY = AlignmentPolicy(1, 1)       # per-step alignment: the shadow
+#                                      drafts from fresh state, so the
+#                                      measured accept-rate is the
+#                                      model's ceiling, not drift noise
+
+
+# ------------------------------------------------------- single stream
+def spec_stream_point(cfg, params, k, n_tokens, repeats) -> dict:
+    """Decode-only tokens/s and acceptance for one B=1 stream at wave
+    width ``k`` (k=1 is the exact PR 6 one-token path)."""
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (1, 12),
+                                          0, cfg.vocab_size)}
+    ref = np.asarray(greedy_generate(cfg, params, batch, n_tokens))
+
+    def run():
+        eng = _PrefillTimedEngine(
+            cfg, params, n_workers=8, predictor="sep",
+            shadow_scheme="int8", speculate=k)
+        t0 = time.time()
+        toks, trace = eng.generate(batch, n_tokens, POLICY)
+        dt = time.time() - t0 - eng.prefill_wall_s
+        assert np.array_equal(np.asarray(toks), ref), \
+            f"speculate={k} decode diverged from greedy"
+        drafted = sum(r.spec_len for r in trace.records)
+        committed = sum(r.committed for r in trace.records)
+        return dt, len(trace.records), committed / drafted
+
+    run()                              # warm-up: compile at these shapes
+    best = min(run() for _ in range(repeats))
+    dt, waves, accept = best
+    return {"k": k, "tok_s": (n_tokens - 1) / dt, "waves": waves,
+            "accept_rate": accept}
+
+
+# ---------------------------------------------------- composed serving
+def spec_serving_point(cfg, params, k, n_requests, max_new) -> dict:
+    """Aggregate decode tokens/s + acceptance for a burst served on a
+    speculative engine (admission prefill subtracted)."""
+    rng = np.random.default_rng(7)
+    reqs = [Request(rid=i,
+                    prompt=rng.integers(0, cfg.vocab_size,
+                                        int(rng.integers(6, 11))
+                                        ).astype(np.int32),
+                    max_new_tokens=max_new, arrival_s=0.0)
+            for i in range(n_requests)]
+
+    def run():
+        eng = ODMoEEngine(cfg, params, n_workers=8, predictor="sep",
+                          shadow_scheme="int8", speculate=k)
+        loop = _TimedServingLoop(eng, max_batch=n_requests)
+        t0 = time.time()
+        res = loop.run(reqs)
+        return res, time.time() - t0 - loop.admit_wall_s
+
+    run()                              # warm-up: compile at these shapes
+    res, dt = run()
+    for r in reqs:                     # the non-negotiable acceptance bar
+        ref = np.asarray(greedy_generate(
+            cfg, params, {"tokens": jnp.asarray(r.prompt)[None, :]},
+            r.max_new_tokens))[0]
+        assert np.array_equal(ref, res.outputs[r.rid]), \
+            f"request {r.rid} diverged under speculative serving"
+    ss = res.spec_stats
+    assert ss is not None and ss["speculate"] == k
+    decode_tokens = sum(len(v) - 1 for v in res.outputs.values())
+    return {"k": k, "tok_s": decode_tokens / dt,
+            "accept_rate": ss["acceptance"]}
+
+
+def run(fast: bool = True, smoke: bool = False):
+    cfg, params = tiny_model()
+    n_tokens = 8 if smoke else (24 if fast else 48)
+    repeats = 2 if smoke else (3 if fast else 5)
+    ks = (1, 4) if smoke else (1, 2, 4)
+    rows, table = [], {}
+    points = {k: spec_stream_point(cfg, params, k, n_tokens, repeats)
+              for k in ks}
+    base = points[1]
+    for k, p in points.items():
+        p["speedup_x"] = p["tok_s"] / base["tok_s"]
+        table[f"stream/k{k}"] = p
+        for metric in ("tok_s", "accept_rate", "speedup_x"):
+            rows.append(row(f"spec_decode/stream/k{k}/{metric}", 0.0,
+                            round(p[metric], 3)))
+        assert p["accept_rate"] > 0.0, f"k={k}: zero acceptance"
+        assert p["accept_rate"] <= 1.0
+    head = points[max(ks)]
+    n_req, max_new = (3, 4) if smoke else ((4, 8) if fast else (4, 12))
+    srv = spec_serving_point(cfg, params, 2, n_req, max_new)
+    table["serving/k2"] = srv
+    for metric in ("tok_s", "accept_rate"):
+        rows.append(row(f"spec_decode/serving/k2/{metric}", 0.0,
+                        round(srv[metric], 3)))
+    assert srv["accept_rate"] > 0.0, "serving: zero acceptance"
+    record_bench("spec_decode", {
+        "profile": "smoke" if smoke else ("fast" if fast else "full"),
+        "k": head["k"],
+        "accept_rate": head["accept_rate"],
+        "tok_s": head["tok_s"],
+        "baseline_tok_s": base["tok_s"],
+        "speedup_x": head["speedup_x"],
+        "serving_accept_rate": srv["accept_rate"],
+        "serving_tok_s": srv["tok_s"],
+    })
+    if not smoke:
+        save_artifact("spec_decode.json", table)
+    return rows
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="shortened budgets (CI fast job)")
+    ap.add_argument("--full", action="store_true")
+    args = ap.parse_args()
+    for r in run(fast=not args.full, smoke=args.smoke):
+        print(r)
+    print("spec-decode smoke OK: bit-exact, accept-rate > 0"
+          if args.smoke else "done")

@@ -13,6 +13,8 @@ from .prefetch import (ChaosExecutor, GateStatsResidency, LRUResidency,
                        PrefetchExecutor, ResidencyPolicy, SyncExecutor,
                        ThreadedExecutor, make_executor, resolve_residency)
 from .schedule import GroupSchedule
+from .specdecode import (accept_prefix, select_commit, shadow_rollout,
+                         spec_attn_decode, wave_preds)
 from .store import ExpertStore, LoadEvent, WorkerSlots
 from .timing import (RTX3090_EDGE, TPU_V5E, DecodeClock, HardwareProfile,
                      ODMoETimings, ServingTimings, degraded_tpot_report,
@@ -30,7 +32,8 @@ __all__ = [
     "GateStatsResidency", "LRUResidency", "PrefetchExecutor",
     "ResidencyPolicy", "SyncExecutor", "ThreadedExecutor",
     "make_executor", "resolve_residency",
-    "GroupSchedule", "ExpertStore", "LoadEvent",
+    "GroupSchedule", "accept_prefix", "select_commit", "shadow_rollout",
+    "spec_attn_decode", "wave_preds", "ExpertStore", "LoadEvent",
     "WorkerSlots", "RTX3090_EDGE", "TPU_V5E", "DecodeClock",
     "HardwareProfile", "ODMoETimings", "ServingTimings",
     "degraded_tpot_report", "node_memory_report", "poisson_arrivals",

@@ -59,7 +59,10 @@ from repro.quant.transport import resolve_policy, transport_params
 
 from .align import AlignmentPolicy
 from .predictor import (FrequencyPredictor, GateExtrapolator, RandomPredictor,
-                        SEPShadow, moe_layer_indices, recall_counts)
+                        SEPShadow, moe_layer_indices, recall_counts,
+                        slice_rollout)
+from .specdecode import (_spec_block_step, _spec_mixer_router_step,
+                         accept_prefix, select_commit, wave_preds)
 from .prefetch import PrefetchExecutor, make_executor, resolve_residency
 from .schedule import GroupSchedule
 from .store import ExpertStore, WorkerSlots
@@ -92,6 +95,13 @@ class TokenRecord:
     aligned_token: bool
     aligned_kv: bool
     layers: List[LayerRecord] = field(default_factory=list)
+    # speculative verify waves: how many positions the wave carried per
+    # request and how many tokens it actually committed (1/1 for the
+    # classic one-token step — the timing model prices wave width and
+    # benchmarks divide load bytes by COMMITTED tokens, so speculation
+    # waste is visible, never hidden)
+    spec_len: int = 1
+    committed: int = 1
 
 
 @dataclass
@@ -222,11 +232,34 @@ class ODMoEEngine:
                  physical_loading: bool = True, seed: int = 0,
                  profiles=None, faults=None, transport=None,
                  wave_compute: str = "grouped", prefetch=None,
-                 residency=None, peek_horizon: int = 0):
+                 residency=None, peek_horizon: int = 0,
+                 speculate: int = 1):
         if cfg.is_encoder_decoder:
             raise ValueError("engine drives decoder-only models")
         if wave_compute not in ("grouped", "loop"):
             raise ValueError("wave_compute must be 'grouped' or 'loop'")
+        if speculate < 1:
+            raise ValueError("speculate must be >= 1")
+        if speculate > 1:
+            # draft-verify-accept decoding (repro.core.specdecode): the
+            # SEP shadow IS the draft model, the verify wave folds S
+            # positions into the batch axis of the grouped hot path,
+            # and the wave's slots must be distinct within the cache
+            # window.  All other predictors have nothing to draft with.
+            if predictor != "sep":
+                raise ValueError("speculate > 1 requires the SEP shadow "
+                                 "(it is the draft model)")
+            if wave_compute != "grouped":
+                raise ValueError("speculate > 1 requires the grouped "
+                                 "wave path")
+            from repro.models.config import ATTN
+            if any(mixer != ATTN for mixer, _ in cfg.layer_kinds()):
+                raise ValueError("speculate > 1 requires all-attention "
+                                 "mixers (SSM states cannot fork per "
+                                 "wave row)")
+            if cfg.sliding_window and cfg.sliding_window < speculate:
+                raise ValueError("speculate must fit the sliding window")
+        self.speculate = speculate
         if ((prefetch is not None or residency is not None)
                 and wave_compute != "grouped"):
             # the retired loop baseline stays the synchronous oracle
@@ -359,6 +392,11 @@ class ODMoEEngine:
     # ------------------------------------------------------------ generate
     def generate(self, batch, num_tokens: int,
                  policy: AlignmentPolicy = AlignmentPolicy(1, 1)):
+        """End-to-end greedy generation.  ``speculate=1`` decodes one
+        token per step; ``speculate=k`` decodes in draft-verify-accept
+        waves (``repro.core.specdecode``) — same tokens, fewer steps."""
+        if self.speculate > 1:
+            return self._generate_spec(batch, num_tokens, policy)
         cfg = self.cfg
         prompt_len = batch["tokens"].shape[1]
         max_cache_len = prompt_len + num_tokens + 2
@@ -384,6 +422,62 @@ class ODMoEEngine:
                 main_token, cache_list, pos, preds, n, rec)
             tokens_out.append(main_token)
             trace.records.append(rec)
+        return jnp.stack(tokens_out, axis=1), trace
+
+    def _generate_spec(self, batch, num_tokens: int,
+                       policy: AlignmentPolicy):
+        """Speculative generation: the shadow drafts ``speculate``
+        tokens per wave, one verify wave commits the accepted prefix.
+        Tokens are bit-identical to the one-token loop (and therefore
+        to ``greedy_generate``) by the specdecode prefix argument; the
+        batch commits in lockstep (the minimum accepted prefix across
+        rows) so ``pos`` stays uniform, matching the fixed-batch
+        semantics of :meth:`generate`.  The alignment policy and fault
+        scripts see wave-start token indices as their step index —
+        speculation compresses steps, so index ``n`` means "the wave
+        that begins at generated token ``n``"."""
+        prompt_len = batch["tokens"].shape[1]
+        max_cache_len = prompt_len + num_tokens + 2 + self.speculate
+        main_token, cache_list, pos = self.prefill_request(
+            batch, max_cache_len)
+        self.shadow.reset(batch, max_cache_len)
+        tokens_out = [main_token]
+        trace = Trace()
+        n = 1
+        while n < num_tokens:
+            s_w = min(self.speculate, num_tokens - n)
+            at = policy.align_token_at(n)
+            ak = policy.align_kv_at(n)
+            if ak:
+                self.shadow.align_kv(
+                    {"caches": self._stack(cache_list), "pos": pos})
+            first = main_token if at else self.shadow.token
+            st0 = dict(self.shadow.state, token=self.shadow.token)
+            # fused drafting: one scan dispatch for the whole rollout
+            # (arithmetic identical to chained step_state calls —
+            # repro.core.specdecode.shadow_rollout is the serial
+            # spelling the property tests pin it against)
+            drafts, preds_steps, roll = self.shadow.rollout_states(
+                st0, first, s_w)
+            wave_in = jnp.concatenate(
+                [main_token[:, None], drafts.astype(jnp.int32)], axis=1)
+            rec = TokenRecord(index=n, aligned_token=at, aligned_kv=ak,
+                              spec_len=s_w)
+            verified, c, cache_list, pos = self.decode_batch_spec(
+                wave_in, cache_list, pos, wave_preds(preds_steps), n, rec,
+                lockstep=True)
+            ci = int(c[0])               # lockstep: uniform across rows
+            trace.records.append(rec)
+            for s in range(ci):
+                tokens_out.append(verified[:, s])
+            main_token = verified[:, ci - 1]
+            # roll the shadow back to the accepted prefix: step ci-1
+            # consumed exactly [first, true tokens 0..ci-2] — rejected
+            # drafts never entered the surviving shadow KV
+            st = slice_rollout(roll, ci - 1)
+            self.shadow.token = st["token"]
+            self.shadow.state = {"caches": st["caches"], "pos": st["pos"]}
+            n += ci
         return jnp.stack(tokens_out, axis=1), trace
 
     # ---------------------------------------------------------- one token
@@ -447,6 +541,80 @@ class ODMoEEngine:
         if self.prefetch is not None:
             self.prefetch.finish_token(step_idx)
         return (_logits_argmax(cfg)(self.params, x), cache_list, pos + 1)
+
+    # ------------------------------------------------------- verify wave
+    def decode_batch_spec(self, tokens, cache_list, pos, preds, step_idx,
+                          rec: TokenRecord, *, max_commit=None,
+                          lockstep: bool = False):
+        """One draft-verify-accept wave for the (possibly composed)
+        batch — see ``repro.core.specdecode`` for the arithmetic
+        contract.
+
+        ``tokens``: (B, S) wave inputs — column 0 each request's true
+        last committed token, columns 1.. the shadow's drafts;
+        ``preds``: {layer -> (B*S, k)} in wave-row order (row ``b*S+s``
+        = request ``b``, position ``s``).  Expert serving treats the
+        wave as a (B*S)-row batch through the unchanged
+        ``_moe_bookkeeping`` machinery, so loads, faults, prefetch and
+        residency behave exactly as for a composed batch of that size.
+
+        Returns ``(verified (B, S), c (B,), cache_list, pos + c)``:
+        request ``b`` committed ``verified[b, :c_b]``.  ``max_commit``
+        (B,) caps per-request commits (serving token budgets);
+        ``lockstep=True`` commits the batch minimum everywhere (fixed-
+        batch generate).  ``S == 1`` delegates to the classic
+        one-token step — bit-identical by shared code."""
+        cfg = self.cfg
+        b, s_w = tokens.shape
+        if s_w == 1:
+            tok, cache_list, pos = self.decode_batch(
+                tokens[:, 0], cache_list, pos, preds, step_idx, rec)
+            rec.spec_len, rec.committed = 1, b   # uniform accounting
+            return (tok[:, None], jnp.ones((b,), jnp.int32), cache_list,
+                    pos)
+        if self.faults is not None:
+            self.faults.apply(step_idx, self.sched.state, self.slots)
+        x = _embed_token(self.params, tokens.reshape(-1))
+        pos_rows = (pos[:, None]
+                    + jnp.arange(s_w, dtype=pos.dtype)).reshape(-1)
+        pending: Dict[int, np.ndarray] = dict(preds)
+        if self.prefetch is not None and pending:
+            self.prefetch.enqueue(step_idx, 0, pending,
+                                  skip=self._resident_skip())
+        spec_caches: Dict[int, dict] = {}
+        moe_i = -1
+        for li, kinds in enumerate(cfg.layer_kinds()):
+            lp = self._layer_params[li]
+            # each wave row verifies against its own copy of the
+            # request's cache (seeded with the earlier rows' K/V inside
+            # the spec step); the commit below SELECTS the accepted
+            # row, so nothing is written back until acceptance
+            repl = jax.tree.map(lambda a: jnp.repeat(a, s_w, axis=0),
+                                cache_list[li])
+            if kinds[1] != MOE_FF:
+                x, spec_caches[li] = _spec_block_step(cfg, kinds, s_w)(
+                    lp, x, repl, pos_rows)
+                continue
+            moe_i += 1
+            x, spec_caches[li], h, topk_idx, topk_gate = \
+                _spec_mixer_router_step(cfg, kinds, s_w)(
+                    lp, x, repl, pos_rows)
+            true = np.asarray(topk_idx)
+            x = self._moe_bookkeeping(step_idx, li, moe_i, pending, true,
+                                      h, topk_gate, x, rec)
+        if self.prefetch is not None:
+            self.prefetch.finish_token(step_idx)
+        verified = _logits_argmax(cfg)(self.params, x).reshape(b, s_w)
+        c = accept_prefix(tokens, verified)
+        if max_commit is not None:
+            c = jnp.minimum(c, jnp.asarray(max_commit, jnp.int32))
+        if lockstep:
+            c = jnp.full_like(c, jnp.min(c))
+        for li in range(cfg.num_layers):
+            cache_list[li] = select_commit(spec_caches[li], c, s_w)
+        rec.spec_len = s_w
+        rec.committed = int(jnp.sum(c))
+        return verified, c, cache_list, pos + c
 
     def _resident_skip(self):
         """Prefetch skip predicate under residency: an expert that is

@@ -31,6 +31,31 @@ from repro.quant import shadow_params
 
 
 @functools.lru_cache(maxsize=None)
+def _shadow_rollout_step(cfg: ModelConfig, S: int):
+    """Fused ``S``-step shadow rollout: one jitted ``lax.scan`` dispatch
+    instead of ``S`` sequential ``_shadow_step`` dispatches — the
+    drafting hot path of speculative decoding, where per-dispatch
+    overhead would otherwise be paid once per drafted token.  Returns
+    the per-step greedy tokens, routing top-k and cache states stacked
+    on a leading step axis (the caches ARE the per-step states — the
+    rollback target after committing ``c`` is slice ``c - 1``)."""
+    from repro.models.transformer import lm_decode
+
+    def roll(p, tok, caches, pos):
+        def body(carry, _):
+            tok, caches, pos = carry
+            logits, caches, aux = lm_decode(cfg, p, tok, caches, pos,
+                                            moe_method="grouped")
+            nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            return (nxt, caches, pos + 1), (nxt, aux["topk"], caches)
+
+        _, ys = jax.lax.scan(body, (tok, caches, pos), None, length=S)
+        return ys
+
+    return jax.jit(roll)
+
+
+@functools.lru_cache(maxsize=None)
 def _shadow_step(cfg: ModelConfig):
     """One jitted whole-model shadow decode step per architecture.
 
@@ -133,6 +158,26 @@ class SEPShadow:
                    token=jnp.argmax(logits, axis=-1).astype(jnp.int32))
         return topk_to_layer_dict(self.cfg, aux["topk"]), new
 
+    def rollout_states(self, state: dict, token, S: int):
+        """Fused ``S``-step rollout (one jitted scan dispatch — the
+        speculative drafting hot path).  Consumes ``token`` first, then
+        free-runs on the shadow's own greedy continuations.  Returns
+        ``(draft_tokens (B, S-1), preds_steps, stacked)``: arithmetic
+        identical to ``S`` chained :meth:`step_state` calls, but
+        per-step states come back stacked on a leading axis — slice the
+        one you commit to with :func:`slice_rollout` instead of paying
+        ``S`` dispatches up front."""
+        toks, topks, caches = _shadow_rollout_step(self.cfg, S)(
+            self.params, token, state["caches"], state["pos"])
+        arrs = [np.asarray(t) for t in topks]        # (S, R, B, k) each
+        preds_steps = [topk_to_layer_dict(self.cfg,
+                                          tuple(a[s] for a in arrs))
+                       for s in range(S)]
+        drafts = (jnp.moveaxis(toks[:-1], 0, 1) if S > 1
+                  else jnp.zeros((token.shape[0], 0), jnp.int32))
+        stacked = {"caches": caches, "pos": state["pos"], "token": toks}
+        return drafts, preds_steps, stacked
+
     @staticmethod
     def align_kv_state(state: dict, main_state: dict) -> dict:
         """Return ``state`` with caches/pos overwritten by the main
@@ -165,6 +210,16 @@ class SEPShadow:
         implementation; jax arrays are immutable, so adopting the main
         model's cache pytree needs no defensive copy)."""
         self.state = self.align_kv_state(self.state, main_state)
+
+
+def slice_rollout(stacked: dict, s: int) -> dict:
+    """Materialize per-step state ``s`` from a :meth:`rollout_states`
+    stack: the state after consuming ``s + 1`` tokens — exactly what
+    chained ``step_state`` calls would have returned (the rollback
+    target after committing ``c`` is ``slice_rollout(stacked, c - 1)``)."""
+    return {"caches": jax.tree.map(lambda a: a[s], stacked["caches"]),
+            "pos": stacked["pos"] + s + 1,
+            "token": stacked["token"][s]}
 
 
 def concat_shadow_states(states: Sequence[dict]) -> dict:

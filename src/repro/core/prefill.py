@@ -19,6 +19,11 @@ from repro.models.config import ModelConfig
 def prefill_expert_assignment(cfg: ModelConfig, n_workers: int
                               ) -> Dict[int, List[int]]:
     """worker -> experts it hosts for EVERY layer during prefill."""
+    if n_workers < 1:
+        # an empty dict here used to masquerade as a zero-worker fleet
+        # and fail much later inside the timing model
+        raise ValueError(f"prefill needs at least one worker, "
+                         f"got n_workers={n_workers}")
     out: Dict[int, List[int]] = {w: [] for w in range(n_workers)}
     for e in range(cfg.num_experts):
         out[e % n_workers].append(e)
@@ -27,6 +32,13 @@ def prefill_expert_assignment(cfg: ModelConfig, n_workers: int
 
 def split_minibatches(n_tokens: int, n_minibatches: int) -> List[slice]:
     """Contiguous mini-batch slices (Fig. 7b pipelining units)."""
+    if n_minibatches < 1:
+        # surfaces as a bare ZeroDivisionError (or a nonsense negative
+        # split) without this guard
+        raise ValueError(f"n_minibatches must be >= 1, "
+                         f"got {n_minibatches}")
+    if n_tokens < 0:
+        raise ValueError(f"n_tokens must be >= 0, got {n_tokens}")
     sizes = [n_tokens // n_minibatches] * n_minibatches
     for i in range(n_tokens % n_minibatches):
         sizes[i] += 1

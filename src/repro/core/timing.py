@@ -265,6 +265,14 @@ class DecodeClock:
         profile, sched = self.profile, self.sched
         iter_start = t = self.now
         stall = 0.0
+        # --- speculative verify wave (core/specdecode): a wave of
+        # ``spec_len`` positions rides one iteration.  Weight-streaming
+        # stage costs are batch-row invariant (the same contract that
+        # prices composed batches), so the wave's marginal cost is LAN
+        # payload only: every hop that ships one token's activation now
+        # ships ``spec_len`` of them in the same message.
+        spec = int(getattr(rec, "spec_len", 1) or 1)
+        emb_extra = (spec - 1) * self.emb / profile.lan_bps
         # --- shadow late departure (Fig. 5): alignment payload must land
         delay = 0.0
         if self.predictor == "sep":
@@ -273,11 +281,18 @@ class DecodeClock:
             if rec.aligned_token:
                 delay += profile.t_lan(4)
         shadow_start = iter_start + delay
+        # the shadow drafts the wave by rolling itself forward
+        # serially: predictions for the LAST wave position (the ones
+        # the whole wave's loads conservatively wait for) only emerge
+        # after ``spec - 1`` full extra shadow passes
+        draft_delay = ((spec - 1) * len(self.kinds) * self.t_shadow_layer
+                       if self.predictor == "sep" else 0.0)
 
         def pred_avail(layer_idx: int, main_now: float) -> float:
             if self.predictor == "sep":
                 # shadow must itself pass layer `layer_idx`, then notify
-                return (shadow_start + (layer_idx + 1) * self.t_shadow_layer
+                return (shadow_start + draft_delay
+                        + (layer_idx + 1) * self.t_shadow_layer
                         + profile.lan_latency_ms * 1e-3)
             # gate extrapolation: prediction for layer l emerges from the
             # main model's own (l-1)-th layer — i.e. "now"
@@ -287,7 +302,10 @@ class DecodeClock:
         layer_rec = {lr.layer: lr for lr in rec.layers}
         moe_i = -1
         for li, (mixer, ff) in enumerate(self.kinds):
-            t += self.t_main_attn if mixer == ATTN else self.t_main_mamba
+            # t_main_attn bakes in a 2x single-token activation hop;
+            # a verify wave widens each hop's payload
+            t += ((self.t_main_attn + 2 * emb_extra) if mixer == ATTN
+                  else self.t_main_mamba)
             if ff == DENSE_FF:
                 t += self.t_main_dense_ff
                 continue
@@ -370,10 +388,11 @@ class DecodeClock:
                     worker_free[w] = ls + self.t_load_for(
                         w, self._bytes_for(li, e))
                     load_done = max(load_done, worker_free[w])
-            ready = t + profile.t_lan(self.emb)  # embedding reaches workers
+            # the wave's embeddings reach workers in one message
+            ready = t + profile.t_lan(spec * self.emb)
             ec_start = max(ready, load_done)
             stall += max(0.0, ec_start - ready)
-            t = ec_start + self.t_worker
+            t = ec_start + self.t_worker + emb_extra
             for w in workers:
                 worker_free[w] = max(worker_free[w], t)
         t += self.t_head

@@ -51,6 +51,13 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--token-period", type=int, default=1)
     ap.add_argument("--kv-period", type=int, default=1)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--speculate", type=int, default=1,
+                    help="draft-verify wave width k: the SEP shadow "
+                         "drafts k tokens, one grouped wave verifies "
+                         "them, the confirmed prefix commits — tokens "
+                         "stay bit-identical to the reference, waves "
+                         "get wider and fewer (k>1 requires "
+                         "--predictor sep)")
     ap.add_argument("--transport-precision", default="fp32",
                     choices=["fp32", "fp16", "int8", "nf4", "tiered"],
                     help="on-demand expert wire precision (HOBBIT-style "
@@ -122,7 +129,7 @@ def serve_traffic(cfg, params, args) -> None:
     transport = build_transport(cfg, params, args)
     eng = ODMoEEngine(cfg, params, n_workers=args.workers,
                       predictor=args.predictor, shadow_scheme=args.shadow,
-                      transport=transport)
+                      transport=transport, speculate=args.speculate)
     policy = AlignmentPolicy(args.token_period, args.kv_period)
     reqs = make_traffic(cfg, args.requests, args.arrival_rate,
                         prompt_len=args.prompt_len, max_new=args.tokens,
@@ -156,6 +163,11 @@ def serve_traffic(cfg, params, args) -> None:
           f"p99 {rep['tpot_p99_s'] * 1e3:.2f} ms")
     print(f"  throughput: {rep['throughput_tok_s']:.2f} tok/s over "
           f"{rep['makespan_s']:.3f} s makespan")
+    if res.spec_stats is not None:
+        ss = res.spec_stats
+        print(f"  speculation k={ss['speculate']}: acceptance "
+              f"{ss['acceptance']:.3f} over {len(ss['per_request'])} "
+              f"requests")
     # ---- amortization: requests served per physical load
     ev = eng.slots.events
     served = [len(e.requests) for e in ev if e.requests]
@@ -207,7 +219,7 @@ def serve_single(cfg, params, args) -> None:
     transport = build_transport(cfg, params, args)
     eng = ODMoEEngine(cfg, params, n_workers=args.workers,
                       predictor=args.predictor, shadow_scheme=args.shadow,
-                      transport=transport)
+                      transport=transport, speculate=args.speculate)
     policy = AlignmentPolicy(args.token_period, args.kv_period)
     toks, trace = eng.generate(batch, args.tokens, policy)
     ref = greedy_generate(cfg, params, batch, args.tokens,
@@ -219,6 +231,12 @@ def serve_single(cfg, params, args) -> None:
     print(f"  recall (Eq.3): "
           f"{'n/a (no predictions)' if rec is None else f'{rec:.4f}'}   "
           f"reload fraction: {trace.reload_fraction():.4f}")
+    if args.speculate > 1:
+        drafted = sum(r.spec_len for r in trace.records)
+        committed = sum(r.committed for r in trace.records)
+        print(f"  speculation k={args.speculate}: acceptance "
+              f"{committed / max(drafted, 1):.3f} over "
+              f"{len(trace.records)} waves")
     print(f"  loads: {eng.slots.stats}")
     print_transport_stats(eng)
     mem = eng.memory_report()

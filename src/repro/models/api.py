@@ -14,6 +14,7 @@ uniformly:
 """
 from __future__ import annotations
 
+import functools
 from typing import Optional, Tuple
 
 import jax
@@ -21,7 +22,7 @@ import jax.numpy as jnp
 
 from . import encdec as encdec_lib
 from . import transformer as tf_lib
-from .config import ModelConfig
+from .config import ATTN, ModelConfig
 
 
 def init_params(cfg: ModelConfig, key) -> dict:
@@ -67,10 +68,92 @@ def loss_fn(cfg: ModelConfig, params, batch, moe_method: str = "scatter",
 
 
 # ------------------------------------------------------------------ serving
+# Prefill used to trace ``lm_seq`` eagerly per prompt length, so every
+# admission with a new length stalled the serving loop on a fresh
+# compile.  The bucketed path below pads the prompt to the next
+# power-of-two bucket and runs ONE jitted executable per (config,
+# batch, bucket, window) — the true length rides in as a traced
+# argument, the last REAL token's logits are selected inside the jit,
+# and the pad slots' cache entries are invalidated to ``pos = -1``
+# (exactly what an untouched dense-buffer slot holds, so decode's
+# validity mask treats them as empty).  Padding the time axis is
+# bit-exact on this backend: masked scores hit ``exp(NEG_INF - m) = 0``
+# exactly, so the extra softmax terms contribute literal zeros
+# (pinned by tests/test_prefill_bucket.py).
+from .attention import seq_bucket as _prefill_bucket  # shared pow2 grid
+
+
+@functools.lru_cache(maxsize=None)
+def _bucketed_prefill_step(cfg: ModelConfig, batch_size: int, bucket: int,
+                           max_cache_len: int, moe_method: str):
+    """One compiled prefill per (config, batch, length-bucket, window).
+
+    ``cache_info()`` on this factory counts compiles: every shape that
+    determines the executable is part of the key, so misses == XLA
+    compilations (tests pin the count flat across repeated serves)."""
+    def fn(params, tokens_padded, true_len):
+        logits, aux, caches = tf_lib.lm_seq(
+            cfg, params, tokens_padded, make_cache=True,
+            max_cache_len=max_cache_len, moe_method=moe_method)
+        last = jnp.take_along_axis(
+            logits, (true_len - 1)[:, None, None], axis=1)[:, 0]
+        # stacked cache pos lanes are (R, B, W); pad slots hold stored
+        # positions >= the true length — mark them empty
+        fixed = tuple(
+            dict(c, pos=jnp.where(c["pos"] >= true_len[None, :, None], -1,
+                                  c["pos"]))
+            for c in caches)
+        return last, fixed
+    return jax.jit(fn)
+
+
+def prefill_cache_info():
+    """Compile-cache statistics of the bucketed prefill (misses ==
+    compiled executables) — the serving loop's no-per-prompt-recompile
+    guarantee is asserted through this."""
+    return _bucketed_prefill_step.cache_info()
+
+
+def _bucketed_prefill_ok(cfg: ModelConfig, batch, bucket: int,
+                         max_cache_len: int) -> bool:
+    """The padded path is gated to shapes where padding is provably
+    inert: decoder-only, token-only input, every mixer an attention
+    layer (an SSM scan would absorb the pad tokens into its state), the
+    bucket within the cache window, and no sliding window narrower than
+    the bucket (``seed_cache`` keeps the LAST ``window`` positions,
+    which would be pads)."""
+    if cfg.is_encoder_decoder or batch.get("frontend_embeds") is not None:
+        return False
+    if any(mixer != ATTN for mixer, _ in cfg.layer_kinds()):
+        return False
+    if bucket > max_cache_len:
+        return False
+    if cfg.sliding_window and cfg.sliding_window < bucket:
+        return False
+    return True
+
+
 def prefill(cfg: ModelConfig, params, batch, max_cache_len: int,
             moe_method: str = "scatter"):
-    """Process the prompt; return (last-token logits, decode state)."""
+    """Process the prompt; return (last-token logits, decode state).
+
+    Decoder-only all-attention models take the bucketed jit path (see
+    above); everything else falls back to the eager per-length trace.
+    Both produce bit-identical logits and caches, so callers — the
+    reference decoder, the engine, the SEP shadow — never observe which
+    path ran."""
     tokens = batch["tokens"]
+    if not cfg.is_encoder_decoder:
+        b, t = tokens.shape
+        bucket = _prefill_bucket(t)
+        if _bucketed_prefill_ok(cfg, batch, bucket, max_cache_len):
+            padded = jnp.pad(tokens, ((0, 0), (0, bucket - t)))
+            true_len = jnp.full((b,), t, jnp.int32)
+            logits, caches = _bucketed_prefill_step(
+                cfg, b, bucket, max_cache_len, moe_method)(
+                    params, padded, true_len)
+            return logits, {"caches": caches,
+                            "pos": jnp.full((b,), t, jnp.int32)}
     if cfg.is_encoder_decoder:
         enc_out = encdec_lib.encode(cfg, params, batch["frontend_embeds"])
         memories = encdec_lib.build_memories(cfg, params, enc_out)

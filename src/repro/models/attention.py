@@ -24,6 +24,18 @@ from .layers import _dense_init, apply_rope
 
 NEG_INF = -1e30
 
+SEQ_BUCKET_MIN = 8
+
+
+def seq_bucket(n: int) -> int:
+    """Smallest power-of-two >= n (floored at ``SEQ_BUCKET_MIN``) — the
+    shared length-bucket grid of full-seq attention and the jitted
+    prefill (``models/api.py``)."""
+    b = SEQ_BUCKET_MIN
+    while b < n:
+        b *= 2
+    return b
+
 
 # --------------------------------------------------------------------- init
 def init_attention(key, cfg: ModelConfig, cross: bool = False) -> dict:
@@ -117,6 +129,20 @@ def attn_seq(cfg: ModelConfig, params, x, positions, *, causal: bool = True,
     if window:
         mask = mask & (qi - kj < window)
     scores = jnp.where(mask, scores, NEG_INF)
+    # Pin the softmax reduction length: pad the key axis to the pow2
+    # bucket the jitted prefill pads prompts to.  XLA's reduction tree
+    # depends on the axis LENGTH even when the extra terms are exact
+    # zeros, so without this an exact-length prompt and its bucket-
+    # padded twin disagree in the last float bits; with it the summation
+    # runs over identical shapes and identical values for every real
+    # query row, and padded-vs-unpadded bit-exactness holds by
+    # construction (tests/test_prefill_bucket.py).
+    s_len = scores.shape[-1]
+    s_pad = seq_bucket(s_len) - s_len
+    if s_pad:
+        scores = jnp.pad(scores, ((0, 0),) * 4 + ((0, s_pad),),
+                         constant_values=NEG_INF)
+        v = jnp.pad(v, ((0, 0), (0, s_pad), (0, 0), (0, 0)))
     probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
     return _gqa_out(cfg, probs, v, params)
 

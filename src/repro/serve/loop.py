@@ -3,18 +3,30 @@
 Each outer iteration: (1) resume preempted requests and admit deferred
 ones as KV pages free up, then admit every request whose arrival time
 the virtual clock has passed, running real prefill on admission (the
-first token falls out of prefill, so TTFT = admission wait + prefill);
+first token falls out of prefill, so TTFT = admission wait + prefill;
+prefill executables are cached per pow2 prompt-length bucket, see
+``repro.models.api.prefill``); with ``prefill_chunk=N`` long prompts
+instead admit as *prefilling* placeholders whose modeled prefill cost
+is paid one N-token chunk per iteration — prefill interleaves with
+decode waves on the clock instead of stalling the batch, and the one
+real bucketed prefill runs at the final chunk (chunked cache-extension
+is not bitwise on this backend, time-slicing the clock is);
 (2) refresh the runnable requests' SEP *peeks* — every request lacking
 one is aligned per-request, composed, and stepped as ONE batched shadow
 dispatch (``_ensure_peeks``) that yields each request's next-token
 prediction without committing any shadow, so waiting requests never
-drift; (3) let the
+drift (with ``engine.speculate=k`` the composed shadow instead rolls
+out ``k`` draft steps, caching per-request predictions, drafts and the
+per-step shadow snapshots); (3) let the
 ``BatchComposer`` pick <= max_batch requests, preferring overlapping
-predicted expert sets; (4) run one composed ``decode_batch`` through
-the engine — shared worker fleet, shared expert store, load events
-tagged with the batch's request ids — and charge its duration on the
-``DecodeClock``; (5) split the batch back into per-request states,
-commit the participants' shadow states, and retire finished requests.
+predicted expert sets; (4) run one composed ``decode_batch`` (or, when
+speculating, a ``decode_batch_spec`` verify wave over ``B*k`` rows)
+through the engine — shared worker fleet, shared expert store, load
+events tagged with the batch's request ids — and charge its duration
+on the ``DecodeClock``; (5) split the batch back into per-request
+states — under speculation each request independently commits its
+accepted prefix (capped by its remaining budget) and rolls its shadow
+back to the matching snapshot — and retire finished requests.
 
 Correctness and time are deliberately co-simulated: admission depends on
 the clock, the clock depends on the composed traces, and both share one
@@ -65,7 +77,7 @@ from repro.core import (AlignmentPolicy, DecodeClock, LayerRecord,
                         TokenRecord, Trace, concat_cache_lists,
                         concat_shadow_states, degraded_tpot_report,
                         slice_cache_list, slice_shadow_state,
-                        simulate_prefill_odmoe)
+                        simulate_prefill_odmoe, wave_preds)
 from repro.core.predictor import recall_counts
 from repro.core.timing import HardwareProfile
 from .composer import BatchComposer
@@ -97,6 +109,11 @@ class ServeResult:
     kv_stats: Optional[Dict] = None      # pool counters + swap seconds
     prefetch_stats: Optional[Dict] = None  # engine.prefetch_report()
     #                                       when prefetch/residency ran
+    # speculative decoding (engine speculate > 1): aggregate and
+    # per-request draft acceptance — {"speculate", "waves", "committed",
+    # "acceptance", "per_request": {rid: {...}}}.  None when serving
+    # decoded one token per step.
+    spec_stats: Optional[Dict] = None
 
     @property
     def mean_batch(self) -> float:
@@ -123,7 +140,8 @@ class ServingLoop:
                  profile: HardwareProfile = RTX3090_EDGE,
                  policy: AlignmentPolicy = AlignmentPolicy(1, 1),
                  max_seq_len: int = 0,
-                 kv_pool: Optional[KVPool] = None):
+                 kv_pool: Optional[KVPool] = None,
+                 prefill_chunk: int = 0):
         self.engine = engine
         self.kv_pool = kv_pool
         self.composer = composer or BatchComposer(max_batch,
@@ -133,6 +151,15 @@ class ServingLoop:
         self.profile = profile
         self.policy = policy
         self.max_seq_len = max_seq_len
+        # speculative wave width rides on the engine (speculate=k);
+        # the loop only orchestrates peek rollout + per-request commits
+        self.speculate = getattr(engine, "speculate", 1)
+        # prompts longer than ``prefill_chunk`` admit as time-sliced
+        # chunks (0 disables): modeled prefill cost charges one chunk
+        # per serving iteration so running requests' decode waves
+        # interleave with it; the REAL bucketed prefill runs once at
+        # the final chunk — chunking shapes time, never arithmetic
+        self.prefill_chunk = max(0, int(prefill_chunk))
 
     # ------------------------------------------------------------- admit
     def _admit(self, req: Request, cache_len: int, clock: DecodeClock
@@ -162,17 +189,84 @@ class ServingLoop:
             state.shadow_state = eng.shadow.prefill_state(batch, cache_len)
         return state
 
-    def _admission_fits(self, req: Request) -> bool:
+    def _pool_fits_prompt(self, req: Request) -> bool:
         pool = self.kv_pool
         return pool is None or pool.can_alloc(pool.pages_for(len(req.prompt)))
 
+    def _is_chunked(self, req: Request) -> bool:
+        return bool(self.prefill_chunk
+                    and len(req.prompt) > self.prefill_chunk)
+
+    def _admission_fits(self, req: Request) -> bool:
+        # a chunked prompt holds no pages until its final chunk, so it
+        # always admits; the page claim is deferred to finalize
+        return self._is_chunked(req) or self._pool_fits_prompt(req)
+
     def _admit_or_retire(self, req: Request, cache_len: int,
                          clock: DecodeClock, queue: RequestQueue) -> None:
+        if self._is_chunked(req):
+            n, c = len(req.prompt), self.prefill_chunk
+            chunks = [c] * (n // c) + ([n % c] if n % c else [])
+            state = RequestState(request=req, token=None, cache_list=[],
+                                 pos=None, admit_s=clock.now,
+                                 prefilling=True, prefill_chunks=chunks)
+            state.admit_seq = self._admit_seq
+            self._admit_seq += 1
+            queue.activate(state)
+            return
         state = self._admit(req, cache_len, clock)
         queue.activate(state)
         if state.done:                       # max_new_tokens == 1
             state.finish_s = clock.now
             self._retire(state, queue)
+
+    # ------------------------------------------------ chunked prefill
+    def _advance_prefills(self, queue: RequestQueue, clock: DecodeClock,
+                          cache_len: int) -> bool:
+        """Charge one prefill chunk per mid-prefill request (admission
+        order), finalizing those whose last chunk just landed: the real
+        bucketed prefill runs once over the WHOLE prompt — identical
+        arithmetic to unchunked admission — while the modeled clock
+        already paid chunk by chunk, interleaved with decode waves."""
+        progressed = False
+        for state in queue.prefilling():
+            if state.prefill_chunks:
+                chunk = state.prefill_chunks.pop(0)
+                t_pre = simulate_prefill_odmoe(
+                    self.engine.cfg, self.profile, chunk,
+                    n_workers=self.engine.sched.n_workers)
+                clock.charge_prefill(t_pre)
+                progressed = True
+            if not state.prefill_chunks:
+                progressed |= self._finalize_prefill(state, cache_len,
+                                                     clock, queue)
+        return progressed
+
+    def _finalize_prefill(self, state: RequestState, cache_len: int,
+                          clock: DecodeClock,
+                          queue: RequestQueue) -> bool:
+        """Run the real prefill for a fully-charged chunked admission.
+        Pool pages are claimed here; on a full pool the request simply
+        stays in the prefilling set and retries as retirements free
+        pages (its TTFT absorbs the wait, like a deferred admission)."""
+        req = state.request
+        if not self._pool_fits_prompt(req):
+            return False
+        eng = self.engine
+        batch = {"tokens": jnp.asarray(req.prompt)[None, :]}
+        token, cache_list, pos = eng.prefill_request(
+            batch, cache_len, kv_pool=self.kv_pool,
+            rid=req.rid if self.kv_pool is not None else None)
+        state.token, state.cache_list, state.pos = token, cache_list, pos
+        state.first_token_s = clock.now
+        state.generated.append(int(token[0]))
+        state.prefilling = False
+        if eng.shadow is not None:
+            state.shadow_state = eng.shadow.prefill_state(batch, cache_len)
+        if state.done:                       # max_new_tokens == 1
+            state.finish_s = clock.now
+            self._retire(state, queue)
+        return True
 
     def _retire(self, state: RequestState, queue: RequestQueue) -> None:
         if self.kv_pool is not None:
@@ -215,7 +309,9 @@ class ServingLoop:
         for state in batch:
             if state.preempted:              # lost its pages to an older
                 continue                     # member this very step
-            need_slots = int(state.pos[0]) + 1
+            # a verify wave may commit up to ``speculate`` new slots;
+            # reserve conservatively (pages are monotonic anyway)
+            need_slots = int(state.pos[0]) + self.speculate
             while True:
                 try:
                     pool.ensure(state.rid, need_slots)
@@ -241,7 +337,16 @@ class ServingLoop:
         composed step is sliced back per request, and the resulting peek
         is cached until the request actually takes that step
         (composition must not advance shadows — a request that sits out
-        the next batch keeps its peek)."""
+        the next batch keeps its peek).
+
+        With speculation (engine ``speculate=S``) the peek is a DRAFT
+        ROLLOUT: the composed shadow steps ``S`` times (each step one
+        batched dispatch), collecting per-step predictions, per-step
+        snapshots (the rollback targets) and the draft tokens for wave
+        positions 1..S-1.  After a wave commits ``c`` tokens the
+        request's shadow lands on ``snapshots[c-1]`` — the state that
+        consumed exactly the accepted tokens — so rejected drafts never
+        survive in any shadow KV."""
         eng = self.engine
         if eng.shadow is None:
             return
@@ -264,10 +369,22 @@ class ServingLoop:
                                 else sh["token"]))
             flags.append((at, ak))
         composed = concat_shadow_states(aligned)
-        preds, new = eng.shadow.step_state(composed, composed["token"])
+        preds_steps, snapshots = [], []
+        st, tok = composed, composed["token"]
+        for _ in range(self.speculate):
+            preds, st = eng.shadow.step_state(st, tok)
+            preds_steps.append(preds)
+            snapshots.append(st)
+            tok = st["token"]             # the shadow's greedy draft
         for i, (state, (at, ak)) in enumerate(zip(need, flags)):
-            preds_i = {li: p[i:i + 1] for li, p in preds.items()}
-            state.pending = (preds_i, slice_shadow_state(new, i), at, ak)
+            p_i = [{li: p[i:i + 1] for li, p in ps.items()}
+                   for ps in preds_steps]
+            s_i = [slice_shadow_state(s, i) for s in snapshots]
+            drafts = (jnp.stack([s["token"][i:i + 1]
+                                 for s in snapshots[:-1]], axis=1)
+                      if self.speculate > 1
+                      else jnp.zeros((1, 0), jnp.int32))
+            state.pending = (p_i, s_i, at, ak, drafts)
 
     # --------------------------------------------------------------- run
     def run(self, requests: Sequence[Request]) -> ServeResult:
@@ -314,6 +431,9 @@ class ServingLoop:
                     continue
                 self._admit_or_retire(req, cache_len, clock, queue)
                 progressed = True
+            if self.prefill_chunk:
+                progressed |= self._advance_prefills(queue, clock,
+                                                     cache_len)
             runnable = queue.runnable()
             if not runnable:
                 nxt = queue.next_arrival_s()
@@ -349,32 +469,66 @@ class ServingLoop:
         prefetch_stats = (eng.prefetch_report()
                           if (eng.prefetch is not None
                               or eng.residency is not None) else None)
+        spec_stats = None
+        if self.speculate > 1:
+            per = {rid: {"waves": s.spec_waves,
+                         "committed": s.spec_committed,
+                         "acceptance": (s.spec_committed
+                                        / (s.spec_waves * self.speculate)
+                                        if s.spec_waves else 0.0)}
+                   for rid, s in sorted(queue.finished.items())}
+            tw = sum(v["waves"] for v in per.values())
+            tc = sum(v["committed"] for v in per.values())
+            spec_stats = {"speculate": self.speculate, "waves": tw,
+                          "committed": tc,
+                          "acceptance": (tc / (tw * self.speculate)
+                                         if tw else 0.0),
+                          "per_request": per}
         return self._result(queue, trace, steps, eng.sched.n_workers,
-                            kv_stats, prefetch_stats)
+                            kv_stats, prefetch_stats, spec_stats)
 
     # ------------------------------------------------------ composed step
     def _decode_composed(self, batch: List[RequestState],
                          clock: DecodeClock, trace: Trace,
                          steps: List[StepRecord], step: int) -> None:
+        """One composed iteration: a classic one-token step when
+        ``speculate == 1``, else one draft-verify-accept wave.  Requests
+        commit INDEPENDENT accepted prefixes (capped by their remaining
+        token budgets); each lands its shadow on the snapshot matching
+        its own commit, so a rejection invalidates exactly that
+        request's unconsumed drafts and nothing else."""
         eng = self.engine
-        token = jnp.concatenate([s.token for s in batch])
+        S = self.speculate
         pos = jnp.concatenate([s.pos for s in batch])
         caches = concat_cache_lists([s.cache_list for s in batch])
         preds: Dict[int, np.ndarray] = {}
         at = ak = False
         if eng.shadow is not None:
-            per_req = [s.pending[0] for s in batch]
+            # wave-row order b*S + s (== batch order for S == 1)
+            per_req = [wave_preds(s.pending[0]) for s in batch]
             for li in per_req[0]:
                 preds[li] = np.concatenate([p[li] for p in per_req])
             at = any(s.pending[2] for s in batch)
             ak = any(s.pending[3] for s in batch)
+        if S > 1:
+            # column 0 the true last token, columns 1.. the drafts
+            tokens = jnp.concatenate(
+                [jnp.concatenate([s.token[:, None],
+                                  s.pending[4].astype(jnp.int32)], axis=1)
+                 for s in batch])
+            budget = jnp.asarray(
+                [s.request.max_new_tokens - len(s.generated)
+                 for s in batch], jnp.int32)
+        else:
+            tokens = jnp.concatenate([s.token for s in batch])[:, None]
+            budget = None
         # index == the engine step counter (also what fault events and
         # trace replays compare against), exactly as in generate()
         rec = TokenRecord(index=step, aligned_token=at, aligned_kv=ak)
         eng.slots.set_request_context([s.rid for s in batch])
         start = clock.now
-        new_token, caches, pos = eng.decode_batch(
-            token, caches, pos, preds, step, rec)
+        verified, commits, caches, pos = eng.decode_batch_spec(
+            tokens, caches, pos, preds, step, rec, max_commit=budget)
         eng.slots.set_request_context(())
         duration, stall = clock.step(rec)
         trace.records.append(rec)
@@ -386,39 +540,50 @@ class ServingLoop:
                                 kv_pages_used=(self.kv_pool.pages_used
                                                if self.kv_pool is not None
                                                else -1)))
+        sl = rec.spec_len                     # wave rows per request
         for i, state in enumerate(batch):
-            state.token = new_token[i:i + 1]
+            ci = int(commits[i])
+            state.token = verified[i, ci - 1:ci]
             state.cache_list = slice_cache_list(caches, i)
             state.pos = pos[i:i + 1]
-            state.generated.append(int(new_token[i]))
+            state.generated.extend(int(t) for t in verified[i, :ci])
             if state.pending is not None:
-                state.shadow_state = state.pending[1]
+                # rollback to the snapshot that consumed exactly the
+                # accepted tokens — the peek's rejected drafts die here
+                state.shadow_state = state.pending[1][ci - 1]
             state.pending = None
+            state.spec_waves += 1
+            state.spec_committed += ci
+            lo = i * sl                       # this request's wave rows;
+            #                                   only accepted ones count
             state.last_experts = frozenset(
                 (lr.layer, int(e)) for lr in rec.layers
-                for e in lr.true[i].reshape(-1))
-            sliced = self._slice_record(rec, i)
-            sliced.index = len(state.generated) - 1   # request-local n
+                for e in lr.true[lo:lo + ci].reshape(-1))
+            sliced = self._slice_record(rec, lo, lo + ci)
+            sliced.index = len(state.generated) - ci  # wave-start n
             state.trace.records.append(sliced)
 
     @staticmethod
-    def _slice_record(rec: TokenRecord, i: int) -> TokenRecord:
-        """Request ``i``'s view of a composed record.  Loads/reloads are
-        shared across the batch, so per-request records carry routing and
-        recall only (reloads=0, assignments=[]); load accounting lives in
-        the composed-step trace and the worker-slot event log."""
+    def _slice_record(rec: TokenRecord, lo: int, hi: int) -> TokenRecord:
+        """One request's view of a composed record: its accepted wave
+        rows ``lo:hi`` (a single row for non-speculative steps).
+        Loads/reloads are shared across the batch, so per-request
+        records carry routing and recall only (reloads=0,
+        assignments=[]); load accounting lives in the composed-step
+        trace and the worker-slot event log."""
         out = TokenRecord(index=rec.index, aligned_token=rec.aligned_token,
-                          aligned_kv=rec.aligned_kv)
+                          aligned_kv=rec.aligned_kv, spec_len=hi - lo,
+                          committed=hi - lo)
         for lr in rec.layers:
-            pred_i = None if lr.predicted is None else lr.predicted[i:i + 1]
-            true_i = lr.true[i:i + 1]
+            pred_i = None if lr.predicted is None else lr.predicted[lo:hi]
+            true_i = lr.true[lo:hi]
             out.layers.append(LayerRecord(
                 layer=lr.layer, moe_index=lr.moe_index, group=lr.group,
                 predicted=pred_i, true=true_i,
                 correct=(recall_counts(pred_i, true_i)
                          if pred_i is not None else 0),
                 reloads=0, assignments=[],
-                gates=None if lr.gates is None else lr.gates[i:i + 1]))
+                gates=None if lr.gates is None else lr.gates[lo:hi]))
         return out
 
     # ------------------------------------------------------------ result
@@ -426,7 +591,8 @@ class ServingLoop:
     def _result(queue: RequestQueue, trace: Trace,
                 steps: List[StepRecord], n_workers: int,
                 kv_stats: Optional[Dict] = None,
-                prefetch_stats: Optional[Dict] = None) -> ServeResult:
+                prefetch_stats: Optional[Dict] = None,
+                spec_stats: Optional[Dict] = None) -> ServeResult:
         states = dict(sorted(queue.finished.items()))
         timings = ServingTimings(
             arrival_s=[s.request.arrival_s for s in states.values()],
@@ -437,4 +603,5 @@ class ServingLoop:
                    for rid, s in states.items()}
         return ServeResult(outputs=outputs, timings=timings, trace=trace,
                            steps=steps, states=states, n_workers=n_workers,
-                           kv_stats=kv_stats, prefetch_stats=prefetch_stats)
+                           kv_stats=kv_stats, prefetch_stats=prefetch_stats,
+                           spec_stats=spec_stats)

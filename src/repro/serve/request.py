@@ -50,11 +50,17 @@ class RequestState:
     cache_list: list              # per-layer caches, batch axis 1
     pos: object                   # (1,) absolute position (jax)
     shadow_state: Optional[dict] = None
-    # cached shadow peek: (preds {layer: (1,k)}, next_shadow_state,
-    # aligned_token, aligned_kv) — valid until the next committed step.
-    # Produced by ServingLoop._ensure_peeks, which steps every peek-less
-    # runnable request's shadow as one composed batch and slices this
-    # request's share back out.
+    # cached shadow peek: (preds_steps, snapshots, aligned_token,
+    # aligned_kv, drafts) — valid until the next committed step.
+    # ``preds_steps[s]`` maps layer -> (1, k) predicted experts for the
+    # request's next-next... (s-th lookahead) decode position and
+    # ``snapshots[s]`` is the request's shadow state after consuming
+    # ``s + 1`` tokens; both are length 1 without speculation and
+    # length ``speculate`` with it, where ``drafts`` (1, S-1) carries
+    # the shadow's draft tokens for wave positions 1..S-1.  Produced by
+    # ServingLoop._ensure_peeks, which rolls every peek-less runnable
+    # request's shadow as one composed batch per lookahead step and
+    # slices this request's share back out.
     pending: Optional[tuple] = None
     generated: List[int] = field(default_factory=list)
     last_experts: FrozenSet[Tuple[int, int]] = frozenset()
@@ -70,6 +76,18 @@ class RequestState:
     # because resume restores the decode state bit-for-bit.
     admit_seq: int = -1
     preempted: bool = False
+    # chunked prefill (ServingLoop(prefill_chunk=...)): a long prompt is
+    # admitted as time-sliced chunks — one chunk's modeled prefill cost
+    # charges per serving iteration, so decode waves of running requests
+    # interleave with the newcomer's prefill.  The request is not
+    # runnable (and holds no KV pages) until the last chunk, where the
+    # REAL bucketed prefill runs once — chunking shapes time, never
+    # arithmetic.
+    prefilling: bool = False
+    prefill_chunks: List[int] = field(default_factory=list)
+    # speculative decoding acceptance counters (ServeResult.spec_stats)
+    spec_waves: int = 0
+    spec_committed: int = 0
 
     @property
     def rid(self) -> int:
@@ -77,16 +95,20 @@ class RequestState:
 
     @property
     def done(self) -> bool:
-        return len(self.generated) >= self.request.max_new_tokens
+        return (not self.prefilling
+                and len(self.generated) >= self.request.max_new_tokens)
 
     def predicted_experts(self) -> FrozenSet[Tuple[int, int]]:
         """(layer, expert) set this request is predicted to activate on
-        its next decode step — the composer's overlap signature.  Falls
-        back to the previous step's true routing when no SEP peek is
-        available (non-SEP predictors)."""
+        its next decode step (union over the wave's positions when
+        speculating — every draft position's experts load) — the
+        composer's overlap signature.  Falls back to the previous
+        step's true routing when no SEP peek is available (non-SEP
+        predictors)."""
         if self.pending is not None:
-            preds = self.pending[0]
-            return frozenset((li, int(e)) for li, p in preds.items()
+            return frozenset((li, int(e))
+                             for preds in self.pending[0]
+                             for li, p in preds.items()
                              for e in p.reshape(-1))
         return self.last_experts
 
@@ -147,8 +169,15 @@ class RequestQueue:
     def runnable(self) -> List[RequestState]:
         """Active requests eligible for the next composed iteration, in
         admission order (the composer's FIFO tie-break).  Preempted
-        requests hold no KV pages and sit out until resumed."""
-        return [s for s in self.active if not s.done and not s.preempted]
+        requests hold no KV pages and sit out until resumed; chunk-
+        prefilling requests have no decode state yet."""
+        return [s for s in self.active
+                if not s.done and not s.preempted and not s.prefilling]
+
+    def prefilling(self) -> List[RequestState]:
+        """Requests mid chunked-prefill, admission order."""
+        return sorted((s for s in self.active if s.prefilling),
+                      key=lambda s: s.admit_seq)
 
     def preempted(self) -> List[RequestState]:
         """Swapped-out requests awaiting resume, oldest admission

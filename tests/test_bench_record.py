@@ -1,0 +1,96 @@
+"""record_bench commit normalization + series dedup (benchmarks/common).
+
+CI exports the FULL sha in ``$BENCH_COMMIT`` while local runs use ``git
+rev-parse --short HEAD``; before normalization the same commit measured
+from both sides left two entries in the committed BENCH_*.json series
+that never overwrote each other.  These tests pin the short-sha
+normalization, the overwrite-on-same-commit contract, and the cleanup
+of historic full-sha entries.
+"""
+import json
+import os
+import sys
+
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), os.pardir))
+from benchmarks.common import _short_commit, record_bench  # noqa: E402
+
+FULL = "0123456789abcdef0123456789abcdef01234567"
+
+
+def test_short_commit_normalizes_full_sha():
+    assert _short_commit(FULL) == FULL[:7]
+    assert _short_commit(FULL[:7]) == FULL[:7]
+    assert _short_commit(FULL[:12]) == FULL[:7]
+    assert _short_commit("ABCDEF0") == "abcdef0"
+
+
+def test_short_commit_passes_non_sha_through():
+    assert _short_commit("unknown") == "unknown"
+    assert _short_commit(None) == "unknown"
+    assert _short_commit("  ") == "unknown"
+    # too short to be a usable sha prefix -> passed through, not padded
+    assert _short_commit("abc") == "abc"
+
+
+def _series(path):
+    with open(path) as f:
+        return json.load(f)["series"]
+
+
+def test_ci_and_local_runs_share_one_entry(tmp_path, monkeypatch):
+    """A CI run (full sha) then a local re-run (short sha) of the same
+    commit must end as ONE series point, the later one."""
+    path = str(tmp_path / "BENCH_x.json")
+    monkeypatch.setenv("BENCH_COMMIT", FULL)
+    record_bench("x", {"tok_s": 1.0}, path=path)
+    monkeypatch.setenv("BENCH_COMMIT", FULL[:7])
+    record_bench("x", {"tok_s": 2.0}, path=path)
+    series = _series(path)
+    assert len(series) == 1
+    assert series[0] == {"commit": FULL[:7], "tok_s": 2.0}
+
+
+def test_rerun_same_commit_overwrites(tmp_path, monkeypatch):
+    path = str(tmp_path / "BENCH_x.json")
+    monkeypatch.setenv("BENCH_COMMIT", "aaaaaaa")
+    record_bench("x", {"v": 1}, path=path)
+    record_bench("x", {"v": 2}, path=path)
+    monkeypatch.setenv("BENCH_COMMIT", "bbbbbbb")
+    record_bench("x", {"v": 3}, path=path)
+    series = _series(path)
+    assert [(p["commit"], p["v"]) for p in series] == [("aaaaaaa", 2),
+                                                       ("bbbbbbb", 3)]
+
+
+def test_historic_full_sha_entries_deduped(tmp_path, monkeypatch):
+    """Pre-fix files may hold the same commit under full AND short sha;
+    one pass through record_bench collapses them (last wins)."""
+    path = str(tmp_path / "BENCH_x.json")
+    with open(path, "w") as f:
+        json.dump({"benchmark": "x", "series": [
+            {"commit": FULL, "v": 1},
+            {"commit": "1234567890abcdef" + "0" * 24, "v": 5},
+            {"commit": FULL[:7], "v": 2},
+        ]}, f)
+    monkeypatch.setenv("BENCH_COMMIT", "fffffff")
+    record_bench("x", {"v": 9}, path=path)
+    series = _series(path)
+    assert [(p["commit"], p["v"]) for p in series] == [
+        (FULL[:7], 2), ("1234567", 5), ("fffffff", 9)]
+
+
+def test_unknown_commit_without_git(tmp_path, monkeypatch):
+    """No $BENCH_COMMIT and no git -> 'unknown', still one entry."""
+    path = str(tmp_path / "BENCH_x.json")
+    monkeypatch.delenv("BENCH_COMMIT", raising=False)
+    import subprocess
+
+    def boom(*a, **k):
+        raise OSError("no git")
+    monkeypatch.setattr(subprocess, "run", boom)
+    record_bench("x", {"v": 1}, path=path)
+    record_bench("x", {"v": 2}, path=path)
+    series = _series(path)
+    assert series == [{"commit": "unknown", "v": 2}]

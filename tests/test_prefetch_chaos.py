@@ -166,6 +166,44 @@ def test_chaos_schedules_are_distinct():
     assert len(logs) >= 9
 
 
+# ----------------------------------------------------- speculative chaos
+@pytest.mark.parametrize("seed", [0, 1, 2, 3])
+def test_chaos_spec_schedule(seed):
+    """Speculative verify waves under chaos schedules + mid-run faults:
+    tokens stay bit-identical to greedy, and the async run matches the
+    synchronous speculative engine on tokens, event log, byte
+    accounting and per-wave acceptance."""
+    cfg, params, tokens = _model()
+    rng = random.Random(seed + 500)
+    k = rng.choice([2, 4])
+    residency = rng.choice(RESIDENCIES)
+    faults = random_fault_script(seed + 500, 8, N_TOK, 3)
+
+    def run(executor):
+        eng = ODMoEEngine(cfg, params, n_workers=8, speculate=k,
+                          residency=residency,
+                          faults=FaultInjector(faults), prefetch=executor)
+        try:
+            toks, trace = eng.generate({"tokens": tokens}, N_TOK)
+        finally:
+            eng.close()
+        log = tuple((e.token, e.layer, e.expert, e.worker, e.predicted,
+                     e.bytes) for e in eng.slots.events)
+        commits = tuple(r.committed for r in trace.records)
+        return np.asarray(toks), log, eng.slots.bytes_moved, commits
+
+    base = run(None)
+    chaos = run(ChaosExecutor(seed + 500, p_drop=0.3, p_defer=0.3))
+    why = (f"spec chaos seed={seed} k={k} residency={residency!r}; "
+           f"replay with seed+500={seed + 500}")
+    ref = _reference_tokens(None)
+    assert np.array_equal(base[0], ref), f"sync spec vs greedy: {why}"
+    assert np.array_equal(chaos[0], ref), f"async spec vs greedy: {why}"
+    assert base[1] == chaos[1], f"event log diverged: {why}"
+    assert base[2] == chaos[2], f"bytes diverged: {why}"
+    assert base[3] == chaos[3], f"acceptance diverged: {why}"
+
+
 # --------------------------------------------------- serving-loop chaos
 @pytest.mark.parametrize("seed", [0, 1, 2, 3])
 def test_serving_chaos_schedule(seed):

@@ -1,0 +1,150 @@
+"""Bucketed prefill jit-cache: one compile per (config, length-bucket),
+bit-exact against the eager per-length path.
+
+The serving loop used to re-trace ``lm_seq`` for every new prompt
+length; the bucketed path pads prompts to a pow2 bucket and reuses ONE
+jitted executable per (config, batch, bucket, window).  Bit-exactness
+of the padded run is NOT free on this backend: XLA's softmax reduction
+produces different float bits when the reduced key axis merely changes
+LENGTH (even with exact-zero extra terms), so ``attn_seq`` pins the
+key-axis reduction to the same pow2 grid (``seq_bucket``) for every
+sequence length — making padded and unpadded prefill share identical
+reduction shapes by construction.  These tests pin both properties.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import tiny_dense, tiny_moe
+from repro.models import init_params
+from repro.models.api import (_bucketed_prefill_step, decode_step,
+                              greedy_generate, prefill, prefill_cache_info)
+from repro.models.attention import SEQ_BUCKET_MIN, seq_bucket
+from repro.models.transformer import lm_seq
+
+
+def test_seq_bucket_grid():
+    assert seq_bucket(1) == SEQ_BUCKET_MIN
+    assert seq_bucket(SEQ_BUCKET_MIN) == SEQ_BUCKET_MIN
+    assert seq_bucket(SEQ_BUCKET_MIN + 1) == 2 * SEQ_BUCKET_MIN
+    assert seq_bucket(30) == 32
+    assert seq_bucket(32) == 32
+    assert seq_bucket(33) == 64
+
+
+def _prefill_state(cfg, params, tokens, cache_len):
+    return prefill(cfg, params, {"tokens": tokens}, cache_len,
+                   moe_method="grouped")
+
+
+@pytest.mark.parametrize("make_cfg", [tiny_moe, tiny_dense],
+                         ids=["moe", "dense"])
+def test_one_compile_per_bucket(make_cfg, key):
+    """Repeated prefills of varying lengths compile once per bucket and
+    hit the jit cache for every same-bucket length."""
+    cfg = make_cfg(num_layers=2)
+    params = init_params(cfg, key)
+    cache_len = 64
+    _bucketed_prefill_step.cache_clear()
+    lengths = [3, 5, 8, 11, 16, 13, 30, 32, 7, 27]
+    buckets = set()
+    for i, t in enumerate(lengths):
+        toks = jax.random.randint(jax.random.fold_in(key, i), (1, t),
+                                  0, cfg.vocab_size)
+        _prefill_state(cfg, params, toks, cache_len)
+        buckets.add(seq_bucket(t))
+        info = prefill_cache_info()
+        assert info.misses == len(buckets), (t, info)
+    info = prefill_cache_info()
+    assert info.misses == len(buckets)
+    assert info.hits == len(lengths) - len(buckets)
+
+
+def test_padded_bucket_bit_exact_vs_eager(key):
+    """The bucketed executable's logits, cache positions and valid KV
+    slots equal the eager per-length trace bit for bit, for lengths on
+    and off the bucket grid."""
+    cfg = tiny_moe(num_layers=2)
+    params = init_params(cfg, key)
+    cache_len = 48
+    for t in (3, 7, 8, 9, 13, 16, 30, 32):
+        toks = jax.random.randint(jax.random.fold_in(key, t), (1, t),
+                                  0, cfg.vocab_size)
+        logits_b, state_b = _prefill_state(cfg, params, toks, cache_len)
+        logits_e, _, caches_e = lm_seq(
+            cfg, params, toks, make_cache=True, max_cache_len=cache_len,
+            moe_method="grouped")
+        assert jnp.array_equal(logits_b, logits_e[:, -1]), t
+        for cb, ce in zip(state_b["caches"], caches_e):
+            assert jnp.array_equal(cb["pos"], ce["pos"]), t
+            valid = np.asarray(cb["pos"]) >= 0
+            assert np.array_equal(np.asarray(cb["k"])[valid],
+                                  np.asarray(ce["k"])[valid]), t
+            assert np.array_equal(np.asarray(cb["v"])[valid],
+                                  np.asarray(ce["v"])[valid]), t
+
+
+def test_bucketed_prefill_decode_continuation_bit_exact(key):
+    """Decoding from a bucketed-prefill state reproduces the eager
+    path's continuation token-bit-exactly (pad slots must be invisible
+    to the decode validity mask)."""
+    cfg = tiny_moe(num_layers=2)
+    params = init_params(cfg, key)
+    cache_len = 48
+    for t in (6, 11, 30):
+        toks = jax.random.randint(jax.random.fold_in(key, t), (1, t),
+                                  0, cfg.vocab_size)
+        logits_b, state_b = _prefill_state(cfg, params, toks, cache_len)
+        logits_e, _, caches_e = lm_seq(
+            cfg, params, toks, make_cache=True, max_cache_len=cache_len,
+            moe_method="grouped")
+        state_e = {"caches": caches_e,
+                   "pos": jnp.full((1,), t, jnp.int32)}
+        tok_b = jnp.argmax(logits_b, axis=-1).astype(jnp.int32)
+        tok_e = jnp.argmax(logits_e[:, -1], axis=-1).astype(jnp.int32)
+        assert jnp.array_equal(tok_b, tok_e)
+        for _ in range(4):
+            logits_b, state_b = decode_step(cfg, params, tok_b, state_b)
+            logits_e, state_e = decode_step(cfg, params, tok_e, state_e)
+            assert jnp.array_equal(logits_b, logits_e), t
+            tok_b = jnp.argmax(logits_b, axis=-1).astype(jnp.int32)
+            tok_e = jnp.argmax(logits_e, axis=-1).astype(jnp.int32)
+
+
+def test_greedy_generate_unchanged_by_bucket_boundary(key):
+    """Crossing a bucket boundary (len 8 vs 9) changes the executable,
+    never the tokens: both paths match a fresh greedy run."""
+    cfg = tiny_moe(num_layers=2)
+    params = init_params(cfg, key)
+    for t in (8, 9):
+        toks = jax.random.randint(jax.random.fold_in(key, t), (1, t),
+                                  0, cfg.vocab_size)
+        out1 = greedy_generate(cfg, params, {"tokens": toks}, 6)
+        out2 = greedy_generate(cfg, params, {"tokens": toks}, 6)
+        assert jnp.array_equal(out1, out2)
+
+
+def test_serving_compile_count_flat_across_runs(key):
+    """A second serve over new prompt lengths in the SAME buckets adds
+    zero compiles — the no-per-prompt-recompile guarantee."""
+    from repro.core import ODMoEEngine
+    from repro.serve.loop import ServingLoop
+    from repro.serve.request import Request
+
+    cfg = tiny_moe(num_layers=2)
+    params = init_params(cfg, key)
+    rng = np.random.default_rng(11)
+
+    def serve(lengths):
+        eng = ODMoEEngine(cfg, params, n_workers=4)
+        loop = ServingLoop(eng, max_batch=2, max_seq_len=48)
+        reqs = [Request(rid=i, prompt=rng.integers(
+                    0, cfg.vocab_size, n).astype(np.int32),
+                    max_new_tokens=3) for i, n in enumerate(lengths)]
+        loop.run(reqs)
+
+    serve([5, 9, 12])                      # buckets 8, 16, 16
+    misses = prefill_cache_info().misses
+    serve([6, 10, 15])                     # same buckets, new lengths
+    assert prefill_cache_info().misses == misses

@@ -1,6 +1,7 @@
 """Prefill-stage helpers (§3.3) + batched expert activation claim."""
 import jax
 import numpy as np
+import pytest
 
 from conftest import tiny_moe
 from repro.core.prefill import (experts_activated, prefill_expert_assignment,
@@ -23,6 +24,27 @@ def test_split_minibatches():
     assert [s.stop - s.start for s in sl] == [3, 3, 2, 2]
     assert sl[0].start == 0 and sl[-1].stop == 10
     assert split_minibatches(2, 4) == [slice(0, 1), slice(1, 2)]
+
+
+@pytest.mark.parametrize("bad", [0, -1, -4])
+def test_split_minibatches_rejects_nonpositive(bad):
+    """Used to raise a bare ZeroDivisionError for 0 and silently produce
+    a nonsense split for negatives."""
+    with pytest.raises(ValueError, match="n_minibatches"):
+        split_minibatches(10, bad)
+
+
+def test_split_minibatches_rejects_negative_tokens():
+    with pytest.raises(ValueError, match="n_tokens"):
+        split_minibatches(-1, 2)
+
+
+@pytest.mark.parametrize("bad", [0, -2])
+def test_expert_assignment_rejects_no_workers(bad):
+    """Used to return an empty dict that failed far later inside the
+    timing model's worker loops."""
+    with pytest.raises(ValueError, match="worker"):
+        prefill_expert_assignment(tiny_moe(), bad)
 
 
 def test_batched_prefill_activates_most_experts(key):

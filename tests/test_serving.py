@@ -411,3 +411,58 @@ def test_composer_validation():
         BatchComposer(policy="nope")
     with pytest.raises(ValueError):
         Request(rid=0, prompt=np.arange(3), max_new_tokens=0)
+
+
+# ------------------------------------------- peek lifetime across preemption
+@slow
+@pytest.mark.parametrize("policy", [(1, 1), (3, 5), (0, 0)],
+                         ids=["always", "periodic", "never"])
+def test_peek_survives_preemption_bitexact(model, policy):
+    """A cached SEP peek held across preemption + resume must stay
+    valid: resume restores the decode state byte-exactly, so the
+    prediction (and the shadow snapshot inside ``pending``) still
+    describes the request's next step — invalidating it would only
+    waste a shadow dispatch.  This pins that audit under every
+    ``align_kv_at`` flavor: every preemption victim actually HELD a
+    live peek (peeks are refreshed before composition, preemption
+    happens after), and every token stream still equals the solo
+    greedy run."""
+    from repro.core import AlignmentPolicy
+
+    cfg, params = model
+    # the proven preemption-forcing mix of the half-dense-budget test
+    rng = np.random.default_rng(1)
+    reqs = [Request(rid=i,
+                    prompt=rng.integers(0, cfg.vocab_size,
+                                        int(rng.integers(5, 12))
+                                        ).astype(np.int32),
+                    max_new_tokens=int(rng.integers(6, 10)),
+                    arrival_s=0.0)
+            for i in range(4)]
+    cache_len = max(len(r.prompt) + r.max_new_tokens for r in reqs) + 2
+    page_tokens = 4
+    window_pages = -(-cache_len // page_tokens)
+    num_pages = window_pages * len(reqs) // 2      # 1/2 dense footprint
+    pool = KVPool(cfg, num_pages=num_pages, page_tokens=page_tokens)
+    eng = ODMoEEngine(cfg, params, n_workers=8, predictor="sep",
+                      shadow_scheme="int8")
+    loop = ServingLoop(eng, max_batch=4, kv_pool=pool,
+                       policy=AlignmentPolicy(*policy))
+    held_peek = []
+    orig_preempt = ServingLoop._preempt
+
+    def spy(self, state, clock):
+        held_peek.append(state.pending is not None)
+        orig_preempt(self, state, clock)
+
+    ServingLoop._preempt = spy
+    try:
+        res = loop.run(reqs)
+    finally:
+        ServingLoop._preempt = orig_preempt
+    assert res.kv_stats["preemptions"] >= 1
+    assert held_peek and all(held_peek), \
+        "every victim should carry its peek across the swap gap"
+    for r in reqs:
+        assert np.array_equal(solo_reference(cfg, params, r),
+                              res.outputs[r.rid]), (r.rid, policy)

@@ -1,0 +1,219 @@
+"""Shadow-drafted speculative decoding (repro.core.specdecode).
+
+The invariant everything here pins: speculation changes WHEN tokens
+appear (fewer, wider verify waves), never WHICH tokens appear — every
+path is token-bit-identical to ``greedy_generate`` / the one-token
+engine loop, for every wave width and alignment policy.  Acceptance
+bookkeeping (TokenRecord.spec_len/committed, ServeResult.spec_stats)
+is what the benchmarks and the timing model consume.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import tiny_moe
+from repro.core import AlignmentPolicy, ODMoEEngine, accept_prefix, \
+    select_commit
+from repro.models import greedy_generate, init_params
+from repro.serve import Request, ServingLoop
+
+slow = pytest.mark.slow
+
+CFG = tiny_moe(num_layers=4)
+
+
+@pytest.fixture(scope="module")
+def model():
+    return CFG, init_params(CFG, jax.random.PRNGKey(0))
+
+
+# ------------------------------------------------------------------ units
+def test_accept_prefix_rules():
+    drafts = np.array([[7, 3, 5],     # wave inputs: [last_tok, d1, d2]
+                       [7, 3, 5],
+                       [7, 3, 5],
+                       [7, 9, 9]])
+    verified = np.array([[3, 5, 8],   # all drafts confirmed -> commit 3
+                         [3, 4, 8],   # d2 (5) != v1 (4)     -> commit 2
+                         [4, 5, 8],   # d1 (3) != v0 (4)     -> commit 1
+                         [9, 9, 2]])  # all confirmed again  -> commit 3
+    c = np.asarray(accept_prefix(drafts, verified))
+    assert c.tolist() == [3, 2, 1, 3]
+
+
+def test_accept_prefix_single_column_always_one():
+    c = accept_prefix(np.array([[5], [6]]), np.array([[9], [1]]))
+    assert np.asarray(c).tolist() == [1, 1]
+
+
+def test_accept_prefix_no_resurrection_after_mismatch():
+    """A later coincidental match must NOT extend the prefix past the
+    first mismatch (cumprod, not sum)."""
+    drafts = np.array([[7, 3, 5, 8]])
+    verified = np.array([[3, 9, 5, 1]])   # v0==d1, v1!=d2, v2==d3
+    assert np.asarray(accept_prefix(drafts, verified)).tolist() == [2]
+
+
+def test_select_commit_picks_accepted_row():
+    S = 3
+    cache = {"k": jnp.arange(2 * S)[:, None] * jnp.ones((1, 4))}
+    picked = select_commit(cache, jnp.array([2, 3]), S)
+    assert np.asarray(picked["k"][:, 0]).tolist() == [1.0, 5.0]
+
+
+# --------------------------------------------------------- fused drafting
+def test_fused_rollout_matches_serial(model):
+    """``SEPShadow.rollout_states`` (one scan dispatch) is arithmetic-
+    identical to S chained ``step_state`` calls — drafts, per-step
+    predictions and every per-step state bit, so the engine's fused
+    drafting path and the serving loop's serial peek path draft the
+    same tokens from the same state."""
+    from repro.core.predictor import SEPShadow, slice_rollout
+    from repro.core.specdecode import shadow_rollout
+
+    cfg, params = model
+    shadow = SEPShadow(cfg, params, scheme="int8")
+    toks = jax.random.randint(jax.random.PRNGKey(3), (2, 6), 0,
+                              cfg.vocab_size)
+    st = shadow.prefill_state({"tokens": toks}, 24)
+    first = st["token"]
+    for S in (1, 3, 4):
+        d_f, p_f, roll = shadow.rollout_states(st, first, S)
+        d_s, p_s, states = shadow_rollout(shadow, st, first, S)
+        assert jnp.array_equal(d_f, d_s), S
+        for pf, ps in zip(p_f, p_s):
+            assert pf.keys() == ps.keys()
+            for li in pf:
+                assert np.array_equal(pf[li], ps[li]), (S, li)
+        for s in range(S):
+            sf = slice_rollout(roll, s)
+            assert jnp.array_equal(sf["token"], states[s]["token"])
+            assert jnp.array_equal(sf["pos"], states[s]["pos"])
+            for cf, cs in zip(sf["caches"], states[s]["caches"]):
+                for k in cf:
+                    assert jnp.array_equal(cf[k], cs[k]), (S, s, k)
+
+
+# ------------------------------------------------------------ constructor
+def test_engine_speculate_guards(model):
+    cfg, params = model
+    with pytest.raises(ValueError, match="speculate"):
+        ODMoEEngine(cfg, params, n_workers=4, speculate=0)
+    with pytest.raises(ValueError, match="SEP"):
+        ODMoEEngine(cfg, params, n_workers=4, predictor="gate",
+                    speculate=2)
+    with pytest.raises(ValueError, match="grouped"):
+        ODMoEEngine(cfg, params, n_workers=4, wave_compute="loop",
+                    speculate=2)
+
+
+# ------------------------------------------------------- engine bit-exact
+@slow
+@pytest.mark.parametrize("k", [2, 4])
+def test_engine_spec_bitexact_vs_greedy(model, k):
+    """generate(speculate=k) emits the same token stream as the
+    reference greedy loop, aligned or free-running, including a budget
+    that is not a multiple of the wave width."""
+    cfg, params = model
+    rng = np.random.default_rng(5)
+    batch = {"tokens": jnp.asarray(
+        rng.integers(0, cfg.vocab_size, (2, 7)).astype(np.int32))}
+    num_tokens = 9                          # 9 % k != 0 for both widths
+    ref = np.asarray(greedy_generate(cfg, params, batch, num_tokens))
+    for pol in (AlignmentPolicy(1, 1), AlignmentPolicy(3, 5),
+                AlignmentPolicy(0, 0)):
+        eng = ODMoEEngine(cfg, params, n_workers=4, speculate=k)
+        out, trace = eng.generate(batch, num_tokens, policy=pol)
+        assert np.array_equal(np.asarray(out), ref), (k, pol)
+        # acceptance bookkeeping: every wave commits 1..spec_len per
+        # row, and the committed total is exactly the generated tokens
+        assert all(1 <= r.committed <= r.spec_len * 2
+                   for r in trace.records)
+        total = sum(r.committed // 2 for r in trace.records)
+        assert total == num_tokens - 1      # first token fell out of
+        #                                     prefill, waves did the rest
+
+
+@slow
+def test_engine_spec_fewer_steps_when_accepting(model):
+    """Under per-step alignment the int8 shadow drafts perfectly on
+    this model: wave count drops to ceil((n-1)/k) — the TPOT win the
+    timing model prices."""
+    cfg, params = model
+    rng = np.random.default_rng(9)
+    batch = {"tokens": jnp.asarray(
+        rng.integers(0, cfg.vocab_size, (1, 6)).astype(np.int32))}
+    eng1 = ODMoEEngine(cfg, params, n_workers=4, speculate=1)
+    _, tr1 = eng1.generate(batch, 9, policy=AlignmentPolicy(1, 1))
+    eng4 = ODMoEEngine(cfg, params, n_workers=4, speculate=4)
+    _, tr4 = eng4.generate(batch, 9, policy=AlignmentPolicy(1, 1))
+    assert len(tr4.records) < len(tr1.records)
+    assert any(r.committed > 1 for r in tr4.records)
+
+
+# ------------------------------------------------------ serving bit-exact
+@slow
+def test_serving_spec_bitexact_with_stats(model):
+    """Composed speculative serving: per-request streams equal the solo
+    greedy runs; ServeResult.spec_stats reports aggregate and
+    per-request acceptance."""
+    cfg, params = model
+    rng = np.random.default_rng(7)
+    prompts = [rng.integers(0, cfg.vocab_size, n).astype(np.int32)
+               for n in (6, 11, 9)]
+    budgets = [8, 5, 7]
+    reqs = [Request(rid=i, prompt=p, max_new_tokens=b,
+                    arrival_s=0.02 * i)
+            for i, (p, b) in enumerate(zip(prompts, budgets))]
+    eng = ODMoEEngine(cfg, params, n_workers=4, speculate=2)
+    res = ServingLoop(eng, max_batch=3).run(reqs)
+    for r in reqs:
+        ref = np.asarray(greedy_generate(
+            cfg, params, {"tokens": jnp.asarray(r.prompt)[None, :]},
+            r.max_new_tokens))[0]
+        assert np.array_equal(res.outputs[r.rid], ref), r.rid
+        assert len(res.outputs[r.rid]) == r.max_new_tokens
+    ss = res.spec_stats
+    assert ss is not None and ss["speculate"] == 2
+    assert 0.0 < ss["acceptance"] <= 1.0
+    assert set(ss["per_request"]) == {r.rid for r in reqs}
+    for r in reqs:
+        pr = ss["per_request"][r.rid]
+        # first token fell out of prefill; waves committed the rest
+        assert pr["committed"] == r.max_new_tokens - 1
+        assert 1 <= pr["waves"] <= pr["committed"] or pr["committed"] == 0
+
+
+@slow
+def test_serving_non_spec_has_no_spec_stats(model):
+    cfg, params = model
+    reqs = [Request(rid=0, prompt=np.arange(5, dtype=np.int32),
+                    max_new_tokens=3)]
+    eng = ODMoEEngine(cfg, params, n_workers=4)
+    res = ServingLoop(eng, max_batch=1).run(reqs)
+    assert res.spec_stats is None
+
+
+@slow
+def test_serving_spec_with_chunked_prefill_bitexact(model):
+    """Speculation + time-sliced prefill admission compose: chunking
+    shapes the clock, speculation shapes the waves, tokens shift for
+    neither."""
+    cfg, params = model
+    rng = np.random.default_rng(13)
+    reqs = [Request(rid=i,
+                    prompt=rng.integers(0, cfg.vocab_size, n)
+                    .astype(np.int32),
+                    max_new_tokens=6, arrival_s=0.01 * i)
+            for i, n in enumerate((13, 5, 9))]
+    eng = ODMoEEngine(cfg, params, n_workers=4, speculate=4)
+    res = ServingLoop(eng, max_batch=3, prefill_chunk=4).run(reqs)
+    for r in reqs:
+        ref = np.asarray(greedy_generate(
+            cfg, params, {"tokens": jnp.asarray(r.prompt)[None, :]},
+            r.max_new_tokens))[0]
+        assert np.array_equal(res.outputs[r.rid], ref), r.rid
+    # TTFT ordering stays sane: chunked prompts still got first tokens
+    assert all(f >= a for f, a in zip(res.timings.first_token_s,
+                                      res.timings.arrival_s))
