@@ -18,8 +18,9 @@ from .specdecode import (accept_prefix, select_commit, shadow_rollout,
 from .store import ExpertStore, LoadEvent, WorkerSlots
 from .timing import (RTX3090_EDGE, TPU_V5E, DecodeClock, HardwareProfile,
                      ODMoETimings, ServingTimings, degraded_tpot_report,
-                     node_memory_report, poisson_arrivals, simulate_cached,
-                     simulate_cpu, simulate_odmoe, simulate_offload_cache,
+                     latency_percentiles, node_memory_report,
+                     poisson_arrivals, simulate_cached, simulate_cpu,
+                     simulate_odmoe, simulate_offload_cache,
                      simulate_prefill_cached, simulate_prefill_odmoe,
                      synthetic_trace)
 
@@ -36,7 +37,8 @@ __all__ = [
     "spec_attn_decode", "wave_preds", "ExpertStore", "LoadEvent",
     "WorkerSlots", "RTX3090_EDGE", "TPU_V5E", "DecodeClock",
     "HardwareProfile", "ODMoETimings", "ServingTimings",
-    "degraded_tpot_report", "node_memory_report", "poisson_arrivals",
+    "degraded_tpot_report", "latency_percentiles", "node_memory_report",
+    "poisson_arrivals",
     "simulate_cached", "simulate_cpu", "simulate_odmoe",
     "simulate_offload_cache", "simulate_prefill_cached",
     "simulate_prefill_odmoe", "synthetic_trace",

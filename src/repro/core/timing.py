@@ -446,6 +446,21 @@ def poisson_arrivals(rate: float, n: int, seed: int = 0) -> List[float]:
     return np.cumsum(rng.exponential(1.0 / rate, size=n)).tolist()
 
 
+def latency_percentiles(xs: List[float], prefix: str) -> Dict[str, float]:
+    """mean/p50/p95/p99 of a latency sample, empty-safe and finite: an
+    empty sample reports 0.0 everywhere (``np.mean([])`` is NaN and
+    ``np.percentile([], q)`` raises — both got load-bearing the moment
+    zero-request and all-deferred runs became legal inputs)."""
+    if not xs:
+        return {f"{prefix}_{k}_s": 0.0
+                for k in ("mean", "p50", "p95", "p99")}
+    p50, p95, p99 = np.percentile(xs, (50, 95, 99))
+    return {f"{prefix}_mean_s": float(np.mean(xs)),
+            f"{prefix}_p50_s": float(p50),
+            f"{prefix}_p95_s": float(p95),
+            f"{prefix}_p99_s": float(p99)}
+
+
 @dataclass
 class ServingTimings:
     """Per-request latency + aggregate throughput of a serving run.
@@ -455,11 +470,23 @@ class ServingTimings:
     TTFT covers admission wait + prefill (the first token falls out of
     prefill); TPOT is the mean inter-token gap over the remaining
     decode steps.
+
+    ``tenants`` / ``ttft_slo_s`` / ``tpot_slo_s`` (optional, same
+    positional order) carry each request's tenant class and SLO targets
+    for ``per_tenant_report`` — a run without tenant classes leaves
+    them None and reports a single implicit class.
+
+    Every report field is finite and JSON-safe: zero-request runs
+    report zeros (not NaN / ValueError), a zero-width makespan reports
+    0.0 tokens/s (not inf).
     """
     arrival_s: List[float]
     first_token_s: List[float]
     finish_s: List[float]
     tokens: List[int]
+    tenants: Optional[List[str]] = None
+    ttft_slo_s: Optional[List[float]] = None
+    tpot_slo_s: Optional[List[float]] = None
 
     @property
     def ttft_s(self) -> List[float]:
@@ -473,25 +500,63 @@ class ServingTimings:
 
     @property
     def makespan_s(self) -> float:
+        if not self.finish_s:
+            return 0.0
         return max(self.finish_s) - min(self.arrival_s)
 
     @property
     def tokens_per_s(self) -> float:
         span = self.makespan_s
-        return sum(self.tokens) / span if span > 0 else float("inf")
+        return sum(self.tokens) / span if span > 0 else 0.0
+
+    def _subset(self, idx: List[int]) -> "ServingTimings":
+        pick = lambda xs: ([xs[i] for i in idx]        # noqa: E731
+                           if xs is not None else None)
+        return ServingTimings(
+            arrival_s=pick(self.arrival_s),
+            first_token_s=pick(self.first_token_s),
+            finish_s=pick(self.finish_s), tokens=pick(self.tokens),
+            tenants=pick(self.tenants),
+            ttft_slo_s=pick(self.ttft_slo_s),
+            tpot_slo_s=pick(self.tpot_slo_s))
+
+    @staticmethod
+    def _attainment(xs: List[float], slos: Optional[List[float]]) -> float:
+        """Fraction of requests meeting their SLO target; requests with
+        no target (inf) count as met, an empty sample is vacuously 1.0."""
+        if not xs:
+            return 1.0
+        if slos is None:
+            return 1.0
+        return float(np.mean([x <= s for x, s in zip(xs, slos)]))
 
     def report(self) -> Dict[str, float]:
         ttft, tpot = self.ttft_s, self.tpot_s
-        return {
+        rep = {
             "n_requests": len(self.tokens),
             "total_tokens": int(sum(self.tokens)),
             "makespan_s": self.makespan_s,
             "throughput_tok_s": self.tokens_per_s,
-            "ttft_mean_s": float(np.mean(ttft)),
-            "ttft_p99_s": float(np.percentile(ttft, 99)),
-            "tpot_mean_s": float(np.mean(tpot)),
-            "tpot_p99_s": float(np.percentile(tpot, 99)),
         }
+        rep.update(latency_percentiles(ttft, "ttft"))
+        rep.update(latency_percentiles(tpot, "tpot"))
+        if self.ttft_slo_s is not None or self.tpot_slo_s is not None:
+            rep["ttft_slo_attainment"] = self._attainment(
+                ttft, self.ttft_slo_s)
+            rep["tpot_slo_attainment"] = self._attainment(
+                tpot, self.tpot_slo_s)
+        return rep
+
+    def per_tenant_report(self) -> Dict[str, Dict[str, float]]:
+        """``report()`` split by tenant class.  Without tenant labels
+        everything lands in one ``"default"`` class."""
+        tenants = self.tenants or ["default"] * len(self.tokens)
+        out: Dict[str, Dict[str, float]] = {}
+        # a zero-request run still reports one (vacuous) default class
+        for name in sorted(set(tenants)) or ["default"]:
+            idx = [i for i, t in enumerate(tenants) if t == name]
+            out[name] = self._subset(idx).report()
+        return out
 
 
 # ---------------------------------------------------------- node memory

@@ -32,8 +32,8 @@ from repro.core import (AlignmentPolicy, ODMoEEngine, RTX3090_EDGE,
                         node_memory_report, simulate_cached, simulate_odmoe)
 from repro.models import greedy_generate, init_params
 from repro.quant import TieredPolicy, UniformPolicy
-from repro.serve import (BatchComposer, KVPool, ServingLoop,
-                         dense_cache_footprint, make_traffic)
+from repro.serve import (BatchComposer, KVPool, ServingLoop, WorkloadSpec,
+                         dense_cache_footprint, make_trace, make_traffic)
 
 
 def build_parser() -> argparse.ArgumentParser:
@@ -75,8 +75,29 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--max-batch", type=int, default=4,
                     help="composed decode batch cap")
     ap.add_argument("--compose", default="overlap",
-                    choices=["overlap", "fifo"],
-                    help="batch composition policy")
+                    choices=["overlap", "fifo", "fair"],
+                    help="batch composition policy (fair: per-tenant "
+                         "weighted deficit round-robin)")
+    ap.add_argument("--workload", default="uniform",
+                    choices=["uniform", "trace"],
+                    help="'uniform' = the paper-style near-uniform mix "
+                         "(make_traffic); 'trace' = trace-driven multi-"
+                         "tenant traffic (repro.serve.workload): heavy-"
+                         "tailed lengths, bursty/diurnal arrivals, "
+                         "tenant classes with TTFT/TPOT SLOs")
+    ap.add_argument("--arrival", default="bursty",
+                    choices=["poisson", "bursty", "diurnal"],
+                    help="arrival process for --workload trace")
+    ap.add_argument("--preempt", default="youngest",
+                    choices=["youngest", "slack"],
+                    help="KV-page preemption victim policy: youngest "
+                         "admission, or the request with the most TPOT-"
+                         "deadline slack (best-effort traffic first)")
+    ap.add_argument("--admit", default="fifo",
+                    choices=["fifo", "priority"],
+                    help="admission order: strict arrival FIFO, or "
+                         "tenant-weight priority (interactive jumps "
+                         "deferred batch traffic)")
     ap.add_argument("--kv-pages", type=int, default=0,
                     help="serve decode KV out of a paged pool of this "
                          "many pages instead of dense per-request "
@@ -131,16 +152,26 @@ def serve_traffic(cfg, params, args) -> None:
                       predictor=args.predictor, shadow_scheme=args.shadow,
                       transport=transport, speculate=args.speculate)
     policy = AlignmentPolicy(args.token_period, args.kv_period)
-    reqs = make_traffic(cfg, args.requests, args.arrival_rate,
-                        prompt_len=args.prompt_len, max_new=args.tokens,
-                        seed=args.seed)
+    if args.workload == "trace":
+        spec = WorkloadSpec(n_requests=args.requests,
+                            rate=args.arrival_rate, arrival=args.arrival,
+                            prompt_median=args.prompt_len,
+                            max_prompt=4 * args.prompt_len,
+                            output_median=args.tokens,
+                            max_output=2 * args.tokens)
+        reqs = make_trace(cfg, spec, seed=args.seed)
+    else:
+        reqs = make_traffic(cfg, args.requests, args.arrival_rate,
+                            prompt_len=args.prompt_len,
+                            max_new=args.tokens, seed=args.seed)
     kv_pool = (KVPool(cfg, num_pages=args.kv_pages,
                       page_tokens=args.page_tokens)
                if args.kv_pages else None)
     loop = ServingLoop(eng, max_batch=args.max_batch,
                        composer=BatchComposer(args.max_batch, args.compose,
                                               kv_pool=kv_pool),
-                       policy=policy, kv_pool=kv_pool)
+                       policy=policy, kv_pool=kv_pool,
+                       preempt=args.preempt, admit=args.admit)
     res = loop.run(reqs)
     # ---- bit-exactness: every request == its solo reference decode
     # under the SAME transport policy
@@ -157,12 +188,24 @@ def serve_traffic(cfg, params, args) -> None:
     rep = res.timings.report()
     print(f"  requests: {rep['n_requests']}  tokens: {rep['total_tokens']}"
           f"  mean batch: {res.mean_batch:.2f}")
-    print(f"  TTFT  mean {rep['ttft_mean_s'] * 1e3:.2f} ms   "
-          f"p99 {rep['ttft_p99_s'] * 1e3:.2f} ms")
-    print(f"  TPOT  mean {rep['tpot_mean_s'] * 1e3:.2f} ms   "
-          f"p99 {rep['tpot_p99_s'] * 1e3:.2f} ms")
+    for m in ("ttft", "tpot"):
+        print(f"  {m.upper()}  mean {rep[f'{m}_mean_s'] * 1e3:.2f} ms   "
+              f"p50 {rep[f'{m}_p50_s'] * 1e3:.2f}   "
+              f"p95 {rep[f'{m}_p95_s'] * 1e3:.2f}   "
+              f"p99 {rep[f'{m}_p99_s'] * 1e3:.2f}")
     print(f"  throughput: {rep['throughput_tok_s']:.2f} tok/s over "
           f"{rep['makespan_s']:.3f} s makespan")
+    if args.workload == "trace":
+        print(f"  trace: {args.arrival} arrivals, preempt={args.preempt},"
+              f" admit={args.admit}, compose={args.compose}")
+        for name, tr in res.tenant_report().items():
+            print(f"  [{name}] n={tr['n_requests']}  "
+                  f"TTFT p50/p95/p99 {tr['ttft_p50_s'] * 1e3:.2f}/"
+                  f"{tr['ttft_p95_s'] * 1e3:.2f}/"
+                  f"{tr['ttft_p99_s'] * 1e3:.2f} ms  "
+                  f"TPOT p95 {tr['tpot_p95_s'] * 1e3:.2f} ms  "
+                  f"SLO ttft {tr['ttft_slo_attainment']:.2f} "
+                  f"tpot {tr['tpot_slo_attainment']:.2f}")
     if res.spec_stats is not None:
         ss = res.spec_stats
         print(f"  speculation k={ss['speculate']}: acceptance "
@@ -258,9 +301,10 @@ def main():
                          "inapplicable (see DESIGN.md §4); serve it with "
                          "examples/quickstart.py instead.")
     params = init_params(cfg, jax.random.PRNGKey(args.seed))
-    mode = (f"continuous batching: {args.requests} requests @ "
-            f"{args.arrival_rate}/s, max-batch {args.max_batch} "
-            f"({args.compose})" if args.requests else "single stream")
+    mode = (f"continuous batching: {args.requests} {args.workload} "
+            f"requests @ {args.arrival_rate}/s, max-batch "
+            f"{args.max_batch} ({args.compose})"
+            if args.requests else "single stream")
     print(f"[serve] {cfg.name}: E={cfg.num_experts} top{cfg.top_k}, "
           f"{args.workers} workers, predictor={args.predictor}"
           + (f"/{args.shadow}" if args.predictor == "sep" else "")

@@ -23,11 +23,18 @@ arithmetic.
 from .composer import BatchComposer
 from .kvpool import (KVPool, PagedCacheBatch, PagedRequestCache,
                      PoolExhausted, dense_cache_footprint)
-from .loop import ServeResult, ServingLoop, StepRecord
+from .loop import (ServeResult, ServingLoop, StepRecord,
+                   preemption_victim)
 from .request import Request, RequestQueue, RequestState, make_traffic
+from .workload import (DEFAULT_TENANTS, TenantClass, WorkloadSpec,
+                       bursty_arrivals, diurnal_arrivals,
+                       heavy_tail_lengths, make_trace)
 
 __all__ = [
     "BatchComposer", "KVPool", "PagedCacheBatch", "PagedRequestCache",
     "PoolExhausted", "dense_cache_footprint", "ServeResult", "ServingLoop",
-    "StepRecord", "Request", "RequestQueue", "RequestState", "make_traffic",
+    "StepRecord", "preemption_victim", "Request", "RequestQueue",
+    "RequestState", "make_traffic", "DEFAULT_TENANTS", "TenantClass",
+    "WorkloadSpec", "bursty_arrivals", "diurnal_arrivals",
+    "heavy_tail_lengths", "make_trace",
 ]

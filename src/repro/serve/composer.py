@@ -16,6 +16,15 @@ composition never advances any shadow — it only reads predictions.
 ``fifo`` policy: the ``max_batch`` oldest requests, the continuous-
 batching baseline every serving benchmark compares against.
 
+``fair`` policy: per-tenant deficit round-robin.  The head of the line
+still seeds the batch (head-of-line progress is the loop's liveness
+guarantee), then seats go to the fitting candidate whose *tenant* has
+consumed the least weight-normalized service so far (each seat charges
+``1 / weight`` to its tenant's running debt, persisted across
+compositions), FIFO within a tenant.  A high-weight interactive class
+thus gets proportionally more seats than batch traffic without ever
+starving it — every tenant's debt eventually undercuts the others'.
+
 With a ``kv_pool`` the composer is additionally *budget-aware*: a
 candidate whose next decode step crosses a page boundary needs a fresh
 KV page, and a batch whose collective page growth exceeds the pool's
@@ -33,7 +42,8 @@ the composer can only change *when* tokens appear, never *which*.
 """
 from __future__ import annotations
 
-from typing import List
+from collections import defaultdict
+from typing import Dict, List
 
 from .request import RequestState
 
@@ -43,11 +53,14 @@ class BatchComposer:
                  kv_pool=None):
         if max_batch < 1:
             raise ValueError("max_batch must be >= 1")
-        if policy not in ("overlap", "fifo"):
+        if policy not in ("overlap", "fifo", "fair"):
             raise ValueError(f"unknown composition policy {policy!r}")
         self.max_batch = max_batch
         self.policy = policy
         self.kv_pool = kv_pool
+        # ``fair``: weight-normalized seats consumed per tenant so far
+        # (deficit round-robin state, persists across compositions)
+        self._tenant_debt: Dict[str, float] = defaultdict(float)
 
     # ----------------------------------------------------------- KV budget
     def _growth(self, state: RequestState) -> int:
@@ -70,6 +83,14 @@ class BatchComposer:
             return 0
         return min(self._growth(seed), self.kv_pool.free_pages)
 
+    # ---------------------------------------------------------- fair share
+    def _charge(self, state: RequestState) -> None:
+        """One seat consumed: a weight-``w`` tenant's debt grows by
+        ``1/w``, so it undercuts (and out-schedules) a weight-1 tenant
+        ``w`` times as often — weighted fair queuing on batch seats."""
+        req = state.request
+        self._tenant_debt[req.tenant] += 1.0 / req.weight
+
     # -------------------------------------------------------------- choose
     def compose(self, runnable: List[RequestState]) -> List[RequestState]:
         """Pick <= max_batch requests for the next iteration.  ``runnable``
@@ -79,6 +100,24 @@ class BatchComposer:
             return []
         seed, candidates = runnable[0], runnable[1:]
         chosen, spent = [seed], self._seed_spent(seed)  # seed always rides
+        if self.policy == "fair":
+            self._charge(seed)
+            while len(chosen) < self.max_batch and candidates:
+                best_i, best_debt = -1, None
+                for i, cand in enumerate(candidates):
+                    if not self._fits(cand, spent):
+                        continue
+                    debt = self._tenant_debt[cand.request.tenant]
+                    if best_debt is None or debt < best_debt:
+                        best_i, best_debt = i, debt
+                if best_i < 0:                  # nothing fits the budget
+                    break
+                pick = candidates.pop(best_i)
+                spent += self._growth(pick)
+                self._charge(pick)
+                chosen.append(pick)
+            chosen_ids = {s.rid for s in chosen}
+            return [s for s in runnable if s.rid in chosen_ids]
         if self.policy == "fifo":
             for cand in candidates:
                 if len(chosen) >= self.max_batch:

@@ -39,13 +39,15 @@ per-request page tables instead of dense ``max_cache_len`` buffers.
 Admission is budget-aware — a request whose prompt pages do not fit is
 *deferred* (FIFO, its TTFT absorbs the memory wait) rather than
 allowed to over-commit the node.  When a running request crosses a
-page boundary and the free list is empty, the *youngest* runnable
-request is preempted: its pages are swapped out to host byte-exactly
-(``DecodeClock.charge_kv_swap`` prices the transfer), and it resumes —
-oldest first, page-exact — once retirements free pages.  Because the
-oldest request can always claim pages (victims are strictly younger,
-and one window must fit the pool by construction), every admitted
-request completes; preemption is scheduling, never arithmetic.
+page boundary and the free list is empty, a runnable victim — the
+*youngest* by default, the most deadline slack under
+``preempt="slack"`` — is preempted: its pages are swapped out to host
+byte-exactly (``DecodeClock.charge_kv_swap`` prices the transfer), and
+it resumes — oldest first, page-exact — once retirements free pages.
+Every exhaustion frees at least one victim's pages and one window must
+fit the pool by construction, so the growing batch member always
+progresses and every admitted request completes; preemption is
+scheduling, never arithmetic.
 
 The bit-exactness invariant (tested in tests/test_serving.py): every
 request's token stream is bit-identical to running it alone through
@@ -66,6 +68,8 @@ splits TPOT into healthy- vs degraded-fleet steps.
 """
 from __future__ import annotations
 
+import heapq
+from collections import deque
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence
 
@@ -85,6 +89,60 @@ from .kvpool import KVPool, PoolExhausted
 from .request import Request, RequestQueue, RequestState
 
 
+def preemption_victim(runnable: List[RequestState], policy: str,
+                      now: float) -> RequestState:
+    """Pick the preemption victim among ``runnable`` states.
+
+    ``youngest`` (the default, the pinned historical behavior): the
+    highest ``admit_seq`` — newest admission loses its pages first.
+
+    ``slack``: the request with the most deadline slack (see
+    ``RequestState.deadline_slack``) is the one that can best afford to
+    sit out a swap round-trip.  Requests with no TPOT SLO have infinite
+    slack, so best-effort traffic is always victimized before any
+    SLO-bearing request; ties (including the all-infinite no-SLO case)
+    fall back to youngest-first, which makes ``slack`` on an untagged
+    trace behave exactly like the default policy."""
+    if policy == "slack":
+        return max(runnable,
+                   key=lambda s: (s.deadline_slack(now), s.admit_seq))
+    return max(runnable, key=lambda s: s.admit_seq)
+
+
+class _AdmissionQueue:
+    """Deferred-admission buffer.  ``fifo`` keeps strict arrival order
+    (deque: O(1) at both ends — the old ``list.pop(0)`` shifted the
+    tail, quadratic over a big deferred backlog).  ``priority`` orders
+    by descending tenant weight, FIFO within a weight class (heap on
+    ``(-weight, arrival_s, rid)``), so an interactive arrival can jump
+    a deferred batch backlog — weight-based jumping is bounded
+    starvation: equal-weight requests still serve FIFO."""
+
+    def __init__(self, policy: str = "fifo"):
+        self.policy = policy
+        self._fifo: deque = deque()
+        self._heap: list = []
+
+    def push(self, req: Request) -> None:
+        if self.policy == "priority":
+            heapq.heappush(self._heap,
+                           (-req.weight, req.arrival_s, req.rid, req))
+        else:
+            self._fifo.append(req)
+
+    def peek(self) -> Request:
+        return self._heap[0][3] if self.policy == "priority" \
+            else self._fifo[0]
+
+    def pop(self) -> Request:
+        if self.policy == "priority":
+            return heapq.heappop(self._heap)[3]
+        return self._fifo.popleft()
+
+    def __len__(self) -> int:
+        return len(self._heap) + len(self._fifo)
+
+
 @dataclass
 class StepRecord:
     """One composed decode iteration: who rode, what it cost."""
@@ -96,6 +154,10 @@ class StepRecord:
     stall_s: float
     alive_workers: int = -1      # fleet liveness after this step's faults
     kv_pages_used: int = -1      # pool occupancy after this step (paged)
+    # one-pass queue population snapshot after this step (pending/
+    # active/runnable/preempted/prefilling/finished) — the per-step
+    # state summary big traces are graded on
+    queue_counts: Optional[Dict[str, int]] = None
 
 
 @dataclass
@@ -121,6 +183,13 @@ class ServeResult:
             return 0.0
         return float(np.mean([len(s.request_ids) for s in self.steps]))
 
+    def tenant_report(self) -> Dict[str, Dict[str, float]]:
+        """Per-tenant p50/p95/p99 TTFT+TPOT and SLO attainment — the
+        multi-tenant serving scorecard (see
+        ``ServingTimings.per_tenant_report``; every field finite and
+        empty-safe)."""
+        return self.timings.per_tenant_report()
+
     def degraded_report(self) -> Dict[str, float]:
         """Healthy- vs degraded-fleet TPOT over the composed steps.  An
         all-healthy run is a well-defined explicit case (see
@@ -141,7 +210,9 @@ class ServingLoop:
                  policy: AlignmentPolicy = AlignmentPolicy(1, 1),
                  max_seq_len: int = 0,
                  kv_pool: Optional[KVPool] = None,
-                 prefill_chunk: int = 0):
+                 prefill_chunk: int = 0,
+                 preempt: str = "youngest",
+                 admit: str = "fifo"):
         self.engine = engine
         self.kv_pool = kv_pool
         self.composer = composer or BatchComposer(max_batch,
@@ -160,6 +231,18 @@ class ServingLoop:
         # interleave with it; the REAL bucketed prefill runs once at
         # the final chunk — chunking shapes time, never arithmetic
         self.prefill_chunk = max(0, int(prefill_chunk))
+        # scheduling policies (both pure scheduling, never arithmetic):
+        # ``preempt`` picks the page-exhaustion victim (youngest-first
+        # default keeps the historical pins; "slack" preempts the
+        # request with the most TPOT-deadline headroom), ``admit``
+        # orders arrivals and the deferred backlog ("priority" admits
+        # by descending tenant weight, FIFO within a weight)
+        if preempt not in ("youngest", "slack"):
+            raise ValueError(f"unknown preemption policy {preempt!r}")
+        if admit not in ("fifo", "priority"):
+            raise ValueError(f"unknown admission policy {admit!r}")
+        self.preempt_policy = preempt
+        self.admit_policy = admit
 
     # ------------------------------------------------------------- admit
     def _admit(self, req: Request, cache_len: int, clock: DecodeClock
@@ -207,9 +290,23 @@ class ServingLoop:
         if self._is_chunked(req):
             n, c = len(req.prompt), self.prefill_chunk
             chunks = [c] * (n // c) + ([n % c] if n % c else [])
+            # time-slice the ONE full-prompt prefill cost across the
+            # chunks (last slice takes the float remainder so the total
+            # is exact): prefill cost is not additive in prompt length
+            # — per-chunk ``simulate_prefill_odmoe(chunk)`` calls paid
+            # the per-layer expert-load floor once PER CHUNK, so a
+            # chunked admission's clock total drifted from the
+            # unchunked cost of the same prompt.  Chunking must shape
+            # *when* the cost lands, never *how much* it is.
+            t_full = simulate_prefill_odmoe(
+                self.engine.cfg, self.profile, n,
+                n_workers=self.engine.sched.n_workers)
+            costs = [t_full * ch / n for ch in chunks]
+            costs[-1] = t_full - sum(costs[:-1])
             state = RequestState(request=req, token=None, cache_list=[],
                                  pos=None, admit_s=clock.now,
-                                 prefilling=True, prefill_chunks=chunks)
+                                 prefilling=True, prefill_chunks=chunks,
+                                 prefill_chunk_s=costs)
             state.admit_seq = self._admit_seq
             self._admit_seq += 1
             queue.activate(state)
@@ -231,11 +328,9 @@ class ServingLoop:
         progressed = False
         for state in queue.prefilling():
             if state.prefill_chunks:
-                chunk = state.prefill_chunks.pop(0)
-                t_pre = simulate_prefill_odmoe(
-                    self.engine.cfg, self.profile, chunk,
-                    n_workers=self.engine.sched.n_workers)
-                clock.charge_prefill(t_pre)
+                state.prefill_chunks.pop(0)
+                # the admission-time slice of the one full-prompt cost
+                clock.charge_prefill(state.prefill_chunk_s.pop(0))
                 progressed = True
             if not state.prefill_chunks:
                 progressed |= self._finalize_prefill(state, cache_len,
@@ -300,11 +395,14 @@ class ServingLoop:
                             queue: RequestQueue, clock: DecodeClock
                             ) -> List[RequestState]:
         """Hard budget guarantee before a composed step: every member
-        gets the page its next slot writes into, preempting the
-        *youngest* runnable request (possibly a batch member, possibly
-        the grower itself when it is the youngest) on exhaustion.
-        Victims are strictly younger than the oldest member, so the
-        head of the line always decodes — no livelock."""
+        gets the page its next slot writes into, preempting one
+        runnable request (possibly a batch member, possibly the grower
+        itself) per exhaustion via ``preemption_victim`` — youngest-
+        first by default, most-deadline-slack-first under
+        ``preempt="slack"``.  Each preemption strictly shrinks the
+        runnable set, so the loop terminates: either the pool yields
+        the pages or the grower itself is the last candidate and sits
+        the step out."""
         pool = self.kv_pool
         for state in batch:
             if state.preempted:              # lost its pages to an older
@@ -317,8 +415,9 @@ class ServingLoop:
                     pool.ensure(state.rid, need_slots)
                     break
                 except PoolExhausted:
-                    victim = max(queue.runnable(),
-                                 key=lambda s: s.admit_seq)
+                    victim = preemption_victim(queue.runnable(),
+                                               self.preempt_policy,
+                                               clock.now)
                     self._preempt(victim, clock)
                     if victim is state:
                         break
@@ -408,7 +507,7 @@ class ServingLoop:
                             transport=getattr(eng, "transport", None))
         trace = Trace()
         steps: List[StepRecord] = []
-        deferred: List[Request] = []
+        deferred = _AdmissionQueue(self.admit_policy)
         self._admit_seq = 0
         self._swap_s = 0.0
         step = 0
@@ -416,18 +515,27 @@ class ServingLoop:
             progressed = False
             if self.kv_pool is not None:
                 progressed |= self._resume_preempted(queue, clock)
-                while deferred and self._admission_fits(deferred[0]):
-                    self._admit_or_retire(deferred.pop(0), cache_len,
+                while deferred and self._admission_fits(deferred.peek()):
+                    self._admit_or_retire(deferred.pop(), cache_len,
                                           clock, queue)
                     progressed = True
-            for req in queue.pop_arrived(clock.now):
-                # budget-aware admission is strictly FIFO: while an
-                # older request waits for pages, younger arrivals queue
-                # behind it (mirrors the resume path) — otherwise a
-                # stream of small requests could starve a large one
+            arrived = queue.pop_arrived(clock.now)
+            if self.admit_policy == "priority":
+                # weightiest tenant first; FIFO within a weight class
+                arrived.sort(key=lambda r: (-r.weight, r.arrival_s,
+                                            r.rid))
+            for req in arrived:
+                # budget-aware admission drains the deferred backlog in
+                # the admission policy's order — strictly FIFO by
+                # default: while an older request waits for pages,
+                # younger arrivals queue behind it (mirrors the resume
+                # path), otherwise a stream of small requests could
+                # starve a large one.  Under "priority" the backlog is
+                # weight-ordered instead, so interactive arrivals jump
+                # deferred batch traffic.
                 if deferred or not self._admission_fits(req):
                     self.kv_pool.stats.deferred_admissions += 1
-                    deferred.append(req)
+                    deferred.push(req)
                     continue
                 self._admit_or_retire(req, cache_len, clock, queue)
                 progressed = True
@@ -453,7 +561,8 @@ class ServingLoop:
                 batch = self._ensure_batch_pages(batch, queue, clock)
                 if not batch:
                     continue                 # preemptions freed pages
-            self._decode_composed(batch, clock, trace, steps, step)
+            self._decode_composed(batch, clock, trace, steps, step,
+                                  queue.state_counts())
             for state in list(batch):
                 if state.done:
                     state.finish_s = clock.now
@@ -490,7 +599,9 @@ class ServingLoop:
     # ------------------------------------------------------ composed step
     def _decode_composed(self, batch: List[RequestState],
                          clock: DecodeClock, trace: Trace,
-                         steps: List[StepRecord], step: int) -> None:
+                         steps: List[StepRecord], step: int,
+                         queue_counts: Optional[Dict[str, int]] = None
+                         ) -> None:
         """One composed iteration: a classic one-token step when
         ``speculate == 1``, else one draft-verify-accept wave.  Requests
         commit INDEPENDENT accepted prefixes (capped by their remaining
@@ -539,7 +650,8 @@ class ServingLoop:
                                 alive_workers=clock.alive_workers(),
                                 kv_pages_used=(self.kv_pool.pages_used
                                                if self.kv_pool is not None
-                                               else -1)))
+                                               else -1),
+                                queue_counts=queue_counts))
         sl = rec.spec_len                     # wave rows per request
         for i, state in enumerate(batch):
             ci = int(commits[i])
@@ -598,7 +710,10 @@ class ServingLoop:
             arrival_s=[s.request.arrival_s for s in states.values()],
             first_token_s=[s.first_token_s for s in states.values()],
             finish_s=[s.finish_s for s in states.values()],
-            tokens=[len(s.generated) for s in states.values()])
+            tokens=[len(s.generated) for s in states.values()],
+            tenants=[s.request.tenant for s in states.values()],
+            ttft_slo_s=[s.request.ttft_slo_s for s in states.values()],
+            tpot_slo_s=[s.request.tpot_slo_s for s in states.values()])
         outputs = {rid: np.asarray(s.generated, np.int32)
                    for rid, s in states.items()}
         return ServeResult(outputs=outputs, timings=timings, trace=trace,

@@ -19,6 +19,8 @@ together each iteration is the ``BatchComposer``'s job.
 """
 from __future__ import annotations
 
+import heapq
+import math
 from dataclasses import dataclass, field
 from typing import Dict, FrozenSet, List, Optional, Sequence, Tuple
 
@@ -29,17 +31,32 @@ from repro.core import Trace
 
 @dataclass
 class Request:
-    """One serving request: ``prompt`` is a 1-D int32 token array."""
+    """One serving request: ``prompt`` is a 1-D int32 token array.
+
+    ``tenant``/``weight``/``ttft_slo_s``/``tpot_slo_s`` attach the
+    request's service class (see ``repro.serve.workload.TenantClass``):
+    ``weight`` orders priority admission and scales the composer's
+    fairness share, the SLO targets feed deadline-slack preemption and
+    the per-tenant attainment report.  The defaults (one anonymous
+    class, infinite SLOs, weight 1) make an untagged request behave
+    exactly as before — tenancy is scheduling metadata, never
+    arithmetic."""
     rid: int
     prompt: np.ndarray
     max_new_tokens: int
     arrival_s: float = 0.0
+    tenant: str = "default"
+    weight: float = 1.0
+    ttft_slo_s: float = math.inf
+    tpot_slo_s: float = math.inf
 
     def __post_init__(self):
         self.prompt = np.asarray(self.prompt, np.int32).reshape(-1)
         if self.max_new_tokens < 1:
             raise ValueError("max_new_tokens must be >= 1 (the first "
                              "token falls out of prefill)")
+        if self.weight <= 0:
+            raise ValueError("weight must be > 0")
 
 
 @dataclass
@@ -82,9 +99,15 @@ class RequestState:
     # interleave with the newcomer's prefill.  The request is not
     # runnable (and holds no KV pages) until the last chunk, where the
     # REAL bucketed prefill runs once — chunking shapes time, never
-    # arithmetic.
+    # arithmetic.  ``prefill_chunk_s`` holds the per-chunk CLOCK charges:
+    # slices of the ONE full-prompt ``simulate_prefill_odmoe`` cost an
+    # unchunked admission would pay (prefill cost is not additive in
+    # prompt length — per-chunk simulation calls would systematically
+    # over-charge the chunked path), so the chunked and unchunked clock
+    # totals reconcile exactly.
     prefilling: bool = False
     prefill_chunks: List[int] = field(default_factory=list)
+    prefill_chunk_s: List[float] = field(default_factory=list)
     # speculative decoding acceptance counters (ServeResult.spec_stats)
     spec_waves: int = 0
     spec_committed: int = 0
@@ -97,6 +120,20 @@ class RequestState:
     def done(self) -> bool:
         return (not self.prefilling
                 and len(self.generated) >= self.request.max_new_tokens)
+
+    def deadline_slack(self, now: float) -> float:
+        """Seconds of headroom before this request's next token busts
+        its TPOT SLO: the request emitted ``len(generated)`` tokens
+        (the first fell out of prefill at ``first_token_s``), so token
+        ``len(generated) + 1`` is due at
+        ``first_token_s + tpot_slo_s * len(generated)``.  Infinite for
+        requests with no TPOT target (they have all the headroom in the
+        world, which is exactly why slack-based preemption victimizes
+        them first) and for requests still mid chunked-prefill."""
+        slo = self.request.tpot_slo_s
+        if math.isinf(slo) or self.prefilling:
+            return math.inf
+        return (self.first_token_s + slo * len(self.generated)) - now
 
     def predicted_experts(self) -> FrozenSet[Tuple[int, int]]:
         """(layer, expert) set this request is predicted to activate on
@@ -135,35 +172,53 @@ def make_traffic(cfg, n: int, rate: float, prompt_len: int = 16,
 
 
 class RequestQueue:
-    """Arrival-ordered admission + active/finished bookkeeping."""
+    """Arrival-ordered admission + active/finished bookkeeping.
+
+    Built for big traces: pending arrivals live in a heap keyed by
+    ``(arrival_s, rid)`` (``pop_arrived`` is O(log n) per pop — the
+    old sorted-list ``pop(0)`` shifted the whole tail, quadratic over a
+    trace), the active population is a dict keyed by rid (O(1)
+    ``activate``/``retire`` — ``list.remove`` scanned) whose insertion
+    order IS admission order, so the filtered views below need no
+    sorting.  ``state_counts`` summarizes the population in one pass
+    for per-step records."""
 
     def __init__(self, requests: Sequence[Request]):
         rids = [r.rid for r in requests]
         if len(set(rids)) != len(rids):
             raise ValueError("request ids must be unique")
-        self._pending: List[Request] = sorted(
-            requests, key=lambda r: (r.arrival_s, r.rid))
-        self.active: List[RequestState] = []
+        # rid breaks arrival ties uniquely, so heap tuples never compare
+        # the Request payload
+        self._pending: List[Tuple[float, int, Request]] = [
+            (r.arrival_s, r.rid, r) for r in requests]
+        heapq.heapify(self._pending)
+        self._active: Dict[int, RequestState] = {}
         self.finished: Dict[int, RequestState] = {}
+
+    @property
+    def active(self) -> List[RequestState]:
+        """Active states in admission order (compat view; membership
+        updates go through ``activate``/``retire``)."""
+        return list(self._active.values())
 
     # ---------------------------------------------------------- arrivals
     def next_arrival_s(self) -> Optional[float]:
-        return self._pending[0].arrival_s if self._pending else None
+        return self._pending[0][0] if self._pending else None
 
     def pop_arrived(self, now: float) -> List[Request]:
         """Remove and return every not-yet-admitted request with
         ``arrival_s <= now``, in arrival order."""
         arrived = []
-        while self._pending and self._pending[0].arrival_s <= now:
-            arrived.append(self._pending.pop(0))
+        while self._pending and self._pending[0][0] <= now:
+            arrived.append(heapq.heappop(self._pending)[2])
         return arrived
 
     # --------------------------------------------------------- lifecycle
     def activate(self, state: RequestState) -> None:
-        self.active.append(state)
+        self._active[state.rid] = state
 
     def retire(self, state: RequestState) -> None:
-        self.active.remove(state)
+        del self._active[state.rid]
         self.finished[state.rid] = state
 
     def runnable(self) -> List[RequestState]:
@@ -171,20 +226,37 @@ class RequestQueue:
         admission order (the composer's FIFO tie-break).  Preempted
         requests hold no KV pages and sit out until resumed; chunk-
         prefilling requests have no decode state yet."""
-        return [s for s in self.active
+        return [s for s in self._active.values()
                 if not s.done and not s.preempted and not s.prefilling]
 
     def prefilling(self) -> List[RequestState]:
-        """Requests mid chunked-prefill, admission order."""
-        return sorted((s for s in self.active if s.prefilling),
-                      key=lambda s: s.admit_seq)
+        """Requests mid chunked-prefill, admission order (insertion
+        order is admit_seq order — activation assigns seqs
+        monotonically)."""
+        return [s for s in self._active.values() if s.prefilling]
 
     def preempted(self) -> List[RequestState]:
         """Swapped-out requests awaiting resume, oldest admission
         first (the resume order — FIFO prevents starvation)."""
-        return sorted((s for s in self.active if s.preempted),
-                      key=lambda s: s.admit_seq)
+        return [s for s in self._active.values() if s.preempted]
+
+    def state_counts(self) -> Dict[str, int]:
+        """One-pass population summary for per-step records: pending
+        arrivals, active split into runnable/preempted/prefilling, and
+        finished."""
+        runnable = preempted = prefilling = 0
+        for s in self._active.values():
+            if s.prefilling:
+                prefilling += 1
+            elif s.preempted:
+                preempted += 1
+            elif not s.done:
+                runnable += 1
+        return {"pending": len(self._pending),
+                "active": len(self._active), "runnable": runnable,
+                "preempted": preempted, "prefilling": prefilling,
+                "finished": len(self.finished)}
 
     @property
     def all_done(self) -> bool:
-        return not self._pending and not self.active
+        return not self._pending and not self._active
