@@ -1,0 +1,151 @@
+"""Cluster scaling — replicas vs throughput, placement vs t_maxload.
+
+Two sweeps on the shared bench model:
+
+  * **replicas**: the same burst of requests served by 1/2/4
+    ``ServingLoop`` replicas over ONE shared worker fleet / expert
+    store via ``ClusterRouter`` (least-loaded routing, shared
+    ``worker_free`` timelines so replicas genuinely contend for links)
+    — cluster throughput, TTFT/TPOT percentiles, and per-replica
+    request counts per point;
+  * **placement**: modeled expected per-wave ``t_maxload`` of the
+    gate-stats-optimized ``PlacementPlan`` vs the ``i mod G`` modulo
+    baseline, scored by ``expected_t_maxload`` on gate statistics
+    recorded from a real decode — on the homogeneous paper fleet and
+    on a skewed-link fleet where hot-expert placement matters more.
+
+``--smoke`` (the CI fast job) gates two things cheaply: the optimized
+plan's modeled ``t_maxload`` is <= the modulo baseline's on recorded
+stats (strictly lower on a skewed fleet), and a 2-replica cluster run
+serves every request bit-identical to its solo ``greedy_generate``.
+
+The committed ``benchmarks/BENCH_cluster_scaling.json`` tracks
+replica-scaling throughput and the placement win commit over commit.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import ODMoEEngine
+from repro.fleet import (FleetSchedule, GateStatsRecorder, WorkerProfile,
+                         expected_t_maxload, modulo_plan,
+                         optimize_placement)
+from repro.serve import make_cluster, make_traffic
+
+from .common import bench_model, record_bench, row, save_artifact, timed
+
+REPLICA_POINTS = (1, 2, 4)
+N_WORKERS = 8
+
+
+def cluster_point(cfg, params, replicas: int, n: int, tokens: int,
+                  verify: bool = False) -> dict:
+    """One cluster run: ``n`` near-simultaneous requests across
+    ``replicas`` loops sharing one fleet."""
+    router = make_cluster(
+        cfg, params, replicas=replicas, policy="least_loaded",
+        engine_kw=dict(n_workers=N_WORKERS, predictor="sep",
+                       shadow_scheme="int8"),
+        loop_kw=dict(max_batch=4))
+    reqs = make_traffic(cfg, n, rate=200.0, max_new=tokens)
+    res = router.run(reqs)
+    if verify:
+        import jax.numpy as jnp
+
+        from repro.models import greedy_generate
+        for r in reqs:
+            ref = np.asarray(greedy_generate(
+                cfg, params, {"tokens": jnp.asarray(r.prompt)[None, :]},
+                r.max_new_tokens))[0]
+            assert np.array_equal(ref, res.outputs[r.rid]), \
+                f"request {r.rid} diverged from its solo reference"
+    rep = dict(res.report())
+    rep["per_replica_requests"] = [rr["requests"]
+                                   for rr in rep.pop("per_replica")]
+    return rep
+
+
+def placement_point(cfg, params, skewed_links: bool) -> dict:
+    """Score optimized vs modulo placement on gate stats recorded from
+    a real decode."""
+    import jax
+    rec = GateStatsRecorder()
+    eng = ODMoEEngine(cfg, params, n_workers=N_WORKERS, predictor="none",
+                      gate_stats=rec)
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(5), (1, 16),
+                                          0, cfg.vocab_size)}
+    eng.generate(batch, 12)
+    profiles = (tuple(WorkerProfile(w, link_gbps=(48.0 if w < 2 else 6.0))
+                      for w in range(N_WORKERS))
+                if skewed_links else None)
+    sched = FleetSchedule(N_WORKERS, max(cfg.top_k, 1),
+                          profiles=profiles or ())
+    kw = dict(num_experts=cfg.num_experts, n_moe=rec.n_layers,
+              expert_bytes=eng.store.expert_bytes)
+    skw = dict(num_experts=cfg.num_experts, n_moe=rec.n_layers)
+    opt = optimize_placement(rec, sched, **kw)
+    mod = modulo_plan(sched, **skw)
+    e_opt = expected_t_maxload(opt, rec, sched, **kw)
+    e_mod = expected_t_maxload(mod, rec, sched, **kw)
+    assert e_opt <= e_mod, (
+        f"optimized placement regressed t_maxload: {e_opt} > {e_mod}")
+    if skewed_links:
+        assert e_opt < e_mod, (
+            "optimized placement must strictly beat modulo on a "
+            "skewed-link fleet")
+    return {"fleet": "skewed" if skewed_links else "uniform",
+            "t_maxload_opt_ms": e_opt * 1e3,
+            "t_maxload_mod_ms": e_mod * 1e3,
+            "win_x": e_mod / max(e_opt, 1e-30)}
+
+
+def run(fast: bool = True, smoke: bool = False):
+    cfg, params = bench_model()
+    rows, table = [], {}
+    for skewed in (False, True):
+        prep, us = timed(placement_point, cfg, params, skewed)
+        table[f"placement/{prep['fleet']}"] = prep
+        rows.append(row(f"cluster/placement/{prep['fleet']}/win_x", us,
+                        round(prep["win_x"], 3)))
+    if smoke:
+        crep = cluster_point(cfg, params, replicas=2, n=4, tokens=5,
+                             verify=True)
+        table["replicas/2"] = crep
+        save_artifact("cluster_scaling.json", table)
+        rows.append(row("cluster/replicas2/tok_s", 0.0,
+                        round(crep["throughput_tok_s"], 2)))
+        return rows
+    n, tokens = (8, 6) if fast else (24, 16)
+    for replicas in REPLICA_POINTS:
+        crep, us = timed(cluster_point, cfg, params, replicas, n, tokens,
+                         verify=fast)
+        table[f"replicas/{replicas}"] = crep
+        rows.append(row(f"cluster/replicas{replicas}/tok_s", us,
+                        round(crep["throughput_tok_s"], 2)))
+        rows.append(row(f"cluster/replicas{replicas}/ttft_p95_ms", 0.0,
+                        round(crep["ttft_p95_s"] * 1e3, 3)))
+    save_artifact("cluster_scaling.json", table)
+    record_bench("cluster_scaling", {
+        "profile": "fast" if fast else "full",
+        "tok_s_1": table["replicas/1"]["throughput_tok_s"],
+        "tok_s_2": table["replicas/2"]["throughput_tok_s"],
+        "tok_s_4": table["replicas/4"]["throughput_tok_s"],
+        "ttft_p95_ms_1": table["replicas/1"]["ttft_p95_s"] * 1e3,
+        "ttft_p95_ms_4": table["replicas/4"]["ttft_p95_s"] * 1e3,
+        "placement_win_uniform_x": table["placement/uniform"]["win_x"],
+        "placement_win_skewed_x": table["placement/skewed"]["win_x"],
+    })
+    return rows
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI gate: optimized placement <= modulo on "
+                         "modeled t_maxload (strict on skewed links) + "
+                         "2-replica cluster bit-exactness")
+    args = ap.parse_args()
+    for r in run(fast=not args.full, smoke=args.smoke):
+        print(r)

@@ -55,7 +55,8 @@ from repro.models.layers import apply_norm, embed
 from repro.models.moe import route
 from repro.models.transformer import layer_params, logits_from_hidden
 from repro.quant.quantize import shadow_nbytes
-from repro.quant.transport import resolve_policy, transport_params
+from repro.quant.transport import (EXPERT_WEIGHT_NAMES, resolve_policy,
+                                   transport_params)
 
 from .align import AlignmentPolicy
 from .predictor import (FrequencyPredictor, GateExtrapolator, RandomPredictor,
@@ -87,6 +88,11 @@ class LayerRecord:
     # timing model's group-padded predicted-load pricing
     shipped: Optional[Tuple[int, ...]] = None
     rehits: int = 0                      # residency re-hits this layer
+    # compute-vs-ship: cold experts whose host-memory streaming beat
+    # their worker link, computed on the main node instead of shipped
+    # (same round-tripped weights — a scheduling decision, not a model
+    # change).  The timing model prices these as serial host compute.
+    hosted: Tuple[int, ...] = ()
 
 
 @dataclass
@@ -233,7 +239,8 @@ class ODMoEEngine:
                  profiles=None, faults=None, transport=None,
                  wave_compute: str = "grouped", prefetch=None,
                  residency=None, peek_horizon: int = 0,
-                 speculate: int = 1):
+                 speculate: int = 1, sched=None, store=None,
+                 gate_stats=None, compute_vs_ship=None):
         if cfg.is_encoder_decoder:
             raise ValueError("engine drives decoder-only models")
         if wave_compute not in ("grouped", "loop"):
@@ -279,28 +286,70 @@ class ODMoEEngine:
         # move fewer bytes.
         self.transport = resolve_policy(transport)
         self.moe_layers = moe_layer_indices(cfg)
-        g = group_size or max(cfg.top_k, 1)
-        if profiles is not None:
-            profiles = tuple(profiles)
-            n_workers = len(profiles)
-            if n_workers % g:
-                raise ValueError("len(profiles) must be divisible by the "
-                                 "group size")
-        elif n_workers % g:
-            n_workers = g * max(1, n_workers // g)
-        if profiles is not None or faults is not None:
-            # lazy: repro.fleet imports repro.core.schedule
-            from repro.fleet import FleetSchedule, uniform_profiles
-            self.sched = FleetSchedule(
-                n_workers, g, profiles=profiles or uniform_profiles(n_workers))
+        # ``compute_vs_ship``: None = always ship (the historical
+        # behavior); True / a float enables MoNDE-style per-expert
+        # pricing on the reload path — a cold expert whose host-memory
+        # streaming time (full weights / cvs GB/s) beats its worker's
+        # link time (packed bytes / link GB/s) is computed on the main
+        # node instead of shipped.  Pure scheduling: either path runs
+        # the same round-tripped weights, so tokens are unchanged.
+        if compute_vs_ship is True:
+            compute_vs_ship = 42.0        # RTX3090_EDGE.cpu_mem_gbps
+        if compute_vs_ship is not None and compute_vs_ship <= 0:
+            raise ValueError("compute_vs_ship must be a positive GB/s")
+        if compute_vs_ship is not None and wave_compute != "grouped":
+            raise ValueError("compute_vs_ship requires the grouped wave "
+                             "path")
+        self.cvs_gbps = compute_vs_ship
+        if sched is not None:
+            # a prebuilt (shared) schedule: replicas in a cluster pass
+            # the same FleetSchedule so worker-slot contention and
+            # liveness are arbitrated through one fleet state
+            if profiles is not None:
+                raise ValueError("pass profiles via the prebuilt sched")
+            self.sched = sched
+            n_workers, g = sched.n_workers, sched.group_size
         else:
-            self.sched = GroupSchedule(n_workers, g)
+            g = group_size or max(cfg.top_k, 1)
+            if profiles is not None:
+                profiles = tuple(profiles)
+                n_workers = len(profiles)
+                if n_workers % g:
+                    raise ValueError("len(profiles) must be divisible by "
+                                     "the group size")
+            elif n_workers % g:
+                n_workers = g * max(1, n_workers // g)
+            if (profiles is not None or faults is not None
+                    or compute_vs_ship is not None):
+                # lazy: repro.fleet imports repro.core.schedule.  cvs
+                # needs FleetSchedule's per-link t_load_s pricing, so a
+                # uniform fleet (identical ordering — pinned) stands in.
+                from repro.fleet import FleetSchedule, uniform_profiles
+                self.sched = FleetSchedule(
+                    n_workers, g,
+                    profiles=profiles or uniform_profiles(n_workers))
+            else:
+                self.sched = GroupSchedule(n_workers, g)
         self.faults = faults
+        # ``gate_stats`` (repro.fleet.placement.GateStatsRecorder, duck-
+        # typed) observes every step's true routing — the collection
+        # side of gate-statistics placement.  Recording only.
+        self.gate_stats = gate_stats
         # the store packs the ORIGINAL weights once; the engine's own
         # compute params unpack those same cached shards, so slot
         # contents and main-node expert weights are bit-identical by
-        # construction (and the quantize pass runs once, not twice)
-        self.store = ExpertStore(cfg, params, policy=self.transport)
+        # construction (and the quantize pass runs once, not twice).
+        # A prebuilt ``store`` (cluster replicas share one) must carry
+        # the same transport policy or slot contents would diverge from
+        # this engine's compute params.
+        if store is not None:
+            if store.policy is not self.transport and \
+                    store.policy.describe() != self.transport.describe():
+                raise ValueError("shared store transport policy differs "
+                                 "from the engine's")
+            self.store = store
+        else:
+            self.store = ExpertStore(cfg, params, policy=self.transport)
         self.params = (params if self.transport.trivial
                        else transport_params(cfg, params, self.transport,
                                              packed=self.store.get_packed))
@@ -652,6 +701,10 @@ class ODMoEEngine:
         rec.layers.append(lr)
         if self.freq is not None:
             self.freq.observe(li, true)
+        if self.gate_stats is not None:
+            # realized routing feeds the placement optimizer (recording
+            # only — scheduling for THIS run is untouched)
+            self.gate_stats.observe(moe_i, true, np.asarray(topk_gate))
         if self.residency is not None:
             # realized routing feeds the gate-statistics policy
             self.slots.observe_gates(li, true, np.asarray(topk_gate))
@@ -757,16 +810,15 @@ class ODMoEEngine:
                         reserved[w] = reserved.get(w, 0) + 1
             else:
                 rest = pred_experts
-            targets: List[int] = []
-            for w in self.sched.load_targets(group):
-                if reserved.get(w, 0):         # slot pledged to a re-hit
-                    reserved[w] -= 1
-                    continue
-                targets.append(w)
-            rest = rest[:len(targets)]   # beyond fleet slots -> reloads
-            payloads = (self.prefetch.collect(step_idx, layer, rest)
-                        if self.prefetch is not None and rest else {})
-            for e, w in zip(rest, targets):
+            # the schedule places predicted experts onto load slots
+            # (skipping slots pledged to re-hits); a placement plan's
+            # expert->worker affinity is honored here, overflow beyond
+            # the fleet's slots falls through to the reload path
+            pairs = self.sched.place(moe_i, rest, reserved)
+            payloads = (self.prefetch.collect(
+                step_idx, layer, [e for e, _ in pairs])
+                if self.prefetch is not None and pairs else {})
+            for e, w in pairs:
                 if self.slots.load(step_idx, layer, e, w, predicted=True,
                                    payload=payloads.get(e)):
                     shipped.append(e)
@@ -778,11 +830,12 @@ class ODMoEEngine:
             self.faults.apply_layer(step_idx, moe_i, self.sched.state,
                                     self.slots)
         # 2) gate result is ground truth: reload anything missing
-        order = self.sched.serving_order(group)    # alive workers only
+        order = self.sched.serving_order(moe_i)    # alive workers only
         needed = list(dict.fromkeys(int(e) for e in true.reshape(-1)))
         reloads = 0
         assignments: List[Tuple[int, int]] = []
         waves: List[List[Tuple[int, int]]] = []
+        hosted: List[int] = []
         contrib = None                     # grouped: (B, k, d) fp32
         loop_contrib: Dict[Tuple[int, int], jax.Array] = {}
         remaining = needed
@@ -809,6 +862,7 @@ class ODMoEEngine:
             # commit in assignment order — the same worker choices and
             # event order the synchronous path produces
             loads: List[Tuple[int, int]] = []
+            wave_hosted: List[int] = []
             for e in remaining:
                 if e in wave:
                     continue
@@ -817,6 +871,14 @@ class ODMoEEngine:
                     #            computes next wave, no reload needed
                 if not free:
                     break                          # overflow -> next wave
+                # compute-vs-ship (MoNDE-style): if streaming this
+                # expert from host memory beats its candidate worker's
+                # link, compute it on the main node — no load, no slot,
+                # no reload; the candidate slot stays free for the next
+                # miss.  Same round-tripped weights either way.
+                if self._prefer_host(layer, e, free[0]):
+                    wave_hosted.append(e)
+                    continue
                 loads.append((e, free.pop(0)))
             payloads = (self.prefetch.fetch_now(step_idx, layer,
                                                 [e for e, _ in loads])
@@ -831,12 +893,18 @@ class ODMoEEngine:
                 self._compute_wave_loop(layer, h, true, gates, wave,
                                         loop_contrib)
             else:
-                contrib = self._compute_wave(layer, h, true, gates, wave,
-                                             contrib)
+                if wave:           # all-hosted waves skip the slot call
+                    contrib = self._compute_wave(layer, h, true, gates,
+                                                 wave, contrib)
+                if wave_hosted:
+                    contrib = self._compute_hosted(layer, h, true, gates,
+                                                   wave_hosted, contrib)
             done = [(e, wave[e]) for e in remaining if e in wave]
             assignments.extend(done)
             waves.append(done)
-            remaining = [e for e in remaining if e not in wave]
+            hosted.extend(wave_hosted)
+            skip = set(wave) | set(wave_hosted)
+            remaining = [e for e in remaining if e not in skip]
         # deterministic accumulation: (row, rank) order, wave-independent
         if self.wave_compute == "loop":
             y = jnp.zeros((true.shape[0], h.shape[1]), jnp.float32)
@@ -853,8 +921,43 @@ class ODMoEEngine:
                          gates=gates,
                          shipped=(tuple(shipped)
                                   if self.residency is not None else None),
-                         rehits=rehits)
+                         rehits=rehits, hosted=tuple(hosted))
         return lr, y
+
+    # ------------------------------------------------- compute-vs-ship
+    def _prefer_host(self, layer: int, expert: int, worker: int) -> bool:
+        """Price a cold expert both ways: ship its packed payload over
+        the candidate worker's (possibly throttled) link, or stream the
+        full-width weights from host memory and compute on the main
+        node.  ``FleetSchedule.t_load_s`` is the same pricing the timing
+        clock uses, so the decision can never desynchronize from the
+        replayed cost."""
+        if self.cvs_gbps is None:
+            return False
+        t_ship = self.sched.t_load_s(worker,
+                                     self.store.packed_bytes(layer, expert))
+        t_host = self.store.expert_bytes / (self.cvs_gbps * 1e9)
+        return t_host < t_ship
+
+    def _compute_hosted(self, layer, h, true, gates, experts: List[int],
+                        contrib):
+        """Main-node twin of ``_compute_wave``: the stacked weights come
+        straight from the store's packed shards (``unpack_shard`` — the
+        identical round-trip worker slots hold) instead of slot
+        contents, so the grouped-FFN call produces bit-identical
+        contributions and the (B, k, d) accumulation stays order-free."""
+        experts = sorted(experts)
+        shards = [self.store.unpack_shard(layer, e) for e in experts]
+        stacked = {name: jnp.stack([s[name] for s in shards])
+                   for name in EXPERT_WEIGHT_NAMES}
+        eid = np.asarray(experts)
+        match = true[..., None] == eid
+        slot_map = np.where(match.any(-1), match.argmax(-1),
+                            -1).astype(np.int32)
+        wc = grouped_topk_contrib(h, stacked["w_gate"], stacked["w_up"],
+                                  stacked["w_down"], jnp.asarray(slot_map),
+                                  jnp.asarray(gates))
+        return wc if contrib is None else contrib + wc
 
     def _compute_wave(self, layer, h, true, gates, wave: Dict[int, int],
                       contrib):

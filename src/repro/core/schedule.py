@@ -10,7 +10,7 @@ load may take without stalling compute, assuming correct prediction.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import List, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 
 @dataclass(frozen=True)
@@ -41,35 +41,57 @@ class GroupSchedule:
         return [(e, workers[j % len(workers)])
                 for j, e in enumerate(experts)]
 
-    def spill_workers(self, group: int) -> List[int]:
+    def spill_workers(self, moe_index: int) -> List[int]:
         """Deterministic overflow order when a composed batch routes more
-        unique experts than ``group`` holds: the other groups' workers,
-        nearest group first (they are between loads for their own layers).
-        Shared by every request in the composed batch — the batch is one
-        schedule, not per-request schedules."""
+        unique experts than the layer's group holds: the other groups'
+        workers, nearest group first (they are between loads for their
+        own layers).  Shared by every request in the composed batch —
+        the batch is one schedule, not per-request schedules."""
+        group = self.group_of(moe_index)
         order: List[int] = []
         for step in range(1, self.n_groups):
             order.extend(self.workers_of_group((group + step) % self.n_groups))
         return order
 
     # ---------------------------------------------------- fleet extension
-    # Hooks the engine and timing clock schedule through.  The base
-    # schedule assumes every worker alive with one slot;
+    # Hooks the engine and timing clock schedule through, keyed by the
+    # MoE layer index (``group_of`` derives the home group, so passing a
+    # group id < n_groups is equivalent — every ordering cycles with
+    # period ``n_groups`` unless a placement plan says otherwise).  The
+    # base schedule assumes every worker alive with one slot;
     # ``repro.fleet.FleetSchedule`` overrides these with liveness-,
-    # link-speed- and capacity-aware orders.
-    def active_workers_of_group(self, group: int) -> List[int]:
-        """Workers of ``group`` currently able to serve (base: all)."""
-        return self.workers_of_group(group)
+    # link-speed-, capacity- and plan-aware orders.
+    def active_workers_of_group(self, moe_index: int) -> List[int]:
+        """Workers of the layer's home group able to serve (base: all)."""
+        return self.workers_of_group(self.group_of(moe_index))
 
-    def serving_order(self, group: int) -> List[int]:
-        """Worker preference order for this group's layer: the group
-        itself, then spill."""
-        return self.workers_of_group(group) + self.spill_workers(group)
+    def serving_order(self, moe_index: int) -> List[int]:
+        """Worker preference order for this layer: the home group, then
+        spill."""
+        return (self.workers_of_group(self.group_of(moe_index))
+                + self.spill_workers(moe_index))
 
-    def load_targets(self, group: int) -> List[int]:
+    def load_targets(self, moe_index: int) -> List[int]:
         """Slot preference order for predicted loads (base: one slot per
         worker, so identical to ``serving_order``)."""
-        return self.serving_order(group)
+        return self.serving_order(moe_index)
+
+    def place(self, moe_index: int, experts: Sequence[int],
+              reserved: Optional[Dict[int, int]] = None
+              ) -> List[Tuple[int, int]]:
+        """Map predicted experts onto load slots: walk ``load_targets``,
+        skip ``reserved`` slots (worker -> already-occupied slot count,
+        e.g. residency re-hits), pair experts with the surviving slots
+        in order and drop any overflow (the reload path picks those up).
+        ``FleetSchedule`` overrides this with plan affinity."""
+        budget = dict(reserved) if reserved else {}
+        targets: List[int] = []
+        for w in self.load_targets(moe_index):
+            if budget.get(w, 0) > 0:
+                budget[w] -= 1
+                continue
+            targets.append(w)
+        return list(zip(experts, targets))
 
     # --------------------------------------------------------------- Eq. 1
     def t_maxload(self, t_main: float, t_worker: float) -> float:

@@ -159,7 +159,8 @@ class DecodeClock:
 
     def __init__(self, cfg: ModelConfig, sched: GroupSchedule,
                  profile: HardwareProfile, shadow_scheme: str = "int8",
-                 predictor: str = "sep", transport=None):
+                 predictor: str = "sep", transport=None,
+                 worker_free: Optional[Dict[int, float]] = None):
         self.sched = sched
         self.profile = profile
         self.predictor = predictor
@@ -185,6 +186,9 @@ class DecodeClock:
         self.t_worker = profile.t_stream(lb["expert"]) + profile.t_lan(emb)
         self.t_load = profile.t_load(default_packed)
         self.t_head = profile.t_stream(lb["embed"])
+        # compute-vs-ship: a hosted expert streams its full-width
+        # weights from main-node host memory (MoNDE's host-side path)
+        self.t_exp_host = lb["expert"] / (profile.cpu_mem_gbps * 1e9)
         # fleet awareness (repro.fleet.FleetSchedule): per-worker link
         # bandwidths + shared liveness/throttle state
         self._expert_bytes = default_packed
@@ -194,7 +198,13 @@ class DecodeClock:
         shadow_active = cfg.active_param_count() * wb * qf
         self.t_shadow_layer = profile.t_stream(shadow_active / cfg.num_layers)
         self.align_payload = kv_bytes_per_token(cfg, wb)
-        self.worker_free: Dict[int, float] = defaultdict(float)
+        # ``worker_free`` may be a SHARED dict: cluster replicas each
+        # run their own clock (own main node) over one worker fleet, so
+        # a worker busy loading for one replica delays the others —
+        # cross-replica slot contention arbitrated through these
+        # timelines.
+        self.worker_free: Dict[int, float] = (
+            worker_free if worker_free is not None else defaultdict(float))
         self.now = 0.0
 
     def _scheme_bytes(self, scheme: str) -> float:
@@ -314,15 +324,19 @@ class DecodeClock:
             moe_i += 1
             lr = layer_rec.get(li)
             t += self.t_router                 # gate runs on main node
-            g = sched.group_of(moe_i)
-            # alive group workers; a dead worker's timeline freezes
-            workers = sched.active_workers_of_group(g)
+            # alive home workers (plan-aware under a placement plan); a
+            # dead worker's timeline freezes
+            workers = sched.active_workers_of_group(moe_i)
             # composed batches overflow the group onto the rest of the
             # fleet (and onto multi-slot workers' spare capacity), same
             # order as the engine's spill assignment
-            targets = sched.load_targets(g)
+            targets = sched.load_targets(moe_i)
             if not targets:                    # whole fleet dead
                 raise RuntimeError("no alive workers in the fleet")
+            # compute-vs-ship: hosted experts never crossed a link — they
+            # must not be priced as ships below
+            hosted = (set(getattr(lr, "hosted", ()) or ())
+                      if lr is not None else set())
             # predicted loads: issued as early as prediction + worker
             # allow; each priced by ITS expert's packed transport bytes
             # (group-padding loads beyond the known experts price at the
@@ -357,11 +371,17 @@ class DecodeClock:
             else:
                 # no prefetch at all: load after the gate result
                 true_u = ([int(e) for e in
-                           dict.fromkeys(lr.true.reshape(-1).tolist())]
+                           dict.fromkeys(lr.true.reshape(-1).tolist())
+                           if int(e) not in hosted]
                           if lr is not None else [])
-                n_loads = max(len(workers),
-                              min(len(true_u) or len(workers),
-                                  len(targets)))
+                if hosted:
+                    # the record is exact: only the non-hosted experts
+                    # shipped, with no group padding
+                    n_loads = min(len(true_u), len(targets))
+                else:
+                    n_loads = max(len(workers),
+                                  min(len(true_u) or len(workers),
+                                      len(targets)))
                 for j in range(n_loads):
                     w = targets[j % len(targets)]
                     e = true_u[j] if j < len(true_u) else None
@@ -378,7 +398,8 @@ class DecodeClock:
             if lr is not None and lr.predicted is not None and lr.reloads:
                 pred_set = {int(e) for e in lr.predicted.reshape(-1)}
                 true_set = [int(e) for e in
-                            dict.fromkeys(lr.true.reshape(-1).tolist())]
+                            dict.fromkeys(lr.true.reshape(-1).tolist())
+                            if int(e) not in hosted]
                 pool = ([e for e in true_set if e not in pred_set]
                         + [e for e in true_set if e in pred_set])
                 for i in range(lr.reloads):
@@ -388,6 +409,11 @@ class DecodeClock:
                     worker_free[w] = ls + self.t_load_for(
                         w, self._bytes_for(li, e))
                     load_done = max(load_done, worker_free[w])
+            # compute-vs-ship: hosted experts took no link and no reload
+            # above — they stream from host memory and compute serially
+            # on the main node after the gate
+            if lr is not None and getattr(lr, "hosted", ()):
+                t += len(lr.hosted) * self.t_exp_host
             # the wave's embeddings reach workers in one message
             ready = t + profile.t_lan(spec * self.emb)
             ec_start = max(ready, load_done)

@@ -1,15 +1,20 @@
 """Heterogeneous fault-tolerant worker fleet: per-worker capability
 profiles, scripted fault injection (kill/recover/throttle at chosen
-decode steps), and a liveness- and link-aware extension of the paper's
-group schedule.  See docs/ARCHITECTURE.md for the failure-injection
-walkthrough."""
+decode steps), a liveness- and link-aware extension of the paper's
+group schedule, and gate-statistics expert placement (``placement``).
+See docs/ARCHITECTURE.md for the failure-injection walkthrough and the
+cluster-serving section."""
 from .faults import FaultEvent, FaultInjector, outage, random_fault_script
+from .placement import (GateStatsRecorder, PlacementPlan,
+                        expected_t_maxload, modulo_plan,
+                        optimize_placement, uniform_plan)
 from .profile import (DEFAULT_LINK_GBPS, FleetState, WorkerProfile,
                       uniform_profiles)
 from .schedule import FleetSchedule
 
 __all__ = [
     "DEFAULT_LINK_GBPS", "FaultEvent", "FaultInjector", "FleetSchedule",
-    "FleetState", "WorkerProfile", "outage", "random_fault_script",
-    "uniform_profiles",
+    "FleetState", "GateStatsRecorder", "PlacementPlan", "WorkerProfile",
+    "expected_t_maxload", "modulo_plan", "optimize_placement", "outage",
+    "random_fault_script", "uniform_plan", "uniform_profiles",
 ]

@@ -12,6 +12,11 @@ fleet-aware:
   * ``load_targets`` expands the serving order by per-worker slot
     capacity (breadth-first), so multi-slot workers absorb extra
     predicted experts before the schedule spills further;
+  * a ``plan=`` (``repro.fleet.placement.PlacementPlan``) replaces the
+    ``i mod G`` rotation with gate-statistics placement: worker orders
+    come from the plan (liveness-filtered at query time) and
+    ``place``/``assign`` honor the plan's expert -> worker affinity;
+    the uniform/no-stats plan reproduces the rotation exactly (pinned);
   * Eq. (1) is preserved *per worker*: the ``t_maxload`` budget is a
     group property, but whether a given worker's link meets it is
     per-link (``io_bottlenecked_worker``) — a throttled or slow worker
@@ -20,7 +25,7 @@ fleet-aware:
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 from repro.core.schedule import GroupSchedule
 
@@ -33,6 +38,9 @@ class FleetSchedule(GroupSchedule):
     profiles: Tuple[WorkerProfile, ...] = ()
     state: Optional[FleetState] = field(default=None, compare=False,
                                         repr=False)
+    # repro.fleet.placement.PlacementPlan (untyped here: placement
+    # imports this module, so the hint would be circular)
+    plan: Optional[object] = field(default=None, repr=False)
 
     def __post_init__(self):
         GroupSchedule.__post_init__(self)
@@ -46,6 +54,9 @@ class FleetSchedule(GroupSchedule):
         if self.state is None:
             object.__setattr__(self, "state",
                                FleetState.fresh(self.n_workers))
+        if (self.plan is not None
+                and self.plan.n_workers != self.n_workers):
+            raise ValueError("plan sized for a different fleet")
 
     # ---------------------------------------------------------- liveness
     def alive(self, worker: int) -> bool:
@@ -63,26 +74,43 @@ class FleetSchedule(GroupSchedule):
         return sorted(workers, key=lambda w: -self.link_gbps_of(w))
 
     # ---------------------------------------------------------- ordering
-    def active_workers_of_group(self, group: int) -> List[int]:
+    def _plan_alive(self, moe_index: int) -> List[int]:
+        """The plan's worker order for this layer, dead workers dropped
+        (the plan is static; liveness is filtered at query time)."""
+        return [w for w in self.plan.order_for(moe_index) if self.alive(w)]
+
+    def active_workers_of_group(self, moe_index: int) -> List[int]:
+        if self.plan is not None:
+            home = self.plan.order_for(moe_index)[:self.group_size]
+            return [w for w in home if self.alive(w)]
+        group = self.group_of(moe_index)
         return self._fast_first(
             w for w in self.workers_of_group(group) if self.alive(w))
 
-    def spill_workers(self, group: int) -> List[int]:
+    def spill_workers(self, moe_index: int) -> List[int]:
         """Overflow order: other groups' *alive* workers, nearest group
-        first, fast links first within each group."""
+        first, fast links first within each group (with a plan: the
+        plan's order beyond the layer's home workers)."""
+        if self.plan is not None:
+            rest = self.plan.order_for(moe_index)[self.group_size:]
+            return [w for w in rest if self.alive(w)]
+        group = self.group_of(moe_index)
         order: List[int] = []
         for step in range(1, self.n_groups):
-            order.extend(self.active_workers_of_group(
-                (group + step) % self.n_groups))
+            order.extend(self._fast_first(
+                w for w in self.workers_of_group((group + step)
+                                                 % self.n_groups)
+                if self.alive(w)))
         return order
 
-    def serving_order(self, group: int) -> List[int]:
-        return self.active_workers_of_group(group) + self.spill_workers(group)
+    def serving_order(self, moe_index: int) -> List[int]:
+        return (self.active_workers_of_group(moe_index)
+                + self.spill_workers(moe_index))
 
-    def load_targets(self, group: int) -> List[int]:
+    def load_targets(self, moe_index: int) -> List[int]:
         """Serving order expanded by slot capacity, breadth-first: every
         alive worker takes one expert before any takes a second."""
-        order = self.serving_order(group)
+        order = self.serving_order(moe_index)
         out: List[int] = []
         depth = 0
         while True:
@@ -95,13 +123,70 @@ class FleetSchedule(GroupSchedule):
 
     def assign(self, moe_index: int, experts: Sequence[int]
                ) -> List[Tuple[int, int]]:
-        """(expert -> worker) over the alive serving order.  Unlike the
-        base schedule, overflow beyond the group spills onto other
-        groups' alive workers before any worker is reused."""
-        order = self.serving_order(self.group_of(moe_index))
-        if not order:
+        """(expert -> worker) over the capacity-expanded ``load_targets``
+        order: overflow beyond the group spills onto other groups' alive
+        workers, and a multi-slot worker absorbs a second expert before
+        any worker is *reused* beyond capacity.  On capacity-1 fleets
+        the expansion equals ``serving_order``, reproducing the old
+        round-robin bit-exactly (pinned).  With a placement plan, each
+        expert goes to its planned worker when that worker is alive with
+        a free slot; the rest fill the remaining expansion in order."""
+        targets = self.load_targets(moe_index)
+        if not targets:
             raise RuntimeError("no alive workers in the fleet")
-        return [(e, order[j % len(order)]) for j, e in enumerate(experts)]
+        plan = self.plan
+        if plan is not None and plan.expert_workers is not None:
+            avail = list(targets)
+            pinned: List[Optional[int]] = []
+            for e in experts:
+                w = plan.worker_of(moe_index, e)
+                if w is not None and w in avail:
+                    avail.remove(w)
+                    pinned.append(w)
+                else:
+                    pinned.append(None)
+            out: List[Tuple[int, int]] = []
+            j = 0
+            for e, w in zip(experts, pinned):
+                if w is None:
+                    pool = avail if avail else targets
+                    w = pool[j % len(pool)]
+                    j += 1
+                out.append((e, w))
+            return out
+        return [(e, targets[j % len(targets)])
+                for j, e in enumerate(experts)]
+
+    def place(self, moe_index: int, experts: Sequence[int],
+              reserved: Optional[Dict[int, int]] = None
+              ) -> List[Tuple[int, int]]:
+        """Predicted-load placement.  Without a plan (or without expert
+        affinity) this is the base positional walk over ``load_targets``.
+        With affinity, each predicted expert lands on its planned worker
+        when that worker still has a free slot; the rest pair with the
+        remaining slots in preference order, and overflow is dropped for
+        the reload path exactly like the base placement."""
+        plan = self.plan
+        if plan is None or plan.expert_workers is None:
+            return super().place(moe_index, experts, reserved)
+        budget = dict(reserved) if reserved else {}
+        slots: List[int] = []
+        for w in self.load_targets(moe_index):
+            if budget.get(w, 0) > 0:
+                budget[w] -= 1
+                continue
+            slots.append(w)
+        placed: List[Tuple[int, int]] = []
+        overflow: List[int] = []
+        for e in experts:
+            w = plan.worker_of(moe_index, e)
+            if w is not None and w in slots:
+                slots.remove(w)
+                placed.append((e, w))
+            else:
+                overflow.append(e)
+        placed.extend(zip(overflow, slots))
+        return placed
 
     # ------------------------------------------------------ Eq. 1, per-link
     def t_load_s(self, worker: int, expert_bytes: float,

@@ -11,6 +11,13 @@ Continuous-batching mode (the ``repro.serve`` subsystem) — enabled by
   PYTHONPATH=src python -m repro.launch.serve --requests 8 \
       --arrival-rate 2.0 --max-batch 4
 
+Cluster mode (``repro.serve.cluster``) — N replica loops over ONE
+shared worker fleet / expert store, with optional gate-stats expert
+placement and compute-vs-ship wave scheduling:
+
+  PYTHONPATH=src python -m repro.launch.serve --requests 16 \
+      --replicas 2 --placement gate-stats --compute-vs-ship
+
 Both run real prefill+decode through ``ODMoEEngine`` (prediction,
 on-demand loading, alignment, eviction — all live) and verify outputs
 match the dense reference bit-for-bit.  Serving mode drives Poisson
@@ -30,10 +37,15 @@ import numpy as np
 from repro.configs import get_config
 from repro.core import (AlignmentPolicy, ODMoEEngine, RTX3090_EDGE,
                         node_memory_report, simulate_cached, simulate_odmoe)
+from repro.fleet import (FleetSchedule, GateStatsRecorder,
+                         expected_t_maxload, modulo_plan,
+                         optimize_placement)
 from repro.models import greedy_generate, init_params
 from repro.quant import TieredPolicy, UniformPolicy
 from repro.serve import (BatchComposer, KVPool, ServingLoop, WorkloadSpec,
-                         dense_cache_footprint, make_trace, make_traffic)
+                         dense_cache_footprint, make_cluster, make_trace,
+                         make_traffic)
+from repro.serve.cluster import ROUTING_POLICIES
 
 
 def build_parser() -> argparse.ArgumentParser:
@@ -105,6 +117,28 @@ def build_parser() -> argparse.ArgumentParser:
                          "youngest-first preemption, page-exact resume)")
     ap.add_argument("--page-tokens", type=int, default=16,
                     help="KV slots per page (with --kv-pages)")
+    # ----------------------------------------------- cluster mode flags
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="serving replicas over ONE shared worker fleet "
+                         "/ expert store (>1 routes --requests traffic "
+                         "through repro.serve.ClusterRouter)")
+    ap.add_argument("--routing", default="least_loaded",
+                    choices=list(ROUTING_POLICIES),
+                    help="per-request replica routing policy "
+                         "(with --replicas > 1)")
+    ap.add_argument("--placement", default="modulo",
+                    choices=["modulo", "gate-stats"],
+                    help="expert placement: 'modulo' = the paper's "
+                         "positional i mod G mapping; 'gate-stats' = "
+                         "calibrate a GateStatsRecorder on a short "
+                         "decode, then greedily place hot experts on "
+                         "fast links to minimize expected per-wave "
+                         "t_maxload (tokens stay bit-exact either way)")
+    ap.add_argument("--compute-vs-ship", action="store_true",
+                    help="price each cold expert's host-memory compute "
+                         "against its worker link and keep the cheaper "
+                         "side (MoNDE-style; scheduling only — same "
+                         "round-tripped weights)")
     return ap
 
 
@@ -146,12 +180,50 @@ def print_transport_stats(eng) -> None:
         for s, (n, b) in sorted(by_scheme.items())))
 
 
-def serve_traffic(cfg, params, args) -> None:
-    transport = build_transport(cfg, params, args)
+def build_placement(cfg, params, args):
+    """--placement gate-stats: run a short calibration decode with a
+    ``GateStatsRecorder``, optimize expert placement against the
+    recorded routing distribution, and return a plan-carrying
+    ``FleetSchedule`` (None for the default modulo mapping)."""
+    if args.placement != "gate-stats":
+        return None
+    cal = GateStatsRecorder()
     eng = ODMoEEngine(cfg, params, n_workers=args.workers,
-                      predictor=args.predictor, shadow_scheme=args.shadow,
-                      transport=transport, speculate=args.speculate)
-    policy = AlignmentPolicy(args.token_period, args.kv_period)
+                      predictor="none", gate_stats=cal)
+    key = jax.random.PRNGKey(args.seed + 2)
+    batch = {"tokens": jax.random.randint(key, (1, args.prompt_len), 0,
+                                          cfg.vocab_size)}
+    eng.generate(batch, max(8, args.tokens // 2))
+    g = max(cfg.top_k, 1)
+    base = FleetSchedule(args.workers, g)
+    kw = dict(num_experts=cfg.num_experts, n_moe=cal.n_layers)
+    bkw = dict(kw, expert_bytes=eng.store.expert_bytes)
+    plan = optimize_placement(cal, base, **bkw)
+    e_opt = expected_t_maxload(plan, cal, base, **bkw)
+    e_mod = expected_t_maxload(modulo_plan(base, **kw), cal, base, **bkw)
+    print(f"  placement: gate-stats plan over {cal.n_layers} MoE layers"
+          f" — expected t_maxload {e_opt * 1e3:.4f} ms"
+          f" vs modulo {e_mod * 1e3:.4f} ms")
+    return FleetSchedule(args.workers, g, plan=plan)
+
+
+def engine_kwargs(cfg, params, args, transport) -> dict:
+    """Engine construction kwargs shared by the single-loop, cluster
+    and single-stream paths: predictor/transport plus the optional
+    placement schedule and compute-vs-ship pricing."""
+    kw = dict(predictor=args.predictor, shadow_scheme=args.shadow,
+              transport=transport, speculate=args.speculate)
+    sched = build_placement(cfg, params, args)
+    if sched is not None:
+        kw["sched"] = sched
+    else:
+        kw["n_workers"] = args.workers
+    if args.compute_vs_ship:
+        kw["compute_vs_ship"] = True
+    return kw
+
+
+def build_requests(cfg, args):
     if args.workload == "trace":
         spec = WorkloadSpec(n_requests=args.requests,
                             rate=args.arrival_rate, arrival=args.arrival,
@@ -159,11 +231,64 @@ def serve_traffic(cfg, params, args) -> None:
                             max_prompt=4 * args.prompt_len,
                             output_median=args.tokens,
                             max_output=2 * args.tokens)
-        reqs = make_trace(cfg, spec, seed=args.seed)
-    else:
-        reqs = make_traffic(cfg, args.requests, args.arrival_rate,
-                            prompt_len=args.prompt_len,
-                            max_new=args.tokens, seed=args.seed)
+        return make_trace(cfg, spec, seed=args.seed)
+    return make_traffic(cfg, args.requests, args.arrival_rate,
+                        prompt_len=args.prompt_len,
+                        max_new=args.tokens, seed=args.seed)
+
+
+def check_bit_exact(cfg, params, reqs, outputs, transport) -> None:
+    """Every served request must match its solo reference decode under
+    the SAME transport policy — the cross-cutting correctness bar."""
+    exact = True
+    for r in reqs:
+        ref = np.asarray(greedy_generate(
+            cfg, params, {"tokens": jnp.asarray(r.prompt)[None, :]},
+            r.max_new_tokens, transport=transport))[0]
+        exact &= bool(np.array_equal(ref, outputs[r.rid]))
+    print(f"  per-request tokens == solo reference "
+          f"(same transport policy): {exact}")
+    assert exact, "serving output diverged from single-request reference"
+
+
+def serve_cluster(cfg, params, args) -> None:
+    transport = build_transport(cfg, params, args)
+    gate_stats = GateStatsRecorder()
+    engine_kw = dict(engine_kwargs(cfg, params, args, transport),
+                     gate_stats=gate_stats)
+    reqs = build_requests(cfg, args)
+    router = make_cluster(cfg, params, replicas=args.replicas,
+                          policy=args.routing, engine_kw=engine_kw,
+                          loop_kw=dict(max_batch=args.max_batch))
+    res = router.run(reqs)
+    check_bit_exact(cfg, params, reqs, res.outputs, transport)
+    rep = res.report()
+    print(f"  cluster: {rep['replicas']} replicas, routing="
+          f"{res.policy}, requests: {rep['n_requests']}, "
+          f"tokens: {rep['total_tokens']}")
+    for m in ("ttft", "tpot"):
+        print(f"  {m.upper()}  mean {rep[f'{m}_mean_s'] * 1e3:.2f} ms   "
+              f"p50 {rep[f'{m}_p50_s'] * 1e3:.2f}   "
+              f"p95 {rep[f'{m}_p95_s'] * 1e3:.2f}   "
+              f"p99 {rep[f'{m}_p99_s'] * 1e3:.2f}")
+    print(f"  throughput: {rep['throughput_tok_s']:.2f} tok/s over "
+          f"{rep['makespan_s']:.3f} s makespan")
+    for i, rr in enumerate(rep["per_replica"]):
+        print(f"  [replica {i}] n={rr['requests']}  "
+              f"mean batch {rr['mean_batch']:.2f}  "
+              f"TTFT p95 {rr['ttft_p95_s'] * 1e3:.2f} ms")
+    if res.autoscale_events:
+        print(f"  autoscale events: {res.autoscale_events}")
+    print(f"  pooled gate stats: {gate_stats.n_layers} MoE layers, "
+          f"{sum(gate_stats.rows.values())} routed rows")
+
+
+def serve_traffic(cfg, params, args) -> None:
+    transport = build_transport(cfg, params, args)
+    eng = ODMoEEngine(cfg, params,
+                      **engine_kwargs(cfg, params, args, transport))
+    policy = AlignmentPolicy(args.token_period, args.kv_period)
+    reqs = build_requests(cfg, args)
     kv_pool = (KVPool(cfg, num_pages=args.kv_pages,
                       page_tokens=args.page_tokens)
                if args.kv_pages else None)
@@ -173,17 +298,7 @@ def serve_traffic(cfg, params, args) -> None:
                        policy=policy, kv_pool=kv_pool,
                        preempt=args.preempt, admit=args.admit)
     res = loop.run(reqs)
-    # ---- bit-exactness: every request == its solo reference decode
-    # under the SAME transport policy
-    exact = True
-    for r in reqs:
-        ref = np.asarray(greedy_generate(
-            cfg, params, {"tokens": jnp.asarray(r.prompt)[None, :]},
-            r.max_new_tokens, transport=transport))[0]
-        exact &= bool(np.array_equal(ref, res.outputs[r.rid]))
-    print(f"  per-request tokens == solo reference "
-          f"(same transport policy): {exact}")
-    assert exact, "serving output diverged from single-request reference"
+    check_bit_exact(cfg, params, reqs, res.outputs, transport)
     # ---- latency / throughput report (modeled edge profile)
     rep = res.timings.report()
     print(f"  requests: {rep['n_requests']}  tokens: {rep['total_tokens']}"
@@ -260,9 +375,8 @@ def serve_single(cfg, params, args) -> None:
     batch = {"tokens": jax.random.randint(key, (1, args.prompt_len), 0,
                                           cfg.vocab_size)}
     transport = build_transport(cfg, params, args)
-    eng = ODMoEEngine(cfg, params, n_workers=args.workers,
-                      predictor=args.predictor, shadow_scheme=args.shadow,
-                      transport=transport, speculate=args.speculate)
+    eng = ODMoEEngine(cfg, params,
+                      **engine_kwargs(cfg, params, args, transport))
     policy = AlignmentPolicy(args.token_period, args.kv_period)
     toks, trace = eng.generate(batch, args.tokens, policy)
     ref = greedy_generate(cfg, params, batch, args.tokens,
@@ -301,15 +415,24 @@ def main():
                          "inapplicable (see DESIGN.md §4); serve it with "
                          "examples/quickstart.py instead.")
     params = init_params(cfg, jax.random.PRNGKey(args.seed))
+    if args.replicas > 1 and not args.requests:
+        raise SystemExit("--replicas > 1 needs --requests traffic")
     mode = (f"continuous batching: {args.requests} {args.workload} "
             f"requests @ {args.arrival_rate}/s, max-batch "
             f"{args.max_batch} ({args.compose})"
+            + (f", {args.replicas} replicas ({args.routing})"
+               if args.replicas > 1 else "")
             if args.requests else "single stream")
     print(f"[serve] {cfg.name}: E={cfg.num_experts} top{cfg.top_k}, "
           f"{args.workers} workers, predictor={args.predictor}"
           + (f"/{args.shadow}" if args.predictor == "sep" else "")
-          + f", transport={args.transport_precision} — {mode}")
-    if args.requests:
+          + f", transport={args.transport_precision}"
+          + f", placement={args.placement}"
+          + (", compute-vs-ship" if args.compute_vs_ship else "")
+          + f" — {mode}")
+    if args.requests and args.replicas > 1:
+        serve_cluster(cfg, params, args)
+    elif args.requests:
         serve_traffic(cfg, params, args)
     else:
         serve_single(cfg, params, args)

@@ -14,12 +14,17 @@ Four layers, composed by ``ServingLoop.run``:
   * ``loop``     — ``ServingLoop``: prefill-on-admission, iterative
     composed decode, budget-aware admission with youngest-first
     preemption and page-exact resume, co-simulated virtual time
-    (TTFT/TPOT/throughput).
+    (TTFT/TPOT/throughput);
+  * ``cluster``  — ``ClusterRouter``: N replica loops over one shared
+    worker fleet / expert store / gate stats, per-request routing
+    (least-loaded / weighted / round-robin), an autoscaling hook, and
+    merged per-replica + cluster-wide reports.
 
 Guarantee: per-request outputs are bit-identical to solo decoding —
-batch composition, deferral and preemption are scheduling, never
-arithmetic.
+batch composition, deferral, preemption, replica routing and placement
+are scheduling, never arithmetic.
 """
+from .cluster import ClusterResult, ClusterRouter, make_cluster
 from .composer import BatchComposer
 from .kvpool import (KVPool, PagedCacheBatch, PagedRequestCache,
                      PoolExhausted, dense_cache_footprint)
@@ -31,10 +36,11 @@ from .workload import (DEFAULT_TENANTS, TenantClass, WorkloadSpec,
                        heavy_tail_lengths, make_trace)
 
 __all__ = [
-    "BatchComposer", "KVPool", "PagedCacheBatch", "PagedRequestCache",
-    "PoolExhausted", "dense_cache_footprint", "ServeResult", "ServingLoop",
-    "StepRecord", "preemption_victim", "Request", "RequestQueue",
-    "RequestState", "make_traffic", "DEFAULT_TENANTS", "TenantClass",
-    "WorkloadSpec", "bursty_arrivals", "diurnal_arrivals",
+    "BatchComposer", "ClusterResult", "ClusterRouter", "KVPool",
+    "PagedCacheBatch", "PagedRequestCache", "PoolExhausted",
+    "dense_cache_footprint", "ServeResult", "ServingLoop",
+    "StepRecord", "make_cluster", "preemption_victim", "Request",
+    "RequestQueue", "RequestState", "make_traffic", "DEFAULT_TENANTS",
+    "TenantClass", "WorkloadSpec", "bursty_arrivals", "diurnal_arrivals",
     "heavy_tail_lengths", "make_trace",
 ]

@@ -486,88 +486,141 @@ class ServingLoop:
             state.pending = (p_i, s_i, at, ak, drafts)
 
     # --------------------------------------------------------------- run
+    def start(self, requests: Sequence[Request], *,
+              clock: Optional[DecodeClock] = None,
+              cache_len: Optional[int] = None) -> None:
+        """Set up a serving session without driving it: queue, clock and
+        per-session counters.  ``run`` = start + tick-until-done +
+        finish; a ``ClusterRouter`` instead interleaves ``tick`` calls
+        across replicas (and feeds arrivals via ``add_request``),
+        passing each replica its own ``clock`` (sharing one
+        ``worker_free`` fleet timeline) and a cluster-wide
+        ``cache_len``."""
+        eng = self.engine
+        requests = list(requests)
+        if cache_len is None:
+            if not requests:
+                raise ValueError("cache_len is required to start with an "
+                                 "empty request set")
+            cache_len = max(len(r.prompt) + r.max_new_tokens
+                            for r in requests) + 2
+        cache_len = self.max_seq_len or cache_len
+        if self.kv_pool is not None:
+            self.kv_pool.reset()
+            # every request shares one page-aligned window (bit-exact vs
+            # the dense path: the extra tail slots stay pos=-1/masked)
+            cache_len = self.kv_pool.set_window(cache_len)
+        self._cache_len = cache_len
+        self._queue = RequestQueue(requests)
+        self._clock = clock if clock is not None else DecodeClock(
+            eng.cfg, eng.sched, self.profile,
+            shadow_scheme=(eng.shadow.scheme if eng.shadow else "int8"),
+            predictor=eng.predictor_kind,
+            transport=getattr(eng, "transport", None))
+        self._trace = Trace()
+        self._steps = []
+        self._deferred = _AdmissionQueue(self.admit_policy)
+        self._admit_seq = 0
+        self._swap_s = 0.0
+        self._step = 0
+
+    def add_request(self, req: Request) -> None:
+        """Enqueue a request into a started session (cluster routing):
+        it admits when the clock passes its arrival, exactly like an
+        initial request."""
+        self._queue.add(req)
+
+    def has_work(self) -> bool:
+        """True while the session still has anything to serve — the
+        ``run`` loop condition, exposed so a cluster router can park
+        idle replicas (their clock freezes until new work is routed)."""
+        return not self._queue.all_done or bool(self._deferred)
+
+    @property
+    def clock(self) -> DecodeClock:
+        return self._clock
+
+    def tick(self) -> bool:
+        """One iteration of the serving loop (the body of ``run``'s
+        while loop, verbatim).  Returns False when there is nothing
+        left to do."""
+        if not self.has_work():
+            return False
+        queue, clock = self._queue, self._clock
+        deferred, cache_len = self._deferred, self._cache_len
+        progressed = False
+        if self.kv_pool is not None:
+            progressed |= self._resume_preempted(queue, clock)
+            while deferred and self._admission_fits(deferred.peek()):
+                self._admit_or_retire(deferred.pop(), cache_len,
+                                      clock, queue)
+                progressed = True
+        arrived = queue.pop_arrived(clock.now)
+        if self.admit_policy == "priority":
+            # weightiest tenant first; FIFO within a weight class
+            arrived.sort(key=lambda r: (-r.weight, r.arrival_s,
+                                        r.rid))
+        for req in arrived:
+            # budget-aware admission drains the deferred backlog in
+            # the admission policy's order — strictly FIFO by
+            # default: while an older request waits for pages,
+            # younger arrivals queue behind it (mirrors the resume
+            # path), otherwise a stream of small requests could
+            # starve a large one.  Under "priority" the backlog is
+            # weight-ordered instead, so interactive arrivals jump
+            # deferred batch traffic.
+            if deferred or not self._admission_fits(req):
+                self.kv_pool.stats.deferred_admissions += 1
+                deferred.push(req)
+                continue
+            self._admit_or_retire(req, cache_len, clock, queue)
+            progressed = True
+        if self.prefill_chunk:
+            progressed |= self._advance_prefills(queue, clock,
+                                                 cache_len)
+        runnable = queue.runnable()
+        if not runnable:
+            nxt = queue.next_arrival_s()
+            if nxt is not None:
+                clock.advance_to(nxt)        # idle until the next arrival
+                return True
+            if queue.all_done and not deferred:
+                return False
+            if progressed:
+                return True                  # retires freed pages; retry
+            raise RuntimeError(
+                "KV pool deadlock: nothing runnable, resumable or "
+                "admittable (pool smaller than one request window?)")
+        self._ensure_peeks(runnable)
+        batch = self.composer.compose(runnable)
+        if self.kv_pool is not None:
+            batch = self._ensure_batch_pages(batch, queue, clock)
+            if not batch:
+                return True                  # preemptions freed pages
+        self._decode_composed(batch, clock, self._trace, self._steps,
+                              self._step, queue.state_counts())
+        for state in list(batch):
+            if state.done:
+                state.finish_s = clock.now
+                self._retire(state, queue)
+        self._step += 1
+        return True
+
     def run(self, requests: Sequence[Request]) -> ServeResult:
         eng = self.engine
         if not requests:
             return ServeResult(outputs={}, timings=ServingTimings(
                 [], [], [], []), trace=Trace(),
                 n_workers=eng.sched.n_workers)
-        cache_len = self.max_seq_len or (
-            max(len(r.prompt) + r.max_new_tokens for r in requests) + 2)
-        if self.kv_pool is not None:
-            self.kv_pool.reset()
-            # every request shares one page-aligned window (bit-exact vs
-            # the dense path: the extra tail slots stay pos=-1/masked)
-            cache_len = self.kv_pool.set_window(cache_len)
-        queue = RequestQueue(requests)
-        clock = DecodeClock(eng.cfg, eng.sched, self.profile,
-                            shadow_scheme=(eng.shadow.scheme
-                                           if eng.shadow else "int8"),
-                            predictor=eng.predictor_kind,
-                            transport=getattr(eng, "transport", None))
-        trace = Trace()
-        steps: List[StepRecord] = []
-        deferred = _AdmissionQueue(self.admit_policy)
-        self._admit_seq = 0
-        self._swap_s = 0.0
-        step = 0
-        while not queue.all_done or deferred:
-            progressed = False
-            if self.kv_pool is not None:
-                progressed |= self._resume_preempted(queue, clock)
-                while deferred and self._admission_fits(deferred.peek()):
-                    self._admit_or_retire(deferred.pop(), cache_len,
-                                          clock, queue)
-                    progressed = True
-            arrived = queue.pop_arrived(clock.now)
-            if self.admit_policy == "priority":
-                # weightiest tenant first; FIFO within a weight class
-                arrived.sort(key=lambda r: (-r.weight, r.arrival_s,
-                                            r.rid))
-            for req in arrived:
-                # budget-aware admission drains the deferred backlog in
-                # the admission policy's order — strictly FIFO by
-                # default: while an older request waits for pages,
-                # younger arrivals queue behind it (mirrors the resume
-                # path), otherwise a stream of small requests could
-                # starve a large one.  Under "priority" the backlog is
-                # weight-ordered instead, so interactive arrivals jump
-                # deferred batch traffic.
-                if deferred or not self._admission_fits(req):
-                    self.kv_pool.stats.deferred_admissions += 1
-                    deferred.push(req)
-                    continue
-                self._admit_or_retire(req, cache_len, clock, queue)
-                progressed = True
-            if self.prefill_chunk:
-                progressed |= self._advance_prefills(queue, clock,
-                                                     cache_len)
-            runnable = queue.runnable()
-            if not runnable:
-                nxt = queue.next_arrival_s()
-                if nxt is not None:
-                    clock.advance_to(nxt)    # idle until the next arrival
-                    continue
-                if queue.all_done and not deferred:
-                    break
-                if progressed:
-                    continue                 # retires freed pages; retry
-                raise RuntimeError(
-                    "KV pool deadlock: nothing runnable, resumable or "
-                    "admittable (pool smaller than one request window?)")
-            self._ensure_peeks(runnable)
-            batch = self.composer.compose(runnable)
-            if self.kv_pool is not None:
-                batch = self._ensure_batch_pages(batch, queue, clock)
-                if not batch:
-                    continue                 # preemptions freed pages
-            self._decode_composed(batch, clock, trace, steps, step,
-                                  queue.state_counts())
-            for state in list(batch):
-                if state.done:
-                    state.finish_s = clock.now
-                    self._retire(state, queue)
-            step += 1
+        self.start(requests)
+        while self.tick():
+            pass
+        return self.finish()
+
+    def finish(self) -> ServeResult:
+        """Close a served session: collect kv/prefetch/spec stats and
+        build the ``ServeResult`` (the tail of the historical ``run``)."""
+        eng, queue = self.engine, self._queue
         kv_stats = None
         if self.kv_pool is not None:
             kv_stats = self.kv_pool.stats.as_dict()
@@ -593,8 +646,9 @@ class ServingLoop:
                           "acceptance": (tc / (tw * self.speculate)
                                          if tw else 0.0),
                           "per_request": per}
-        return self._result(queue, trace, steps, eng.sched.n_workers,
-                            kv_stats, prefetch_stats, spec_stats)
+        return self._result(queue, self._trace, self._steps,
+                            eng.sched.n_workers, kv_stats, prefetch_stats,
+                            spec_stats)
 
     # ------------------------------------------------------ composed step
     def _decode_composed(self, batch: List[RequestState],

@@ -201,6 +201,15 @@ class RequestQueue:
         updates go through ``activate``/``retire``)."""
         return list(self._active.values())
 
+    def add(self, req: Request) -> None:
+        """Enqueue one more pending arrival (cluster routing feeds a
+        started queue online).  O(log n) push; duplicate rids against
+        the pending/active/finished populations are rejected."""
+        if (req.rid in self._active or req.rid in self.finished
+                or any(rid == req.rid for _, rid, _ in self._pending)):
+            raise ValueError(f"request id {req.rid} already in the queue")
+        heapq.heappush(self._pending, (req.arrival_s, req.rid, req))
+
     # ---------------------------------------------------------- arrivals
     def next_arrival_s(self) -> Optional[float]:
         return self._pending[0][0] if self._pending else None

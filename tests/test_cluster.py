@@ -1,0 +1,413 @@
+"""Multi-replica cluster serving (`repro.serve.cluster`).
+
+The load-bearing invariant, extended to cluster scale: whatever replica
+served a request, whatever plan placed its experts, however the shared
+fleet was contended, and under adversarial executor schedules, every
+request's tokens are bit-identical to solo
+``greedy_generate(..., transport=policy)``.  Routing, placement and
+compute-vs-ship are scheduling, never arithmetic.
+"""
+import functools
+
+import jax
+import numpy as np
+import pytest
+
+from conftest import tiny_moe
+from repro.core import (ChaosExecutor, ODMoEEngine, RTX3090_EDGE,
+                        simulate_odmoe)
+from repro.fleet import (FleetSchedule, GateStatsRecorder, WorkerProfile,
+                         optimize_placement, uniform_plan)
+from repro.models import greedy_generate, init_params
+from repro.serve import (ClusterRouter, Request, RequestQueue, ServingLoop,
+                         make_cluster)
+from repro.serve.cluster import ROUTING_POLICIES
+
+N_TOK = 5
+
+
+@functools.lru_cache(maxsize=None)
+def _model():
+    cfg = tiny_moe()
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _requests(cfg, n=6, rate=40.0, seed=3):
+    rng = np.random.default_rng(seed)
+    arrive = np.cumsum(rng.exponential(1.0 / rate, size=n))
+    return [Request(rid=i,
+                    prompt=rng.integers(0, cfg.vocab_size,
+                                        6 + int(rng.integers(0, 4))),
+                    max_new_tokens=N_TOK, arrival_s=float(arrive[i]),
+                    weight=float(1 + (i % 3)))
+            for i in range(n)]
+
+
+def _reference(cfg, params, reqs, transport=None):
+    import jax.numpy as jnp
+    return {r.rid: np.asarray(greedy_generate(
+        cfg, params, {"tokens": jnp.asarray(r.prompt)[None, :]},
+        r.max_new_tokens, transport=transport))[0] for r in reqs}
+
+
+def _plan_sched(cfg, params, kind):
+    """None (planless), the uniform no-stats plan, or a gate-stats
+    optimized plan calibrated from a short decode."""
+    if kind is None:
+        return None
+    if kind == "uniform":
+        return FleetSchedule(4, 2, plan=uniform_plan(4, 2))
+    rec = GateStatsRecorder()
+    eng = ODMoEEngine(cfg, params, n_workers=4, group_size=2,
+                      gate_stats=rec)
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(9), (1, 8),
+                                          0, cfg.vocab_size)}
+    eng.generate(batch, 4)
+    base = FleetSchedule(4, 2)
+    plan = optimize_placement(rec, base, num_experts=cfg.num_experts,
+                              n_moe=rec.n_layers)
+    return FleetSchedule(4, 2, plan=plan)
+
+
+# ------------------------------------------- bit-exactness property grid
+@pytest.mark.parametrize("placement", [None, "uniform", "opt"])
+@pytest.mark.parametrize("transport", [None, "int8"])
+def test_cluster_bitexact_across_placement_and_transport(placement,
+                                                         transport):
+    cfg, params = _model()
+    engine_kw = dict(n_workers=4, group_size=2, transport=transport)
+    sched = _plan_sched(cfg, params, placement)
+    if sched is not None:
+        engine_kw = dict(sched=sched, transport=transport)
+    router = make_cluster(cfg, params, replicas=2, engine_kw=engine_kw,
+                          loop_kw=dict(max_batch=2))
+    reqs = _requests(cfg)
+    res = router.run(reqs)
+    ref = _reference(cfg, params, reqs, transport)
+    for r in reqs:
+        assert np.array_equal(res.outputs[r.rid], ref[r.rid]), \
+            f"rid={r.rid} placement={placement} transport={transport}"
+    assert set(res.assignments) == {r.rid for r in reqs}
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("replicas", [1, 3])
+@pytest.mark.parametrize("placement", [None, "opt"])
+def test_cluster_bitexact_replica_sweep(replicas, placement):
+    cfg, params = _model()
+    engine_kw = dict(n_workers=4, group_size=2)
+    sched = _plan_sched(cfg, params, placement)
+    if sched is not None:
+        engine_kw = dict(sched=sched)
+    router = make_cluster(cfg, params, replicas=replicas,
+                          engine_kw=engine_kw, loop_kw=dict(max_batch=2))
+    reqs = _requests(cfg, n=8)
+    res = router.run(reqs)
+    ref = _reference(cfg, params, reqs)
+    for r in reqs:
+        assert np.array_equal(res.outputs[r.rid], ref[r.rid])
+
+
+def test_cluster_single_replica_matches_solo_loop():
+    """A 1-replica cluster is just a ServingLoop with extra routing —
+    same outputs, same token streams."""
+    cfg, params = _model()
+    reqs = _requests(cfg)
+    solo = ServingLoop(ODMoEEngine(cfg, params, n_workers=4,
+                                   group_size=2),
+                       max_batch=2).run(reqs)
+    res = make_cluster(cfg, params, replicas=1,
+                       engine_kw=dict(n_workers=4, group_size=2),
+                       loop_kw=dict(max_batch=2)).run(reqs)
+    for rid, out in solo.outputs.items():
+        assert np.array_equal(res.outputs[rid], out)
+
+
+# ------------------------------------------------------- chaos schedules
+@pytest.mark.parametrize("seed", range(3))
+def test_cluster_chaos_executor_bitexact(seed):
+    """Cluster router active while every replica's prefetch executor
+    runs an adversarial chaos schedule (permuted completions, drops,
+    deferrals): tokens still bit-identical to solo greedy decode."""
+    cfg, params = _model()
+    first = ODMoEEngine(cfg, params, n_workers=4, group_size=2,
+                        prefetch=ChaosExecutor(seed, p_drop=0.3,
+                                               p_defer=0.3))
+    second = ODMoEEngine(cfg, params, sched=first.sched,
+                         store=first.store,
+                         prefetch=ChaosExecutor(seed + 100, p_drop=0.3,
+                                                p_defer=0.3))
+    router = ClusterRouter([ServingLoop(eng, max_batch=2)
+                            for eng in (first, second)])
+    reqs = _requests(cfg, seed=seed + 11)
+    res = router.run(reqs)
+    ref = _reference(cfg, params, reqs)
+    for r in reqs:
+        assert np.array_equal(res.outputs[r.rid], ref[r.rid]), \
+            f"chaos seed={seed} rid={r.rid}"
+    for eng in (first, second):
+        eng.close()
+
+
+# ------------------------------------------------------ shared fleet state
+def test_replicas_share_fleet_and_store():
+    cfg, params = _model()
+    router = make_cluster(cfg, params, replicas=3,
+                          engine_kw=dict(n_workers=4, group_size=2))
+    engines = [l.engine for l in router.loops]
+    assert all(e.sched is engines[0].sched for e in engines)
+    assert all(e.store is engines[0].store for e in engines)
+    router.run(_requests(cfg, n=3))
+    # one worker_free timeline dict threaded through every clock
+    clocks = [l.clock for l in router.loops]
+    assert all(c.worker_free is clocks[0].worker_free for c in clocks)
+
+
+def test_shared_gate_stats_pool_across_replicas():
+    cfg, params = _model()
+    rec = GateStatsRecorder()
+    router = make_cluster(cfg, params, replicas=2,
+                          engine_kw=dict(n_workers=4, group_size=2,
+                                         gate_stats=rec))
+    reqs = _requests(cfg)
+    router.run(reqs)
+    decode_rows = sum(r.max_new_tokens - 1 for r in reqs)
+    assert rec.n_layers > 0
+    # every decode-step token (the first falls out of prefill) routed
+    # through every MoE layer exactly once, pooled across both replicas
+    assert all(rows == decode_rows for rows in rec.rows.values())
+
+
+# ------------------------------------------------------------- routing
+def test_round_robin_cycles_assignments():
+    cfg, params = _model()
+    router = make_cluster(cfg, params, replicas=2, policy="round_robin",
+                          engine_kw=dict(n_workers=4, group_size=2))
+    reqs = _requests(cfg, n=4)
+    res = router.run(reqs)
+    order = [res.assignments[r.rid]
+             for r in sorted(reqs, key=lambda r: (r.arrival_s, r.rid))]
+    assert order == [0, 1, 0, 1]
+
+
+def test_least_loaded_spreads_simultaneous_arrivals():
+    cfg, params = _model()
+    router = make_cluster(cfg, params, replicas=2, policy="least_loaded",
+                          engine_kw=dict(n_workers=4, group_size=2))
+    reqs = [Request(rid=i,
+                    prompt=np.arange(6, dtype=np.int32) + i,
+                    max_new_tokens=N_TOK) for i in range(4)]
+    res = router.run(reqs)
+    counts = [0, 0]
+    for rid, rep in res.assignments.items():
+        counts[rep] += 1
+    assert counts == [2, 2]          # ties break to the lower index
+
+
+def test_routing_is_deterministic():
+    cfg, params = _model()
+    runs = []
+    for _ in range(2):
+        router = make_cluster(cfg, params, replicas=2, policy="weighted",
+                              engine_kw=dict(n_workers=4, group_size=2))
+        runs.append(router.run(_requests(cfg)).assignments)
+    assert runs[0] == runs[1]
+
+
+def test_router_validation():
+    cfg, params = _model()
+    loop = ServingLoop(ODMoEEngine(cfg, params, n_workers=4,
+                                   group_size=2))
+    with pytest.raises(ValueError):
+        ClusterRouter([])
+    with pytest.raises(ValueError):
+        ClusterRouter([loop], policy="fastest")
+    with pytest.raises(ValueError):
+        ClusterRouter([loop], min_replicas=2)
+    with pytest.raises(ValueError):
+        ClusterRouter([loop], high_load=1.0, low_load=2.0)
+    with pytest.raises(ValueError):
+        make_cluster(cfg, params, replicas=0)
+    assert set(ROUTING_POLICIES) == {"round_robin", "least_loaded",
+                                     "weighted"}
+
+
+def test_request_queue_add_rejects_duplicates():
+    cfg, _ = _model()
+    reqs = _requests(cfg, n=2)
+    q = RequestQueue(reqs[:1])
+    q.add(reqs[1])
+    with pytest.raises(ValueError):
+        q.add(reqs[1])                           # pending duplicate
+    # finished duplicates rejected after the run too
+    cfg, params = _model()
+    loop = ServingLoop(ODMoEEngine(cfg, params, n_workers=4,
+                                   group_size=2))
+    loop.run(reqs)
+    with pytest.raises(ValueError):
+        loop._queue.add(reqs[0])
+
+
+# ------------------------------------------------------------ autoscale
+def test_autoscale_spawns_under_pressure():
+    cfg, params = _model()
+    router = make_cluster(cfg, params, replicas=2, autoscale=True,
+                          min_replicas=1, high_load=1.5, low_load=0.5,
+                          sustain=1,
+                          engine_kw=dict(n_workers=4, group_size=2))
+    # a burst at t=0 builds outstanding pressure on the single active
+    # replica before it can finish anything
+    reqs = [Request(rid=i, prompt=np.arange(6, dtype=np.int32),
+                    max_new_tokens=N_TOK) for i in range(6)]
+    res = router.run(reqs)
+    spawns = [e for e in res.autoscale_events if e["event"] == "spawn"]
+    assert spawns and spawns[0]["replica"] == 1
+    assert any(rep == 1 for rep in res.assignments.values())
+    ref = _reference(cfg, params, reqs)
+    for r in reqs:
+        assert np.array_equal(res.outputs[r.rid], ref[r.rid])
+
+
+def test_autoscale_drains_when_idle():
+    cfg, params = _model()
+    router = make_cluster(cfg, params, replicas=2, autoscale=True,
+                          min_replicas=1, high_load=10.0, low_load=5.0,
+                          sustain=1,
+                          engine_kw=dict(n_workers=4, group_size=2))
+    # both replicas start active; trickled arrivals never build pressure
+    router._active = [0, 1]
+    reqs = _requests(cfg, n=4, rate=2.0)
+    res = router.run(reqs)
+    # pressure < low_load on every routing decision -> drain fires, but
+    # never below min_replicas
+    drains = [e for e in res.autoscale_events if e["event"] == "drain"]
+    assert len(drains) <= 1
+
+
+# ------------------------------------------------------------- reports
+def _assert_finite(x, path="report"):
+    if isinstance(x, dict):
+        for k, v in x.items():
+            _assert_finite(v, f"{path}.{k}")
+    elif isinstance(x, (list, tuple)):
+        for i, v in enumerate(x):
+            _assert_finite(v, f"{path}[{i}]")
+    elif isinstance(x, (int, float)):
+        assert np.isfinite(x), f"non-finite at {path}: {x}"
+
+
+def test_cluster_report_merges_and_is_finite():
+    cfg, params = _model()
+    router = make_cluster(cfg, params, replicas=2,
+                          engine_kw=dict(n_workers=4, group_size=2))
+    reqs = _requests(cfg)
+    res = router.run(reqs)
+    rep = res.report()
+    assert rep["replicas"] == 2
+    assert rep["n_requests"] == len(reqs)
+    assert rep["total_tokens"] == sum(r.max_new_tokens for r in reqs)
+    assert len(rep["per_replica"]) == 2
+    assert sum(rr["requests"] for rr in rep["per_replica"]) == len(reqs)
+    _assert_finite(rep)
+    _assert_finite(res.tenant_report())
+    # merged timings are ascending-rid, same contract as one loop
+    assert list(res.outputs) == sorted(res.outputs)
+
+
+def test_empty_cluster_run():
+    cfg, params = _model()
+    router = make_cluster(cfg, params, replicas=2,
+                          engine_kw=dict(n_workers=4, group_size=2))
+    res = router.run([])
+    assert res.outputs == {}
+    _assert_finite(res.report())
+
+
+# ------------------------------------------------------ compute-vs-ship
+def _throttled_profiles(n=4, gbps=0.05):
+    return tuple(WorkerProfile(w, link_gbps=gbps) for w in range(n))
+
+
+def test_cvs_bitexact_and_hosted_accounting():
+    cfg, params = _model()
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(2), (1, 8),
+                                          0, cfg.vocab_size)}
+    kw = dict(profiles=_throttled_profiles(), group_size=2,
+              predictor="none")
+    hosted_eng = ODMoEEngine(cfg, params, compute_vs_ship=True, **kw)
+    ship_eng = ODMoEEngine(cfg, params, **kw)
+    out_h, tr_h = hosted_eng.generate(batch, N_TOK)
+    out_s, tr_s = ship_eng.generate(batch, N_TOK)
+    assert np.array_equal(np.asarray(out_h), np.asarray(out_s))
+    hosted = sum(len(lr.hosted) for rec in tr_h.records
+                 for lr in rec.layers)
+    reloads = sum(lr.reloads for rec in tr_h.records for lr in rec.layers)
+    # 0.05 GB/s links: hosting always beats shipping, so every cold
+    # expert is hosted and nothing crosses a link
+    assert hosted > 0 and reloads == 0
+    assert hosted_eng.slots.bytes_moved == 0
+    # hosted experts appear in no wave assignment
+    for rec in tr_h.records:
+        for lr in rec.layers:
+            assert not (set(lr.hosted)
+                        & {e for e, _ in lr.assignments})
+
+
+def test_cvs_strictly_faster_on_throttled_links():
+    cfg, params = _model()
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(2), (1, 8),
+                                          0, cfg.vocab_size)}
+    kw = dict(profiles=_throttled_profiles(), group_size=2,
+              predictor="none")
+    hosted_eng = ODMoEEngine(cfg, params, compute_vs_ship=True, **kw)
+    ship_eng = ODMoEEngine(cfg, params, **kw)
+    _, tr_h = hosted_eng.generate(batch, N_TOK)
+    _, tr_s = ship_eng.generate(batch, N_TOK)
+    t_host = sum(simulate_odmoe(cfg, tr_h, hosted_eng.sched, RTX3090_EDGE,
+                                predictor="none").per_token_s)
+    t_ship = sum(simulate_odmoe(cfg, tr_s, ship_eng.sched, RTX3090_EDGE,
+                                predictor="none").per_token_s)
+    assert t_host < t_ship
+
+
+def test_cvs_ships_on_fast_links():
+    """PCIe-class links under an int8 codec beat host streaming, so the
+    pricing decision flips and nothing is hosted — the decision is a
+    real comparison, not a constant."""
+    cfg, params = _model()
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(2), (1, 8),
+                                          0, cfg.vocab_size)}
+    profiles = tuple(WorkerProfile(w, link_gbps=24.0) for w in range(4))
+    eng = ODMoEEngine(cfg, params, profiles=profiles, group_size=2,
+                      predictor="none", transport="int8",
+                      compute_vs_ship=True)
+    _, trace = eng.generate(batch, N_TOK)
+    hosted = sum(len(lr.hosted) for rec in trace.records
+                 for lr in rec.layers)
+    assert hosted == 0
+
+
+def test_cvs_validation():
+    cfg, params = _model()
+    with pytest.raises(ValueError):
+        ODMoEEngine(cfg, params, compute_vs_ship=0.0)
+    with pytest.raises(ValueError):
+        ODMoEEngine(cfg, params, compute_vs_ship=-1.0)
+    with pytest.raises(ValueError):
+        ODMoEEngine(cfg, params, compute_vs_ship=True,
+                    wave_compute="loop")
+
+
+def test_cluster_with_cvs_bitexact():
+    cfg, params = _model()
+    router = make_cluster(
+        cfg, params, replicas=2,
+        engine_kw=dict(profiles=_throttled_profiles(), group_size=2,
+                       predictor="none", compute_vs_ship=True),
+        loop_kw=dict(max_batch=2))
+    reqs = _requests(cfg)
+    res = router.run(reqs)
+    ref = _reference(cfg, params, reqs)
+    for r in reqs:
+        assert np.array_equal(res.outputs[r.rid], ref[r.rid])

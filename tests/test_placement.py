@@ -1,0 +1,283 @@
+"""Gate-stats expert placement (`repro.fleet.placement`).
+
+Pins the PR 9 placement contracts:
+
+  * ``GateStatsRecorder`` is deterministic across equally-seeded engine
+    runs, and ``merge`` is order-independent (counts exactly; mass
+    commutative bit-exactly, associative to float rounding) — replicas
+    can pool observations in any order without changing a plan;
+  * a ``uniform_plan`` (no stats, no affinity) carried by a
+    ``FleetSchedule`` reproduces the planless ``i mod G`` ordering
+    byte-for-byte on every hook, healthy or degraded;
+  * ``optimize_placement`` strictly lowers the modeled expected
+    per-wave ``t_maxload`` vs the modulo baseline on skewed stats;
+  * the unified ``assign`` reproduces the old serving-order round-robin
+    bit-exactly on capacity-1 fleets and honors multi-slot capacity and
+    plan affinity otherwise.
+"""
+import jax
+import numpy as np
+import pytest
+
+from conftest import tiny_moe
+from repro.core import GroupSchedule, ODMoEEngine
+from repro.fleet import (FleetSchedule, GateStatsRecorder, PlacementPlan,
+                         WorkerProfile, expected_t_maxload, modulo_plan,
+                         optimize_placement, uniform_plan,
+                         uniform_profiles)
+from repro.models import init_params
+
+
+def _skewed_stats(n_moe=4, num_experts=8):
+    """A heavy-head routing distribution: experts 0/1 absorb most of
+    the mass, the tail is nearly cold."""
+    rec = GateStatsRecorder()
+    for m in range(n_moe):
+        rec.observe(m, np.array([[0, 1]] * 50 + [[0, 2]] * 30
+                                + [[3, 4]] * 2))
+    return rec
+
+
+# ------------------------------------------------------------- recorder
+@pytest.fixture(scope="module")
+def engine_setup():
+    cfg = tiny_moe()
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (1, 8),
+                                          0, cfg.vocab_size)}
+    return cfg, params, batch
+
+
+def _run_with_recorder(cfg, params, batch):
+    rec = GateStatsRecorder()
+    eng = ODMoEEngine(cfg, params, n_workers=4, group_size=2,
+                      gate_stats=rec)
+    _, trace = eng.generate(batch, 6)
+    return rec, trace
+
+
+def test_recorder_deterministic_across_seeded_runs(engine_setup):
+    cfg, params, batch = engine_setup
+    a, _ = _run_with_recorder(cfg, params, batch)
+    b, _ = _run_with_recorder(cfg, params, batch)
+    assert a.counts == b.counts
+    assert a.rows == b.rows
+    for moe in a.mass:
+        for e in a.mass[moe]:
+            assert a.mass[moe][e] == b.mass[moe][e]   # bit-identical
+
+
+def test_observe_trace_matches_live_recorder(engine_setup):
+    cfg, params, batch = engine_setup
+    live, trace = _run_with_recorder(cfg, params, batch)
+    replay = GateStatsRecorder()
+    replay.observe_trace(trace)
+    assert replay.counts == live.counts
+    assert replay.rows == live.rows
+
+
+def test_merge_commutative_and_associative():
+    rng = np.random.default_rng(7)
+    recs = []
+    for _ in range(3):
+        r = GateStatsRecorder()
+        for m in range(3):
+            t = rng.integers(0, 8, (5, 2))
+            g = rng.normal(size=(5, 2))
+            r.observe(m, t, g)
+        recs.append(r)
+    a, b, c = recs
+    ab, ba = a.merge(b), b.merge(a)
+    assert ab.counts == ba.counts and ab.rows == ba.rows
+    for moe in ab.mass:                       # commutative: bit-exact
+        for e in ab.mass[moe]:
+            assert ab.mass[moe][e] == ba.mass[moe][e]
+    left, right = a.merge(b).merge(c), a.merge(b.merge(c))
+    assert left.counts == right.counts        # associative: counts exact
+    for moe in left.mass:                     # mass: up to rounding
+        for e in left.mass[moe]:
+            assert left.mass[moe][e] == pytest.approx(
+                right.mass[moe][e], rel=1e-12)
+
+
+def test_freq_uniform_when_unobserved():
+    rec = GateStatsRecorder()
+    assert np.allclose(rec.freq(0, 8), 1.0 / 8)
+    rec.observe(0, np.array([[2, 2]]))
+    p = rec.freq(0, 8)
+    assert p[2] == 1.0 and p.sum() == pytest.approx(1.0)
+    assert np.allclose(rec.freq(1, 8), 1.0 / 8)   # other layers untouched
+
+
+# ----------------------------------------------- uniform plan == planless
+def _assert_same_hooks(planned, planless, n_moe=8):
+    for m in range(n_moe):
+        assert planned.active_workers_of_group(m) \
+            == planless.active_workers_of_group(m)
+        assert planned.spill_workers(m) == planless.spill_workers(m)
+        assert planned.serving_order(m) == planless.serving_order(m)
+        assert planned.load_targets(m) == planless.load_targets(m)
+        assert planned.assign(m, [5, 1, 3, 3, 7]) \
+            == planless.assign(m, [5, 1, 3, 3, 7])
+
+
+def test_uniform_plan_reproduces_planless_ordering():
+    state_a = FleetSchedule(8, 2)
+    plan = uniform_plan(8, 2)
+    state_b = FleetSchedule(8, 2, plan=plan)
+    _assert_same_hooks(state_b, state_a)
+    # degraded fleet: the plan is static, liveness filters at query time
+    state_a.state.kill(1)
+    state_b.state.kill(1)
+    _assert_same_hooks(state_b, state_a)
+
+
+def test_uniform_plan_heterogeneous_fast_first():
+    profiles = tuple(WorkerProfile(w, link_gbps=(32.0 if w in (1, 5)
+                                                 else 16.0))
+                     for w in range(8))
+    planless = FleetSchedule(8, 2, profiles=profiles)
+    plan = uniform_plan(8, 2, sched=planless)
+    planned = FleetSchedule(8, 2, profiles=profiles, plan=plan)
+    _assert_same_hooks(planned, planless)
+
+
+def test_moe_index_rekey_cycles_like_groups():
+    """Hooks take the MoE layer index now; without a plan the ordering
+    still cycles with period n_groups, so group-id callers see exactly
+    what they always saw."""
+    s = FleetSchedule(8, 2)
+    for m in range(8):
+        assert s.serving_order(m) == s.serving_order(m % s.n_groups)
+
+
+# --------------------------------------------------------- optimization
+def test_optimized_strictly_beats_modulo_on_skew():
+    stats = _skewed_stats()
+    sched = FleetSchedule(4, 2)
+    kw = dict(num_experts=8, n_moe=4)
+    opt = optimize_placement(stats, sched, **kw)
+    mod = modulo_plan(sched, **kw)
+    e_opt = expected_t_maxload(opt, stats, sched, **kw)
+    e_mod = expected_t_maxload(mod, stats, sched, **kw)
+    assert e_opt < e_mod                       # strictly lower (ISSUE gate)
+
+
+def test_optimizer_splits_hot_pair():
+    """The two hottest experts always route together in the skewed
+    stats, so the optimizer must put them on different workers; the
+    modulo plan (0->w0, 1->w1 of the home group) may or may not."""
+    stats = _skewed_stats(n_moe=1)
+    sched = FleetSchedule(4, 2)
+    opt = optimize_placement(stats, sched, num_experts=8, n_moe=1)
+    assert opt.worker_of(0, 0) != opt.worker_of(0, 1)
+
+
+def test_optimizer_prefers_fast_links_for_hot_experts():
+    profiles = (WorkerProfile(0, link_gbps=4.0),
+                WorkerProfile(1, link_gbps=64.0))
+    sched = FleetSchedule(2, 1, profiles=profiles)
+    stats = _skewed_stats(n_moe=1)
+    opt = optimize_placement(stats, sched, num_experts=8, n_moe=1)
+    assert opt.worker_of(0, 0) == 1            # hottest expert, fastest link
+    assert opt.order_for(0)[0] == 1            # ...and it leads the order
+
+
+def test_expected_t_maxload_scales_with_bytes():
+    stats = _skewed_stats()
+    sched = FleetSchedule(4, 2)
+    kw = dict(num_experts=8, n_moe=4)
+    mod = modulo_plan(sched, **kw)
+    base = expected_t_maxload(mod, stats, sched, **kw)
+    scaled = expected_t_maxload(mod, stats, sched, **kw,
+                                expert_bytes=1e6)
+    assert scaled == pytest.approx(base * 1e6)
+    with pytest.raises(ValueError):            # no affinity -> unscorable
+        expected_t_maxload(uniform_plan(4, 2), stats, sched, **kw)
+
+
+# ------------------------------------------------------- unified assign
+def test_assign_capacity1_pins_old_round_robin():
+    """PR 9 satellite: ``assign`` unified onto the ``load_targets``
+    expansion.  On capacity-1 fleets that expansion IS the serving
+    order, so the old ``order[j % len(order)]`` round-robin must come
+    out bit-exactly — healthy and degraded."""
+    s = FleetSchedule(8, 2)
+    experts = [3, 1, 4, 1, 5, 9 % 8, 2, 6, 5, 3]
+    for m in range(4):
+        order = s.serving_order(m)
+        old = [(e, order[j % len(order)]) for j, e in enumerate(experts)]
+        assert s.assign(m, experts) == old
+    s.state.kill(2)
+    s.state.kill(5)
+    for m in range(4):
+        order = s.serving_order(m)
+        old = [(e, order[j % len(order)]) for j, e in enumerate(experts)]
+        assert s.assign(m, experts) == old
+
+
+def test_assign_capacity_aware_spill():
+    """Multi-slot workers absorb extra experts before any worker is
+    reused beyond capacity (the capacity bug the satellite fixes: the
+    old assign round-robined over serving_order, reusing capacity-1
+    workers while spare slots sat idle)."""
+    profiles = (WorkerProfile(0, capacity=3), WorkerProfile(1),
+                WorkerProfile(2, capacity=2), WorkerProfile(3))
+    s = FleetSchedule(4, 2, profiles=profiles)
+    # load_targets(0) == [0, 1, 2, 3, 0, 2, 0]
+    a = s.assign(0, list(range(7)))
+    assert [w for _, w in a] == [0, 1, 2, 3, 0, 2, 0]
+    # beyond total capacity, the expansion wraps
+    a = s.assign(0, list(range(9)))
+    assert [w for _, w in a] == [0, 1, 2, 3, 0, 2, 0, 0, 1]
+
+
+def test_assign_honors_plan_affinity():
+    stats = _skewed_stats(n_moe=1)
+    sched = FleetSchedule(4, 2)
+    plan = optimize_placement(stats, sched, num_experts=8, n_moe=1)
+    planned = FleetSchedule(4, 2, plan=plan)
+    a = dict(planned.assign(0, [0, 1]))
+    assert a[0] == plan.worker_of(0, 0)
+    assert a[1] == plan.worker_of(0, 1)
+    # dead planned worker: the expert falls back into the remaining pool
+    planned.state.kill(plan.worker_of(0, 0))
+    a2 = dict(planned.assign(0, [0, 1]))
+    assert a2[0] != plan.worker_of(0, 0)
+    assert a2[1] == plan.worker_of(0, 1)
+
+
+def test_place_honors_affinity_and_reserved():
+    stats = _skewed_stats(n_moe=1)
+    sched = FleetSchedule(4, 2)
+    plan = optimize_placement(stats, sched, num_experts=8, n_moe=1)
+    planned = FleetSchedule(4, 2, plan=plan)
+    w0 = plan.worker_of(0, 0)
+    placed = dict(planned.place(0, [0, 5]))
+    assert placed[0] == w0
+    # the planned worker's slot already reserved -> expert 0 falls back
+    placed = dict(planned.place(0, [0], reserved={w0: 1}))
+    assert placed.get(0, w0) != w0 or 0 not in placed
+
+
+def test_plan_validation():
+    with pytest.raises(ValueError):
+        PlacementPlan(4, 2, ())                       # no orders
+    with pytest.raises(ValueError):
+        PlacementPlan(4, 2, ((0, 1, 2, 2),))          # not a permutation
+    with pytest.raises(ValueError):
+        PlacementPlan(4, 2, ((0, 1, 2, 3),) * 2,      # row count mismatch
+                      expert_workers=((0,) * 8,))
+    with pytest.raises(ValueError):                    # wrong fleet size
+        FleetSchedule(8, 2, plan=uniform_plan(4, 2))
+
+
+def test_group_schedule_place_positional():
+    """Base ``place`` (no plan) pairs experts with load targets
+    positionally, skipping reserved slots — the behavior the engine's
+    predicted path relies on."""
+    s = GroupSchedule(4, 2)
+    assert s.place(0, [7, 3]) == [(7, 0), (3, 1)]
+    assert s.place(0, [7, 3], reserved={0: 1}) == [(7, 1), (3, 2)]
+    # overflow beyond targets is dropped (reload path picks it up)
+    assert len(s.place(0, list(range(9)))) <= len(s.load_targets(0))
