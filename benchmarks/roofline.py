@@ -16,7 +16,16 @@ Sources:
     ratio MODEL/compiled-estimate exposes remat + dispatch + full-
     rectangle-attention waste.
 
-Usage: python -m benchmarks.roofline --dryrun artifacts/dryrun.jsonl
+A MEASURED point rides along the analytic rows: the grouped expert-FFN
+kernel, fp32 vs the fused in-kernel-dequant packed kernels (int8/nf4),
+with closed-form HBM bytes-moved per kernel launch and the achieved
+arithmetic intensity — recorded via ``record_bench`` into the committed
+``BENCH_roofline.json`` so the packed kernel's bandwidth win is
+traceable PR over PR.  ``--smoke`` (the CI fast job) gates the
+invariants cheaply: packed bytes-moved strictly below fp32 AND
+bit-identical outputs.
+
+Usage: python -m benchmarks.roofline [--smoke] [--dryrun artifacts/dryrun.jsonl]
 """
 from __future__ import annotations
 
@@ -25,6 +34,10 @@ import json
 import math
 import os
 from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
 
 from repro.configs import get_config
 from repro.models.config import ATTN, DENSE_FF, MOE_FF, INPUT_SHAPES
@@ -118,6 +131,115 @@ def analytic_terms(arch: str, shape_name: str) -> Dict[str, float]:
             "tokens": tokens}
 
 
+# --------------------------------------- measured grouped-GEMM point
+NF4_BLOCK = 64
+
+
+def kernel_bytes_moved(e: int, c: int, d: int, f: int, bc: int, bf: int,
+                       scheme: str) -> int:
+    """Closed-form HBM<->VMEM traffic of one grouped expert-FFN kernel
+    launch at tiling (bc, bf) — the tile streams the ``(E, C/Cb, F/Fb)``
+    grid actually issues (see kernels/moe_gemm/{kernel,packed}.py):
+    every grid step reads its x tile and all three weight tiles; the
+    output tile is written at fi==0 and read+written on every
+    accumulating revisit.  Weight tiles are priced at their WIRE widths
+    for the packed schemes — codes plus the scale tiles that ride along
+    — which is exactly the traffic the fused in-kernel dequant saves."""
+    gc, gf = -(-c // bc), -(-f // bf)
+    steps = e * gc * gf
+    x_bytes = steps * bc * d * 4
+    out_bytes = e * gc * (2 * gf - 1) * bc * d * 4
+    if scheme == "fp32":
+        w_tile = 3 * d * bf * 4
+    elif scheme == "fp16":
+        w_tile = 3 * d * bf * 2
+    elif scheme == "int8":
+        # gate/up: codes (d, bf) + scale row tile (1, bf) f32;
+        # down: codes (bf, d) + scale row tile (1, d) f32
+        w_tile = 2 * (d * bf + 4 * bf) + (bf * d + 4 * d)
+    elif scheme == "nf4":
+        # codes at 2 values/byte + one f32 absmax per 64-run, both axes
+        w_tile = 3 * (d * bf // 2 + 4 * d * bf // NF4_BLOCK)
+    else:
+        raise ValueError(f"unknown scheme {scheme!r}")
+    return x_bytes + out_bytes + steps * w_tile
+
+
+def grouped_gemm_rows(fast: bool = True, smoke: bool = False):
+    """Measure the fp32 vs packed grouped-GEMM kernels (interpret mode
+    on CPU — tile streams and arithmetic identical to TPU, wall clock
+    indicative only) and derive bytes-moved + achieved intensity."""
+    from repro.kernels.moe_gemm import (moe_ffn_kernel,
+                                        moe_ffn_packed_kernel)
+    from repro.quant.transport import device_layout, get_codec
+    from .common import record_bench, row, timed
+
+    e, c, d, f = (2, 16, 64, 128) if (fast or smoke) else (4, 32, 64, 256)
+    bc, bf = min(32, c), min(128, f)
+    flops = 6 * e * c * d * f
+    key = jax.random.PRNGKey(0)
+    weights = {}
+    for i, (name, shp) in enumerate((("w_gate", (d, f)), ("w_up", (d, f)),
+                                     ("w_down", (f, d)))):
+        weights[name] = [jax.random.normal(jax.random.fold_in(key, i * 8 + j),
+                                           shp, jnp.float32)
+                         for j in range(e)]
+    xd = jax.random.normal(jax.random.fold_in(key, 99), (e, c, d),
+                           jnp.float32)
+    rows, metrics = [], {"shape": f"e{e}c{c}d{d}f{f}", "flops": flops}
+    baseline = {}
+    for scheme in ("fp32", "int8", "nf4"):
+        codec = get_codec(scheme)
+        packed = {n: [codec.pack(w) for w in ws]
+                  for n, ws in weights.items()}
+        if scheme == "fp32":
+            full = {n: jnp.stack(ws) for n, ws in weights.items()}
+            fn = lambda: moe_ffn_kernel(
+                xd, full["w_gate"], full["w_up"], full["w_down"],
+                block_c=bc, block_f=bf, interpret=True)
+        else:
+            # dequantize-on-arrival oracle: fp32 kernel on the SAME
+            # round-tripped weights the wire parts decode to
+            full = {n: jnp.stack([codec.unpack(pw) for pw in pws])
+                    for n, pws in packed.items()}
+            parts = {n: tuple(jnp.stack([np.asarray(device_layout(pw)[j])
+                                         for pw in pws])
+                              for j in range(len(device_layout(pws[0]))))
+                     for n, pws in packed.items()}
+            fn = lambda: moe_ffn_packed_kernel(
+                xd, parts, scheme=scheme, block_c=bc, block_f=bf,
+                interpret=True)
+        oracle = (None if scheme == "fp32" else np.asarray(moe_ffn_kernel(
+            xd, full["w_gate"], full["w_up"], full["w_down"],
+            block_c=bc, block_f=bf, interpret=True)))
+        out = np.asarray(fn())                        # compile + warm
+        _, us = timed(lambda: jax.block_until_ready(fn()))
+        nbytes = kernel_bytes_moved(e, c, d, f, bc, bf, scheme)
+        intensity = flops / nbytes
+        baseline[scheme] = (out, nbytes)
+        if oracle is not None:
+            assert np.array_equal(out, oracle), \
+                f"packed {scheme} kernel diverged from dequantized fp32"
+        rows.append(row(f"roofline/grouped_gemm/{scheme}", us,
+                        f"bytes:{nbytes} intensity:{intensity:.2f}"))
+        metrics[f"{scheme}_bytes_moved"] = nbytes
+        metrics[f"{scheme}_intensity"] = intensity
+        metrics[f"{scheme}_us"] = round(us, 1)
+    fp32_bytes = baseline["fp32"][1]
+    for scheme in ("int8", "nf4"):
+        out, nbytes = baseline[scheme]
+        assert nbytes < fp32_bytes, \
+            f"{scheme} kernel moves no fewer bytes than fp32"
+        metrics[f"{scheme}_bytes_saved_x"] = fp32_bytes / nbytes
+    record_bench("roofline", metrics)
+    if smoke:
+        print("roofline smoke OK: packed bytes-moved < fp32 "
+              f"(int8 {fp32_bytes / baseline['int8'][1]:.2f}x, "
+              f"nf4 {fp32_bytes / baseline['nf4'][1]:.2f}x), outputs "
+              "bit-identical to the dequantize-on-arrival kernel")
+    return rows
+
+
 # ------------------------------------------------------------- reporting
 def roofline_row(dry: dict) -> Dict:
     arch, shape = dry["arch"], dry["shape"]
@@ -167,13 +289,17 @@ def markdown_table(rows) -> str:
     return "\n".join(lines)
 
 
-def run(fast: bool = True, dryrun_path: Optional[str] = None):
-    """Benchmark-harness entry: report rooflines for available dry-runs."""
+def run(fast: bool = True, dryrun_path: Optional[str] = None,
+        smoke: bool = False):
+    """Benchmark-harness entry: the measured grouped-GEMM point plus
+    rooflines for available dry-runs."""
     from .common import ARTIFACTS, row, save_artifact
+    rows = grouped_gemm_rows(fast=fast, smoke=smoke)
+    if smoke:
+        return rows
     path = dryrun_path or os.path.join(ARTIFACTS, "dryrun_single.jsonl")
-    rows = []
     if not os.path.exists(path):
-        return [row("roofline/missing-dryrun", 0.0, path)]
+        return rows + [row("roofline/missing-dryrun", 0.0, path)]
     out = []
     with open(path) as f:
         for line in f:
@@ -196,8 +322,12 @@ def run(fast: bool = True, dryrun_path: Optional[str] = None):
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--dryrun", default=None)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI gate: packed kernel bytes-moved < fp32 "
+                         "with bit-identical outputs")
     args = ap.parse_args()
-    for r in run(fast=False, dryrun_path=args.dryrun):
+    for r in run(fast=args.smoke, dryrun_path=args.dryrun,
+                 smoke=args.smoke):
         print(f"{r['name']},{r['us_per_call']},{r['derived']}")
 
 

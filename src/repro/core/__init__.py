@@ -15,7 +15,7 @@ from .prefetch import (ChaosExecutor, GateStatsResidency, LRUResidency,
 from .schedule import GroupSchedule
 from .specdecode import (accept_prefix, select_commit, shadow_rollout,
                          spec_attn_decode, wave_preds)
-from .store import ExpertStore, LoadEvent, WorkerSlots
+from .store import DeviceShard, ExpertStore, LoadEvent, WorkerSlots
 from .timing import (RTX3090_EDGE, TPU_V5E, DecodeClock, HardwareProfile,
                      ODMoETimings, ServingTimings, degraded_tpot_report,
                      latency_percentiles, node_memory_report,
@@ -34,7 +34,8 @@ __all__ = [
     "ResidencyPolicy", "SyncExecutor", "ThreadedExecutor",
     "make_executor", "resolve_residency",
     "GroupSchedule", "accept_prefix", "select_commit", "shadow_rollout",
-    "spec_attn_decode", "wave_preds", "ExpertStore", "LoadEvent",
+    "spec_attn_decode", "wave_preds", "DeviceShard", "ExpertStore",
+    "LoadEvent",
     "WorkerSlots", "RTX3090_EDGE", "TPU_V5E", "DecodeClock",
     "HardwareProfile", "ODMoETimings", "ServingTimings",
     "degraded_tpot_report", "latency_percentiles", "node_memory_report",

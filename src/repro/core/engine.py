@@ -47,7 +47,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.kernels.moe_gemm import combine_topk, grouped_topk_contrib
+from repro.kernels.moe_gemm import (combine_topk, grouped_topk_contrib,
+                                    grouped_topk_contrib_packed)
 from repro.models import prefill
 from repro.models.blocks import block_decode
 from repro.models.config import MOE_FF, NO_FF, ModelConfig
@@ -240,7 +241,8 @@ class ODMoEEngine:
                  wave_compute: str = "grouped", prefetch=None,
                  residency=None, peek_horizon: int = 0,
                  speculate: int = 1, sched=None, store=None,
-                 gate_stats=None, compute_vs_ship=None):
+                 gate_stats=None, compute_vs_ship=None,
+                 packed_slots: bool = False):
         if cfg.is_encoder_decoder:
             raise ValueError("engine drives decoder-only models")
         if wave_compute not in ("grouped", "loop"):
@@ -272,6 +274,17 @@ class ODMoEEngine:
             # the retired loop baseline stays the synchronous oracle
             raise ValueError("prefetch/residency require the grouped "
                              "wave path")
+        if packed_slots and wave_compute != "grouped":
+            # the loop oracle reads full-width slot dicts — it IS the
+            # dequantize-on-arrival baseline packed slots are pinned
+            # bit-identical against
+            raise ValueError("packed_slots requires the grouped wave "
+                             "path")
+        # True: worker slots keep the wire-format codes+scales resident
+        # and the fused Pallas kernel dequantizes in-register — same
+        # bits (in-kernel dequant is elementwise-exact), fewer slot
+        # bytes and less kernel HBM traffic.
+        self.packed_slots = packed_slots
         self.cfg = cfg
         # ``wave_compute='loop'`` keeps the retired per-(row, rank)
         # Python loop as the benchmark baseline and property-test
@@ -362,13 +375,15 @@ class ODMoEEngine:
                                  physical=physical_loading,
                                  profiles=getattr(self.sched, "profiles",
                                                   None),
-                                 residency=self.residency)
+                                 residency=self.residency,
+                                 packed_resident=packed_slots)
         executor = make_executor(prefetch)
         self.prefetch: Optional[PrefetchExecutor] = (
             None if executor is None
             else PrefetchExecutor(self.store, executor,
                                   horizon=peek_horizon,
-                                  physical=physical_loading))
+                                  physical=physical_loading,
+                                  packed=packed_slots))
         # per-layer parameter views sliced once (params never mutate);
         # the decode loop re-slicing them every token was pure overhead
         self._layer_params = [layer_params(cfg, self.params, li)
@@ -967,6 +982,24 @@ class ODMoEEngine:
         stacked axis, and add the gate-weighted contributions into the
         ``(B, k, d)`` accumulator (masked pairs contribute exact
         zeros, so cross-wave accumulation is order-free)."""
+        if self.packed_slots:
+            # packed-resident slots: one fused in-kernel-dequant grouped
+            # call per resident scheme group.  Pairs routed to another
+            # group's experts are masked to exact zeros, so the
+            # per-scheme split is just more wave partitioning — the
+            # accumulation stays order-free and bit-identical.
+            _, groups = self.slots.gather_stack_packed(layer, wave)
+            wc = None
+            for scheme, eids, parts in groups:
+                eid = np.asarray(eids)
+                match = true[..., None] == eid
+                slot_map = np.where(match.any(-1), match.argmax(-1),
+                                    -1).astype(np.int32)
+                gc = grouped_topk_contrib_packed(
+                    h, parts, jnp.asarray(slot_map), jnp.asarray(gates),
+                    scheme=scheme)
+                wc = gc if wc is None else wc + gc
+            return wc if contrib is None else contrib + wc
         experts, stacked = self.slots.gather_stack(layer, wave)
         eid = np.asarray(experts)
         match = true[..., None] == eid                       # (B, k, E_wave)
@@ -1043,7 +1076,8 @@ class ODMoEEngine:
         # arrival the packed wire buffer and the full-width slot are
         # both live on the worker (see WorkerSlots.transient_packed_bytes)
         transient = self.slots.transient_packed_bytes()
-        fleet_bytes = (sum(self.slots.capacity) * self.store.expert_bytes
+        fleet_bytes = (sum(self.slots.capacity)
+                       * self.slots.slot_unit_bytes()
                        + self.sched.n_workers * transient)
         transport_max = max(
             (self.store.packed_bytes(li, e) for li in self.moe_layers
@@ -1056,6 +1090,7 @@ class ODMoEEngine:
             "total_bytes": main + shadow + fleet_bytes,
             "fully_cached_bytes": total,
             # largest per-expert wire payload under the transport policy
-            # (== expert_bytes for fp32); slots still hold full width
+            # (== expert_bytes for fp32); slots hold this footprint too
+            # when packed-resident, full width otherwise
             "expert_transport_bytes": transport_max,
         }

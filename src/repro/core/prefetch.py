@@ -237,18 +237,20 @@ class PrefetchExecutor:
     """
 
     def __init__(self, store, executor, *, horizon: int = 0,
-                 physical: bool = True) -> None:
+                 physical: bool = True, packed: bool = False) -> None:
         self.store = store
         self.executor = executor
         self.horizon = horizon
         self.physical = physical
+        self.packed = packed     # fetch DeviceShards for packed-resident slots
         self._enqueued: set = set()
         self.stats = {"submitted": 0, "demand_fetches": 0, "prefetched": 0,
                       "inline": 0, "stale": 0}
 
     def _fetch_fn(self, layer: int, expert: int):
-        return functools.partial(self.store.unpack_shard, layer, expert,
-                                 self.physical)
+        fetch = (self.store.device_shard if self.packed
+                 else self.store.unpack_shard)
+        return functools.partial(fetch, layer, expert, self.physical)
 
     def enqueue(self, step: int, current_layer: int,
                 pending: Mapping[int, object],

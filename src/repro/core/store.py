@@ -8,7 +8,13 @@ fleet: each worker owns a small number of device-resident expert slots
 bookkeeping of what is resident, what is in flight, and which workers
 are currently alive.  ``load`` physically copies host weights into a
 slot (``jax.device_put``), so engine compute genuinely consumes slot
-contents; eviction is removal or overwrite — there is no cache.  A
+contents; eviction is removal or overwrite — there is no cache.  Slots
+hold one of two representations: the default dequantize-on-arrival mode
+reconstructs full-width weights as the shard lands, while
+``packed_resident=True`` keeps the wire-format codes+scales resident in
+their tile-aligned device layout and defers dequantization into the
+fused grouped-GEMM kernel (``repro.kernels.moe_gemm.packed``) — same
+bits, ~4-8x fewer slot bytes for int8/nf4 policies.  A
 ``fail``-ed worker loses its residents (the device is gone), which
 forces reload-on-miss for anything it held; ``recover`` brings it back
 empty.
@@ -55,7 +61,8 @@ import numpy as np
 from repro.models.config import MOE_FF, ModelConfig
 from repro.models.transformer import layer_params
 from repro.quant.transport import (EXPERT_WEIGHT_NAMES, PackedWeight,
-                                   resolve_policy)
+                                   device_layout, resolve_policy,
+                                   tileable)
 
 
 @dataclass
@@ -69,6 +76,19 @@ class LoadEvent:
     requests: Tuple[int, ...] = ()   # serving: request ids sharing this load
     profile: Optional[object] = None  # fleet: the worker's WorkerProfile
     scheme: str = "fp32"    # transport precision this load shipped at
+
+
+@dataclass(frozen=True)
+class DeviceShard:
+    """One expert's slot contents in packed-resident mode: the wire
+    codes+scales rearranged into the tile-aligned device layout the
+    fused kernel streams.  ``scheme == 'fp32'`` marks the fallback for
+    shapes/dtypes with no tile-aligned layout — its parts are the
+    full-width weights from dequantize-on-arrival, so mixed waves can
+    always compute."""
+    scheme: str
+    parts: Dict[str, Tuple]       # weight name -> device-layout part tuple
+    nbytes: int                   # resident device bytes of this shard
 
 
 class ExpertStore:
@@ -100,6 +120,8 @@ class ExpertStore:
                     n: codec.pack(host[n]) for n in EXPERT_WEIGHT_NAMES}
         sample = next(iter(self._host.values())) if self._host else {}
         self.expert_bytes = int(sum(a.nbytes for a in sample.values()))
+        # tile-aligned device layouts (packed-resident mode), built lazily
+        self._device_host: Dict[Tuple[int, int], Dict[str, Tuple]] = {}
 
     def get_host(self, layer: int, expert: int) -> Dict[str, np.ndarray]:
         return self._host[(layer, expert)]
@@ -135,6 +157,47 @@ class ExpertStore:
                  if device else {n: None for n in packed})
         return {n: codec.unpack(pw, parts[n]) for n, pw in packed.items()}
 
+    # --------------------------------------------- packed-resident mode
+    def resident_tileable(self, layer: int, expert: int) -> bool:
+        """Whether this expert can stay wire-format in its slot: every
+        weight admits the tile-aligned device layout AND the deployment
+        dtype is fp32 (in-kernel dequant produces fp32; a narrower
+        deployment dtype would need the round-cast dequantize-on-arrival
+        performs, so it falls back to keep bits identical)."""
+        shard = self._packed[(layer, expert)]
+        return all(tileable(pw.scheme, pw.shape) and pw.dtype == "float32"
+                   for pw in shard.values())
+
+    def resident_nbytes(self, layer: int, expert: int) -> int:
+        """Device bytes this expert occupies in a packed-resident slot:
+        the exact packed payload when tileable (the device layout is a
+        pure reshape of the wire bytes), else the full-width fallback."""
+        if self.resident_tileable(layer, expert):
+            return self.packed_bytes(layer, expert)
+        return self.expert_bytes
+
+    def device_shard(self, layer: int, expert: int,
+                     device: bool = True) -> DeviceShard:
+        """Packed-resident sibling of :meth:`unpack_shard`: ship the
+        wire bytes and keep them resident in tile-aligned layout (no
+        dequantization — the fused kernel does it in-register).
+        Untileable shapes/dtypes fall back to dequantize-on-arrival,
+        tagged ``scheme='fp32'`` so downstream grouping treats them as
+        full-width."""
+        key = (layer, expert)
+        scheme = self.scheme_of(layer, expert)
+        if not self.resident_tileable(layer, expert):
+            full = self.unpack_shard(layer, expert, device=device)
+            return DeviceShard("fp32", {n: (full[n],) for n in full},
+                               self.expert_bytes)
+        if key not in self._device_host:
+            self._device_host[key] = {
+                n: device_layout(pw)
+                for n, pw in self._packed[key].items()}
+        host = self._device_host[key]
+        parts = jax.device_put(host) if device else dict(host)
+        return DeviceShard(scheme, parts, self.packed_bytes(layer, expert))
+
     def router_weights(self, params):
         """Routers live on the main node (non-expert parameters)."""
         return {li: layer_params(self.cfg, params, li)["ff"]["router"]
@@ -150,11 +213,15 @@ class WorkerSlots:
     def __init__(self, store: ExpertStore, n_workers: int,
                  physical: bool = True,
                  profiles: Optional[Sequence] = None,
-                 residency=None):
+                 residency=None, packed_resident: bool = False):
         self.store = store
         self.n_workers = n_workers
         self.physical = physical  # False: bookkeep only (no device copies)
         self.residency = residency   # ResidencyPolicy or None (cacheless)
+        # True: slots hold wire-format DeviceShards (codes+scales) and
+        # the fused kernel dequantizes in-register; False (default):
+        # dequantize-on-arrival, slots hold full-width weights
+        self.packed_resident = packed_resident
         self.profiles = list(profiles) if profiles else None
         if self.profiles is not None and len(self.profiles) != n_workers:
             raise ValueError("one profile per worker required")
@@ -207,8 +274,11 @@ class WorkerSlots:
     def load(self, token: int, layer: int, expert: int, worker: int,
              predicted: bool, payload: Optional[dict] = None) -> bool:
         """Ship (layer, expert)'s *packed* shard into a slot on
-        ``worker`` and dequantize on arrival, so compute consumes the
-        transported precision while only packed bytes cross the link.
+        ``worker``, so compute consumes the transported precision while
+        only packed bytes cross the link.  Default mode dequantizes on
+        arrival (the slot holds full-width weights); packed-resident
+        mode keeps the wire bytes in the slot and the fused kernel
+        dequantizes in-register — identical arithmetic either way.
         A full worker overwrites a resident: the residency policy's
         victim among released residents when one exists, else the
         oldest (FIFO — the historical cacheless behaviour, counted as
@@ -244,11 +314,17 @@ class WorkerSlots:
             if self.residency is not None:
                 self.residency.forget(victim)
             self.stats["evictions"] += 1
-            self.residency_stats["evicted_bytes"] += self.store.expert_bytes
-        self._slot_data[worker][key] = (
-            payload if payload is not None
-            else self.store.unpack_shard(layer, expert,
-                                         device=self.physical))
+            self.residency_stats["evicted_bytes"] += \
+                self._resident_nbytes(victim)
+        if payload is not None:
+            data = payload
+        elif self.packed_resident:
+            data = self.store.device_shard(layer, expert,
+                                           device=self.physical)
+        else:
+            data = self.store.unpack_shard(layer, expert,
+                                           device=self.physical)
+        self._slot_data[worker][key] = data
         self._occupied[worker].append(key)
         self.stats["loads"] += 1
         self.stats["predicted_loads" if predicted else "reloads"] += 1
@@ -330,10 +406,20 @@ class WorkerSlots:
         for key in sorted(mass):
             self.residency.credit(key, mass[key])
 
+    def _resident_nbytes(self, key: Tuple[int, int]) -> int:
+        """Device bytes one resident expert occupies — full width in the
+        default mode, the packed payload in packed-resident mode (the
+        pricing every eviction/displacement charge uses)."""
+        if self.packed_resident:
+            return self.store.resident_nbytes(*key)
+        return self.store.expert_bytes
+
     def resident_slot_bytes(self, worker: int) -> int:
-        """Full-width device bytes currently held by ``worker``'s
-        occupied slots (active + released residents)."""
-        return len(self._occupied[worker]) * self.store.expert_bytes
+        """Device bytes currently held by ``worker``'s occupied slots
+        (active + released residents) — full-width in the default mode,
+        packed in packed-resident mode."""
+        return sum(self._resident_nbytes(k)
+                   for k in self._occupied[worker])
 
     def slot(self, worker: int, layer: int, expert: int) -> dict:
         assert self.alive[worker], "dead worker used"
@@ -357,6 +443,36 @@ class WorkerSlots:
                    for name in EXPERT_WEIGHT_NAMES}
         return experts, stacked
 
+    def gather_stack_packed(self, layer: int, wave: Dict[int, int]):
+        """Packed-resident sibling of :meth:`gather_stack`: stack each
+        wave expert's wire-format parts (codes + scales) instead of
+        full-width fp32.  Because a ``TieredPolicy`` can mix schemes in
+        one wave (and untileable experts fall back to full width), the
+        wave splits into per-scheme groups — one fused grouped call
+        each.  Masked pairs contribute exact zeros, so per-scheme
+        sub-waves cannot change any request's bits (the repo's standing
+        wave-partitioning invariant).
+
+        Returns ``(experts, groups)``: ``experts`` is the full ascending
+        wave order, ``groups`` a list of ``(scheme, expert_ids, parts)``
+        with ``parts`` mapping each weight name to its stacked
+        device-layout part tuple — exactly what
+        ``grouped_topk_contrib_packed`` consumes."""
+        experts = sorted(wave)
+        shards = [self.slot(wave[e], layer, e) for e in experts]
+        groups = []
+        for scheme in dict.fromkeys(s.scheme for s in shards):
+            sel = [(e, s) for e, s in zip(experts, shards)
+                   if s.scheme == scheme]
+            eids = [e for e, _ in sel]
+            parts = {
+                name: tuple(
+                    jnp.stack([s.parts[name][j] for _, s in sel])
+                    for j in range(len(sel[0][1].parts[name])))
+                for name in EXPERT_WEIGHT_NAMES}
+            groups.append((scheme, eids, parts))
+        return experts, groups
+
     def worker_with(self, layer: int, expert: int) -> Optional[int]:
         key = (layer, expert)
         for w in range(self.n_workers):
@@ -369,7 +485,8 @@ class WorkerSlots:
         drop everything resident on ``worker``."""
         n = len(self._occupied[worker])
         self.stats["evictions"] += n
-        self.residency_stats["evicted_bytes"] += n * self.store.expert_bytes
+        self.residency_stats["evicted_bytes"] += sum(
+            self._resident_nbytes(k) for k in self._occupied[worker])
         if self.residency is not None:
             for k in self._occupied[worker]:
                 self.residency.forget(k)
@@ -411,20 +528,43 @@ class WorkerSlots:
         nothing.  Peak over the policy therefore counts only experts
         shipped below full width (pinned against
         ``ExpertStore.packed_bytes`` by tests/test_transport.py).
+
+        In packed-resident mode tileable experts never dequantize on
+        arrival — the arriving wire buffer IS the slot content (a pure
+        reshape), so nothing double-buffers; only untileable fallback
+        experts still pay the transient.
         """
         store = self.store
         return max(
             (store.packed_bytes(li, e)
              for li in store.moe_layers
              for e in range(store.cfg.num_experts)
-             if store.scheme_of(li, e) != "fp32"),
+             if store.scheme_of(li, e) != "fp32"
+             and not (self.packed_resident
+                      and store.resident_tileable(li, e))),
             default=0)
+
+    def slot_unit_bytes(self) -> int:
+        """Device bytes one slot must provision: the full-width expert
+        in the default mode, the largest resident shard (packed when
+        tileable, full-width fallback otherwise) in packed-resident
+        mode."""
+        if not self.packed_resident:
+            return self.store.expert_bytes
+        store = self.store
+        return max(
+            (store.resident_nbytes(li, e)
+             for li in store.moe_layers
+             for e in range(store.cfg.num_experts)),
+            default=store.expert_bytes)
 
     def device_bytes_per_worker(self) -> int:
         """Peak device bytes per worker — the paper's '<1 GB per
         worker' quantity: the resident slots (scaled by the largest
         slot capacity in the fleet) plus the transient packed buffer
         live during dequantize-on-arrival.  fp32 transport keeps the
-        historical slots-only value."""
-        return (self.store.expert_bytes * max(self.capacity)
+        historical slots-only value; packed-resident slots shrink the
+        slot term to the wire footprint (pinned strictly below the
+        fp32-slot baseline by tests/test_packed_kernel.py)."""
+        return (self.slot_unit_bytes() * max(self.capacity)
                 + self.transient_packed_bytes())

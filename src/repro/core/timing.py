@@ -160,7 +160,8 @@ class DecodeClock:
     def __init__(self, cfg: ModelConfig, sched: GroupSchedule,
                  profile: HardwareProfile, shadow_scheme: str = "int8",
                  predictor: str = "sep", transport=None,
-                 worker_free: Optional[Dict[int, float]] = None):
+                 worker_free: Optional[Dict[int, float]] = None,
+                 packed_compute: bool = False):
         self.sched = sched
         self.profile = profile
         self.predictor = predictor
@@ -170,9 +171,13 @@ class DecodeClock:
         emb = embedding_payload(cfg, wb)
         self.emb = emb
         # transport precision: expert loads are priced by PACKED bytes
-        # (the codec wire format), while worker compute still streams
-        # full-width weights — dequantize-on-arrival restores them
+        # (the codec wire format).  Worker compute streams full-width
+        # weights when dequantize-on-arrival restores them (the
+        # default); ``packed_compute`` (packed-resident slots + fused
+        # in-kernel-dequant kernel) streams the packed tiles instead —
+        # the kernel-level HBM saving the roofline bench measures.
         self.transport = resolve_policy(transport)
+        self.packed_compute = packed_compute
         self._cfg = cfg
         self._wb = wb
         self._scheme_bytes_cache: Dict[str, float] = {"fp32": lb["expert"]}
@@ -183,7 +188,8 @@ class DecodeClock:
         self.t_main_mamba = profile.t_stream(lb["mamba"])
         self.t_main_dense_ff = profile.t_stream(lb["dense_ff"])
         self.t_router = profile.t_stream(lb["router"])
-        self.t_worker = profile.t_stream(lb["expert"]) + profile.t_lan(emb)
+        expert_stream = default_packed if packed_compute else lb["expert"]
+        self.t_worker = profile.t_stream(expert_stream) + profile.t_lan(emb)
         self.t_load = profile.t_load(default_packed)
         self.t_head = profile.t_stream(lb["embed"])
         # compute-vs-ship: a hosted expert streams its full-width
@@ -430,7 +436,8 @@ def simulate_odmoe(cfg: ModelConfig, trace: Trace, sched: GroupSchedule,
                    profile: HardwareProfile,
                    shadow_scheme: str = "int8",
                    predictor: str = "sep",
-                   faults=None, transport=None) -> ODMoETimings:
+                   faults=None, transport=None,
+                   packed_compute: bool = False) -> ODMoETimings:
     """Replay an engine trace through the Fig. 2 pipeline (see
     ``DecodeClock`` for the event mechanics).  ``faults`` (a
     ``repro.fleet.FaultInjector``; requires ``sched`` to be a
@@ -440,9 +447,11 @@ def simulate_odmoe(cfg: ModelConfig, trace: Trace, sched: GroupSchedule,
     are reset first, so the engine's own run (which consumed the same
     script and killed the same workers) can be replayed directly.
     ``transport`` (PrecisionPolicy / scheme / None) prices every expert
-    load by its packed wire bytes — the codec's modeled speedup."""
+    load by its packed wire bytes — the codec's modeled speedup;
+    ``packed_compute`` additionally prices worker compute at the packed
+    HBM stream (packed-resident slots + in-kernel dequant)."""
     clock = DecodeClock(cfg, sched, profile, shadow_scheme, predictor,
-                        transport=transport)
+                        transport=transport, packed_compute=packed_compute)
     if faults is not None:
         faults.reset()
         sched.state.reset()
@@ -596,7 +605,7 @@ def node_memory_report(engine, kv_pool=None,
     accounting hid the in-flight packed term.  ``budget_bytes`` adds an
     explicit pass/fail against a configured budget."""
     slots = engine.slots
-    slot_bytes = slots.store.expert_bytes * max(slots.capacity)
+    slot_bytes = slots.slot_unit_bytes() * max(slots.capacity)
     transient = slots.transient_packed_bytes()
     kv_bytes = kv_pool.pool_bytes() if kv_pool is not None else 0
     rep = {

@@ -7,14 +7,17 @@ they run compiled.  See DESIGN.md §5 for why these four.
 """
 from .flash_decode import flash_decode, flash_decode_kernel, flash_decode_ref
 from .int8_matmul import int8_matmul, int8_matmul_kernel, int8_matmul_ref
-from .moe_gemm import (combine_topk, grouped_topk_contrib, moe_ffn,
-                       moe_ffn_kernel, moe_ffn_ref)
+from .moe_gemm import (combine_topk, grouped_topk_contrib,
+                       grouped_topk_contrib_packed, moe_ffn,
+                       moe_ffn_kernel, moe_ffn_packed,
+                       moe_ffn_packed_kernel, moe_ffn_ref)
 from .ssd_scan import ssd_scan, ssd_scan_kernel, ssd_scan_ref
 
 __all__ = [
     "flash_decode", "flash_decode_kernel", "flash_decode_ref",
     "int8_matmul", "int8_matmul_kernel", "int8_matmul_ref",
-    "combine_topk", "grouped_topk_contrib",
-    "moe_ffn", "moe_ffn_kernel", "moe_ffn_ref",
+    "combine_topk", "grouped_topk_contrib", "grouped_topk_contrib_packed",
+    "moe_ffn", "moe_ffn_kernel", "moe_ffn_packed",
+    "moe_ffn_packed_kernel", "moe_ffn_ref",
     "ssd_scan", "ssd_scan_kernel", "ssd_scan_ref",
 ]

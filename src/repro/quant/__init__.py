@@ -1,12 +1,14 @@
-from .quantize import (NF4_LEVELS, dequantize, pack_nf4_codes, quantize,
-                       quantize_pytree, shadow_nbytes, shadow_params,
-                       simulate_quantization, unpack_nf4_codes)
+from .quantize import (NF4_LEVELS, dequantize, dequantize_tiles,
+                       pack_nf4_codes, quantize, quantize_pytree,
+                       shadow_nbytes, shadow_params, simulate_quantization,
+                       unpack_nf4_codes)
 from .transport import (SCHEMES, PackedWeight, PrecisionPolicy, TieredPolicy,
-                        TransportCodec, UniformPolicy, get_codec,
-                        resolve_policy, transport_expert_bytes,
-                        transport_params)
+                        TransportCodec, UniformPolicy, device_layout,
+                        get_codec, resolve_policy, tileable,
+                        transport_expert_bytes, transport_params)
 
-__all__ = ["NF4_LEVELS", "dequantize", "pack_nf4_codes", "quantize",
+__all__ = ["NF4_LEVELS", "dequantize", "dequantize_tiles",
+           "device_layout", "tileable", "pack_nf4_codes", "quantize",
            "quantize_pytree", "shadow_nbytes", "shadow_params",
            "simulate_quantization",
            "unpack_nf4_codes",

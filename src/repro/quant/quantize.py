@@ -87,6 +87,42 @@ def unpack_nf4_codes(packed, n_blocks: int):
     return flat.reshape(n_blocks, NF4_BLOCK)
 
 
+# ----------------------------------------- tile-aligned device layout
+def nf4_pair_unpack(codes):
+    """Unpack device-layout nf4 bytes along the LAST axis: ``(..., m)``
+    packed bytes -> ``(..., 2m)`` 4-bit codes, high nibble first — the
+    same bit order as :func:`unpack_nf4_codes`, so the two layouts
+    decode identical code streams.  Works under arbitrary leading batch
+    dims (stacked expert tiles)."""
+    c = jnp.asarray(codes)
+    hi = (c >> 4) & 0xF
+    lo = c & 0xF
+    return jnp.stack([hi, lo], axis=-1).reshape(
+        c.shape[:-1] + (c.shape[-1] * 2,))
+
+
+def dequantize_tiles(scheme: str, parts):
+    """Elementwise dequantization of tile-aligned device-layout parts
+    (see ``repro.quant.transport.device_layout``), with arbitrary
+    leading batch dims (a stacked wave of experts dequantizes in one
+    call).  Per element this is the SAME fp32 arithmetic as the wire-
+    side ``dequantize`` — int8 ``code * scale``, nf4 ``LUT[code] *
+    block_absmax`` — applied to the same (code, scale) pairs, so the
+    result is bit-identical to dequantize-on-arrival; only the array
+    layout the math reads from differs."""
+    if scheme == "fp32":
+        return jnp.asarray(parts[0])
+    if scheme == "fp16":
+        return parts[0].astype(jnp.float32)
+    if scheme == "int8":
+        return parts[0].astype(jnp.float32) * parts[1]
+    if scheme == "nf4":
+        codes = nf4_pair_unpack(parts[0]).astype(jnp.int32)
+        scales = jnp.repeat(jnp.asarray(parts[1]), NF4_BLOCK, axis=-1)
+        return NF4_LEVELS[codes] * scales
+    raise ValueError(f"unknown scheme {scheme!r}")
+
+
 # ------------------------------------------------------------- dispatch
 def quantize(w, scheme: str):
     if scheme == "fp16":

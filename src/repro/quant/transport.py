@@ -9,11 +9,16 @@ serving.  This module is the wire format + policy layer for that idea:
 
   * ``TransportCodec`` — fp32 / fp16 / int8 / nf4 pack->unpack of one
     expert weight matrix, reusing the ``repro.quant`` quantizers.  The
-    packed representation is what moves over the link; workers
-    dequantize on arrival, so device slots (and expert compute) always
-    hold full-width weights.  ``nbytes`` of the packed parts is the
-    exact transport payload — int8 carries per-channel scales, nf4
-    carries bit-packed 4-bit codes plus per-block absmax scales.
+    packed representation is what moves over the link.  In the default
+    mode workers dequantize on arrival (device slots hold full-width
+    weights); in packed-resident mode (``WorkerSlots(...,
+    packed_resident=True)``) the slot keeps the wire format — rearranged
+    by :func:`device_layout` into tile-aligned codes + scales — and the
+    fused Pallas kernel dequantizes in-register immediately before the
+    MXU dots, so slot bytes AND kernel HBM traffic shrink to the wire
+    size.  ``nbytes`` of the packed parts is the exact transport
+    payload — int8 carries per-channel scales, nf4 carries bit-packed
+    4-bit codes plus per-block absmax scales.
   * ``PrecisionPolicy`` — which scheme each (layer, expert) ships at.
     ``UniformPolicy`` is one scheme fleet-wide; ``TieredPolicy`` is the
     HOBBIT rule: experts the router historically picks with low gate
@@ -147,6 +152,55 @@ class TransportCodec:
         # plus one f32 absmax per block
         padded = -(-size // NF4_BLOCK) * NF4_BLOCK
         return padded // 2 + 4 * (padded // NF4_BLOCK)
+
+
+# ------------------------------------------- tile-aligned device layout
+def tileable(scheme: str, shape: Tuple[int, ...]) -> bool:
+    """Whether a weight of ``shape`` admits the tile-aligned device
+    layout at ``scheme`` — the precondition for packed-resident slots
+    and the fused in-kernel-dequant grouped GEMM.
+
+    fp32/fp16 tiles trivially; int8's per-output-channel scale row
+    ``(1, last)`` slices along any last-axis blocking; nf4's absmax
+    blocks run over the FLAT weight in 64-element strides, so they
+    coincide with contiguous 64-column runs of one row (sliceable along
+    the kernel's Fb blocks) exactly when the last axis is a multiple of
+    ``NF4_BLOCK``.  Misaligned shapes keep the dequantize-on-arrival
+    path — a fallback, never an error."""
+    if scheme in ("fp32", "fp16"):
+        return True
+    if len(shape) != 2:
+        return False
+    if scheme == "int8":
+        return True
+    if scheme == "nf4":
+        return shape[-1] % NF4_BLOCK == 0
+    return False
+
+
+def device_layout(pw: PackedWeight) -> Tuple[np.ndarray, ...]:
+    """Rearrange a wire-format shard into the tile-aligned device
+    layout the packed Pallas kernel streams: a pure, lossless reshape
+    of the SAME codes and scales, so dequantizing either layout yields
+    bit-identical weights.
+
+      * fp32/fp16/int8 — already tile-aligned (int8 scales are one
+        ``(1, last)`` row that slices along the same Fb blocks as the
+        weight tiles); returned as-is.
+      * nf4 — flat packed codes ``(n/2,)`` -> ``(d, f/2)`` (two
+        f-adjacent 4-bit codes per byte, high nibble first) and flat
+        block absmax ``(n/64, 1)`` -> ``(d, f/64)``; requires
+        ``tileable`` (last axis % 64 == 0), which makes every absmax
+        block one contiguous 64-column run of one row.
+    """
+    if not tileable(pw.scheme, pw.shape):
+        raise ValueError(f"shape {pw.shape} has no tile-aligned device "
+                         f"layout at {pw.scheme!r}")
+    if pw.scheme != "nf4":
+        return pw.parts
+    d, f = pw.shape
+    return (pw.parts[0].reshape(d, f // 2),
+            pw.parts[1].reshape(d, f // NF4_BLOCK))
 
 
 _CODECS: Dict[str, TransportCodec] = {}

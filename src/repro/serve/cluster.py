@@ -204,6 +204,7 @@ class ClusterRouter:
                                else "int8"),
                 predictor=eng.predictor_kind,
                 transport=getattr(eng, "transport", None),
+                packed_compute=getattr(eng, "packed_slots", False),
                 worker_free=shared_free)
             loop.start([], clock=clock, cache_len=cache_len)
         n_active = (self.min_replicas if self.autoscale

@@ -516,7 +516,8 @@ class ServingLoop:
             eng.cfg, eng.sched, self.profile,
             shadow_scheme=(eng.shadow.scheme if eng.shadow else "int8"),
             predictor=eng.predictor_kind,
-            transport=getattr(eng, "transport", None))
+            transport=getattr(eng, "transport", None),
+            packed_compute=getattr(eng, "packed_slots", False))
         self._trace = Trace()
         self._steps = []
         self._deferred = _AdmissionQueue(self.admit_policy)

@@ -204,6 +204,70 @@ def test_chaos_spec_schedule(seed):
     assert base[3] == chaos[3], f"acceptance diverged: {why}"
 
 
+# -------------------------------------------------- packed-slots chaos
+@functools.lru_cache(maxsize=None)
+def _packed_model():
+    """64-aligned expert width so nf4 takes the tile-aligned packed
+    path (the default tiny_moe's d_expert=96 covers the fallback)."""
+    cfg = tiny_moe(num_layers=3, d_expert=128)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    batch_tokens = np.asarray(
+        jax.random.randint(jax.random.PRNGKey(1), (2, 10), 0,
+                           cfg.vocab_size), np.int32)
+    return cfg, params, batch_tokens
+
+
+@functools.lru_cache(maxsize=None)
+def _packed_reference(scheme):
+    cfg, params, tokens = _packed_model()
+    return np.asarray(greedy_generate(cfg, params, {"tokens": tokens},
+                                      N_TOK, transport=scheme))
+
+
+@pytest.mark.parametrize("scheme", ["int8", "nf4"])
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_chaos_packed_slots(scheme, seed):
+    """ISSUE 10 acceptance gate: packed-resident slots + the fused
+    in-kernel-dequant grouped path stay token-bit-identical to
+    ``greedy_generate(..., transport=policy)`` under chaos schedules
+    and mid-run faults, and match the dequantize-on-arrival engine's
+    event log exactly — only the eviction byte pricing (packed vs full
+    width) may differ."""
+    cfg, params, tokens = _packed_model()
+    rng = random.Random(seed + 2000)
+    residency = rng.choice(RESIDENCIES)
+    faults = random_fault_script(seed + 2000, 8, N_TOK, 3)
+
+    def run(packed, executor=None):
+        eng = ODMoEEngine(cfg, params, n_workers=8, predictor="sep",
+                          transport=scheme, residency=residency,
+                          faults=FaultInjector(faults),
+                          prefetch=executor, packed_slots=packed)
+        try:
+            toks, _ = eng.generate({"tokens": tokens}, N_TOK)
+        finally:
+            eng.close()
+        log = tuple((e.token, e.layer, e.expert, e.worker, e.predicted,
+                     e.bytes, e.scheme) for e in eng.slots.events)
+        return (np.asarray(toks), log, eng.slots.bytes_moved,
+                dict(eng.slots.stats), eng.slots.device_bytes_per_worker())
+
+    why = (f"packed chaos scheme={scheme} seed={seed} "
+           f"residency={residency!r}")
+    sync = run(True)
+    chaos = run(True, ChaosExecutor(seed + 2000, p_run_ahead=0.5,
+                                    p_drop=0.3, p_defer=0.3))
+    base = run(False)
+    ref = _packed_reference(scheme)
+    assert np.array_equal(sync[0], ref), f"sync vs greedy: {why}"
+    assert np.array_equal(chaos[0], ref), f"chaos vs greedy: {why}"
+    assert sync[1] == chaos[1] == base[1], f"event log diverged: {why}"
+    assert sync[2] == chaos[2] == base[2], f"bytes diverged: {why}"
+    assert sync[3] == chaos[3] == base[3], f"stats diverged: {why}"
+    assert sync[4] == chaos[4] < base[4], \
+        f"packed footprint not below fp32-slot baseline: {why}"
+
+
 # --------------------------------------------------- serving-loop chaos
 @pytest.mark.parametrize("seed", [0, 1, 2, 3])
 def test_serving_chaos_schedule(seed):
